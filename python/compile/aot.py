@@ -1,0 +1,90 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/ for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps with ``to_tuple1()``.
+
+Run via ``make artifacts`` (no-op when artifacts are newer than sources):
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (model, shape) plus ``manifest.txt`` with
+lines ``<name> <kind> <q> <bs> <n> <file>`` the Rust runtime indexes.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.model import rka_step_model, rkab_block_model, rkab_round_model  # noqa: E402
+
+# Shape catalogue. VMEM discipline: bs*n <= 2M doubles (16 MB); the rust
+# PJRT solver picks the artifact matching its (q, bs, n) configuration.
+RKA_STEP_SHAPES = [(2, 256), (4, 256), (8, 256), (4, 512), (8, 512), (16, 512), (8, 1000)]
+RKAB_BLOCK_SHAPES = [(64, 256), (256, 256), (128, 512), (512, 512), (500, 500), (1000, 1000)]
+RKAB_ROUND_SHAPES = [(2, 64, 256), (4, 64, 256), (4, 256, 256), (2, 500, 500), (4, 500, 500)]
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def lower_all():
+    """Yield (name, kind, q, bs, n, hlo_text) for the full catalogue."""
+    for q, n in RKA_STEP_SHAPES:
+        lowered = jax.jit(rka_step_model).lower(
+            spec(q, n), spec(q), spec(q), spec(n), spec(1)
+        )
+        yield (f"rka_step_q{q}_n{n}", "rka_step", q, 1, n, to_hlo_text(lowered))
+    for bs, n in RKAB_BLOCK_SHAPES:
+        lowered = jax.jit(rkab_block_model).lower(
+            spec(bs, n), spec(bs), spec(bs), spec(n), spec(1)
+        )
+        yield (f"rkab_block_bs{bs}_n{n}", "rkab_block", 1, bs, n, to_hlo_text(lowered))
+    for q, bs, n in RKAB_ROUND_SHAPES:
+        lowered = jax.jit(rkab_round_model).lower(
+            spec(q, bs, n), spec(q, bs), spec(q, bs), spec(n), spec(1)
+        )
+        yield (f"rkab_round_q{q}_bs{bs}_n{n}", "rkab_round", q, bs, n, to_hlo_text(lowered))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest_lines = []
+    for name, kind, q, bs, n, text in lower_all():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {kind} {q} {bs} {n} {fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest) and the
+direct transcription of the paper's equations:
+
+- ``rka_step_ref``    — eq. (7): one averaged RKA update over the q sampled
+  rows tau_k;
+- ``rkab_block_ref``  — eq. (8): one worker's sequential in-block Kaczmarz
+  sweep;
+- ``rkab_round_ref``  — eqs. (8)+(9): all q workers' sweeps averaged.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rka_step_ref(a_rows, b_rows, inv_norms, x, alpha_over_q):
+    """Eq. (7): x + (alpha/q) * sum_i (b_i - <A_i, x>) / ||A_i||^2 * A_i.
+
+    Args:
+      a_rows:      (q, n) the sampled rows.
+      b_rows:      (q,)   their b entries.
+      inv_norms:   (q,)   1 / ||A^(i)||^2.
+      x:           (n,)   current iterate.
+      alpha_over_q: scalar weight (alpha / q premultiplied), shape (1,).
+    Returns:
+      (n,) next iterate.
+    """
+    residuals = b_rows - a_rows @ x                   # (q,)
+    scales = alpha_over_q[0] * residuals * inv_norms  # (q,)
+    return x + a_rows.T @ scales
+
+
+def rkab_block_ref(a_block, b_block, inv_norms, x, alpha):
+    """Eq. (8): bs sequential Kaczmarz projections on a private iterate v.
+
+    Args:
+      a_block:   (bs, n) the block's rows, in processing order.
+      b_block:   (bs,)   their b entries.
+      inv_norms: (bs,)   1 / ||A^(i)||^2.
+      x:         (n,)    block start iterate (v^(0) = x).
+      alpha:     (1,)    relaxation weight.
+    Returns:
+      (n,) v after the sweep.
+    """
+
+    a_block = jnp.asarray(a_block)
+    b_block = jnp.asarray(b_block)
+    inv_norms = jnp.asarray(inv_norms)
+
+    def body(j, v):
+        row = a_block[j]
+        scale = alpha[0] * (b_block[j] - jnp.dot(row, v)) * inv_norms[j]
+        return v + scale * row
+
+    return jax.lax.fori_loop(0, a_block.shape[0], body, jnp.asarray(x))
+
+
+def rkab_round_ref(a_blocks, b_blocks, inv_norms, x, alpha):
+    """Eqs. (8)+(9): average of q workers' block sweeps.
+
+    Args:
+      a_blocks:  (q, bs, n); b_blocks / inv_norms: (q, bs); x: (n,);
+      alpha: (1,).
+    Returns:
+      (n,) x^(k+1) = (1/q) sum_gamma v_gamma.
+    """
+    sweep = jax.vmap(lambda a, b, w: rkab_block_ref(a, b, w, x, alpha))
+    return jnp.mean(sweep(a_blocks, b_blocks, inv_norms), axis=0)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: one averaged RKA update (paper eq. 7).
+
+The update is two MXU-shaped contractions around an elementwise scale:
+
+    r      = b_tau - A_tau @ x          (q, n) x (n,)  -> (q,)
+    s      = (alpha/q) * r / ||A_i||^2  elementwise    -> (q,)
+    x_next = x + A_tau^T @ s            (n, q) x (q,)  -> (n,)
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): `A_tau` is the only large
+operand; with BlockSpec tiling over n it streams HBM->VMEM once and feeds
+both contractions, while `x`, `b`, and the scales stay VMEM-resident. Under
+`interpret=True` (required on CPU — real TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot run) the grid collapses to one
+program, which is what we AOT-export.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rka_step_kernel(a_ref, b_ref, inv_norms_ref, x_ref, alpha_ref, o_ref):
+    """Body: everything VMEM-resident (q x n blocks are small by design)."""
+    x = x_ref[...]
+    a = a_ref[...]
+    residuals = b_ref[...] - a @ x
+    scales = alpha_ref[0] * residuals * inv_norms_ref[...]
+    o_ref[...] = x + a.T @ scales
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rka_step(a_rows, b_rows, inv_norms, x, alpha_over_q):
+    """Pallas-backed eq. (7) update. Shapes: (q,n), (q,), (q,), (n,), (1,)."""
+    q, n = a_rows.shape
+    assert b_rows.shape == (q,) and inv_norms.shape == (q,)
+    assert x.shape == (n,) and alpha_over_q.shape == (1,)
+    return pl.pallas_call(
+        _rka_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a_rows, b_rows, inv_norms, x, alpha_over_q)
+
+
+def vmem_estimate_bytes(q, n, dtype_bytes=8):
+    """VMEM footprint of one program instance (DESIGN.md §Perf).
+
+    A_tau dominates: (q*n + 2*q + 2*n + 1) * dtype_bytes, plus the (n,)
+    output accumulator.
+    """
+    return (q * n + 2 * q + 3 * n + 1) * dtype_bytes

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: one worker's sequential RKAB block sweep (paper eq. 8).
+
+The sweep is *intrinsically sequential over rows* — projection j uses the
+iterate produced by projection j-1 — so the parallelism lives across workers
+(handled by L2/L3), not inside the block. The kernel therefore keeps the
+whole (bs, n) block plus the running iterate `v` VMEM-resident and walks the
+rows with an in-kernel `fori_loop`:
+
+    v^(0) = x
+    for j in 0..bs:  v += alpha * (b_j - <A_j, v>) / ||A_j||^2 * A_j
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): this is the TPU analogue of
+the paper's per-thread cache-resident submatrix — the block is staged
+HBM->VMEM once (bs*n*8 bytes must fit the ~16 MB VMEM budget; the AOT shapes
+respect bs*n <= 2M doubles), each dot runs on the VPU/MXU, and only `v`
+(n doubles) is live across loop steps. Under `interpret=True` it lowers to
+plain HLO (a while-loop of dot/axpy) the CPU PJRT client executes directly.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rkab_block_kernel(a_ref, b_ref, inv_norms_ref, x_ref, alpha_ref, o_ref):
+    """Body: sequential fori_loop over the block's rows."""
+    a = a_ref[...]
+    b = b_ref[...]
+    inv_norms = inv_norms_ref[...]
+    alpha = alpha_ref[0]
+    bs = a.shape[0]
+
+    def body(j, v):
+        row = a[j]
+        scale = alpha * (b[j] - jnp.dot(row, v)) * inv_norms[j]
+        return v + scale * row
+
+    o_ref[...] = jax.lax.fori_loop(0, bs, body, x_ref[...])
+
+
+def rkab_block(a_block, b_block, inv_norms, x, alpha):
+    """Pallas-backed eq. (8) sweep. Shapes: (bs,n), (bs,), (bs,), (n,), (1,)."""
+    bs, n = a_block.shape
+    assert b_block.shape == (bs,) and inv_norms.shape == (bs,)
+    assert x.shape == (n,) and alpha.shape == (1,)
+    return pl.pallas_call(
+        _rkab_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a_block, b_block, inv_norms, x, alpha)
+
+
+def vmem_estimate_bytes(bs, n, dtype_bytes=8):
+    """VMEM footprint of one program instance (DESIGN.md §Perf)."""
+    return (bs * n + 2 * bs + 3 * n + 1) * dtype_bytes

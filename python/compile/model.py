@@ -1,0 +1,45 @@
+"""L2: the paper's update graphs as JAX functions calling the L1 kernels.
+
+Three exported computations, all AOT-lowered to HLO text by ``aot.py``:
+
+- ``rka_step_model``   — eq. (7), one RKA iteration given the q sampled rows;
+- ``rkab_block_model`` — eq. (8), one worker's in-block sweep;
+- ``rkab_round_model`` — eqs. (8)+(9), a full RKAB iteration: vmap of the
+  block-sweep kernel over the q workers' blocks, then the eq. (9) average.
+
+The Rust coordinator (L3) owns row *sampling* and the outer iteration loop —
+randomness stays out of the compiled graphs so one artifact serves every
+seed. Doubles (f64) throughout to match the Rust solvers bit-for-bit modulo
+reassociation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.rka_step import rka_step
+from compile.kernels.rkab_block import rkab_block
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rka_step_model(a_rows, b_rows, inv_norms, x, alpha_over_q):
+    """One RKA iteration (eq. 7). Returns a 1-tuple for the AOT contract."""
+    return (rka_step(a_rows, b_rows, inv_norms, x, alpha_over_q),)
+
+
+def rkab_block_model(a_block, b_block, inv_norms, x, alpha):
+    """One worker's RKAB block sweep (eq. 8)."""
+    return (rkab_block(a_block, b_block, inv_norms, x, alpha),)
+
+
+def rkab_round_model(a_blocks, b_blocks, inv_norms, x, alpha):
+    """One full RKAB iteration (eqs. 8+9).
+
+    Args:
+      a_blocks: (q, bs, n); b_blocks, inv_norms: (q, bs); x: (n,); alpha: (1,).
+    Returns:
+      1-tuple of (n,): the averaged next iterate.
+    """
+    sweep = jax.vmap(lambda a, b, w: rkab_block(a, b, w, x, alpha))
+    v = sweep(a_blocks, b_blocks, inv_norms)  # (q, n)
+    return (jnp.mean(v, axis=0),)

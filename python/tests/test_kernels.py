@@ -1,0 +1,139 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis-style sweeps over shapes, dtypes, and seeds (hypothesis itself is
+not installed in this image, so the sweep is an explicit parameter grid +
+seeded random data — same coverage, deterministic).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import rka_step_ref, rkab_block_ref, rkab_round_ref
+from compile.kernels.rka_step import rka_step, vmem_estimate_bytes as rka_vmem
+from compile.kernels.rkab_block import rkab_block, vmem_estimate_bytes as rkab_vmem
+from compile.model import rka_step_model, rkab_block_model, rkab_round_model
+
+SEEDS = [0, 1, 2]
+VMEM_BUDGET = 16 * 1024 * 1024  # 16 MB VMEM per TPU core
+
+
+def make_case(rng, q, bs, n, dtype):
+    a = jnp.asarray(rng.normal(size=(q, bs, n)), dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(q, bs)), dtype=dtype)
+    inv_norms = (1.0 / (a.astype(jnp.float64) ** 2).sum(-1)).astype(dtype)
+    x = jnp.asarray(rng.normal(size=n), dtype=dtype)
+    alpha = jnp.asarray([1.0], dtype=dtype)
+    return a, b, inv_norms, x, alpha
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("q,n", [(1, 8), (2, 16), (4, 64), (8, 128), (16, 32)])
+def test_rka_step_matches_ref(seed, q, n):
+    rng = np.random.default_rng(seed)
+    a, b, w, x, alpha = make_case(rng, q, 1, n, jnp.float64)
+    got = rka_step(a[:, 0, :], b[:, 0], w[:, 0], x, alpha)
+    want = rka_step_ref(a[:, 0, :], b[:, 0], w[:, 0], x, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("bs,n", [(1, 8), (4, 16), (32, 64), (128, 32), (64, 256)])
+def test_rkab_block_matches_ref(seed, bs, n):
+    rng = np.random.default_rng(10 + seed)
+    a, b, w, x, alpha = make_case(rng, 1, bs, n, jnp.float64)
+    got = rkab_block(a[0], b[0], w[0], x, alpha)
+    want = rkab_block_ref(a[0], b[0], w[0], x, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-4), (jnp.float64, 1e-10)])
+def test_rkab_block_dtypes(dtype, rtol):
+    rng = np.random.default_rng(5)
+    a, b, w, x, alpha = make_case(rng, 1, 16, 32, dtype)
+    got = rkab_block(a[0], b[0], w[0], x, alpha)
+    want = rkab_block_ref(
+        a[0].astype(jnp.float64),
+        b[0].astype(jnp.float64),
+        w[0].astype(jnp.float64),
+        x.astype(jnp.float64),
+        alpha.astype(jnp.float64),
+    )
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float64), want, rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("q,bs,n", [(2, 4, 16), (4, 16, 32), (3, 8, 24)])
+def test_rkab_round_model_matches_ref(seed, q, bs, n):
+    rng = np.random.default_rng(20 + seed)
+    a, b, w, x, alpha = make_case(rng, q, bs, n, jnp.float64)
+    (got,) = rkab_round_model(a, b, w, x, alpha)
+    want = rkab_round_ref(a, b, w, x, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_alpha_scaling_linearity():
+    # rka_step is affine in alpha: step(2a) - x == 2*(step(a) - x).
+    rng = np.random.default_rng(3)
+    a, b, w, x, _ = make_case(rng, 4, 1, 32, jnp.float64)
+    a2 = a[:, 0, :]
+    s1 = rka_step(a2, b[:, 0], w[:, 0], x, jnp.asarray([1.0]))
+    s2 = rka_step(a2, b[:, 0], w[:, 0], x, jnp.asarray([2.0]))
+    np.testing.assert_allclose(s2 - x, 2.0 * (s1 - x), rtol=1e-12)
+
+
+def test_block_sweep_reaches_hyperplanes():
+    # After sweeping row j with alpha=1, row j's equation holds exactly at
+    # that point of the sweep; for an orthogonal block the final v satisfies
+    # *all* equations.
+    n = 8
+    a = jnp.eye(n, dtype=jnp.float64)
+    x_true = jnp.arange(1.0, n + 1)
+    b = a @ x_true
+    w = jnp.ones(n, dtype=jnp.float64)
+    v = rkab_block(a, b, w, jnp.zeros(n, dtype=jnp.float64), jnp.asarray([1.0]))
+    np.testing.assert_allclose(v, x_true, rtol=1e-12)
+
+
+def test_rkab_round_is_mean_of_blocks():
+    rng = np.random.default_rng(7)
+    q, bs, n = 3, 8, 16
+    a, b, w, x, alpha = make_case(rng, q, bs, n, jnp.float64)
+    (round_out,) = rkab_round_model(a, b, w, x, alpha)
+    blocks = jnp.stack([rkab_block(a[t], b[t], w[t], x, alpha) for t in range(q)])
+    np.testing.assert_allclose(round_out, blocks.mean(0), rtol=1e-12)
+
+
+def test_convergence_property_random_system():
+    # Iterating the round model on a consistent system converges to x_true.
+    rng = np.random.default_rng(11)
+    m, n, q, bs = 400, 16, 4, 16
+    A = jnp.asarray(rng.normal(size=(m, n)))
+    x_true = jnp.asarray(rng.normal(size=n))
+    b_full = A @ x_true
+    inv_norms_full = 1.0 / (A**2).sum(-1)
+    x = jnp.zeros(n)
+    alpha = jnp.asarray([1.0])
+    for k in range(60):
+        rows = rng.integers(0, m, size=(q, bs))
+        (x,) = rkab_round_model(A[rows], b_full[rows], inv_norms_full[rows], x, alpha)
+    err = float(jnp.linalg.norm(x - x_true) / jnp.linalg.norm(x_true))
+    assert err < 1e-6, err
+
+
+def test_vmem_estimates_within_budget():
+    # Every AOT-exported shape must fit the TPU VMEM budget (DESIGN §Perf).
+    from compile.aot import RKA_STEP_SHAPES, RKAB_BLOCK_SHAPES, RKAB_ROUND_SHAPES
+
+    for q, n in RKA_STEP_SHAPES:
+        assert rka_vmem(q, n) < VMEM_BUDGET
+    for bs, n in RKAB_BLOCK_SHAPES:
+        assert rkab_vmem(bs, n) < VMEM_BUDGET
+    for q, bs, n in RKAB_ROUND_SHAPES:
+        # vmapped kernel: one block instance per program.
+        assert rkab_vmem(bs, n) < VMEM_BUDGET

@@ -1,0 +1,19 @@
+//! Bench: the ablation studies (averaging strategies, sampling
+//! distribution, auto block-size tuner). See coordinator::experiments::ablations.
+
+use kaczmarz::coordinator::{find, Scale};
+use kaczmarz::metrics::Stopwatch;
+
+fn main() {
+    let factor: f64 = std::env::var("KACZMARZ_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let seeds: u32 = std::env::var("KACZMARZ_BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let scale = Scale { factor, seeds };
+    for id in ["ablation-averaging", "ablation-sampling", "ablation-autotune"] {
+        let exp = find(id).expect("registered experiment");
+        let sw = Stopwatch::start();
+        let report = exp.run(scale);
+        println!("{}", report.to_markdown());
+        let _ = report.write(std::path::Path::new("results"), id);
+        eprintln!("[bench] {id} finished in {:.1} s", sw.seconds());
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerates the paper's fig4 fig5 via the coordinator driver(s).
+//! Scale with KACZMARZ_BENCH_SCALE (default 1.0) / KACZMARZ_BENCH_SEEDS (3).
+
+use kaczmarz::coordinator::{find, Scale};
+use kaczmarz::metrics::Stopwatch;
+
+fn main() {
+    let factor: f64 = std::env::var("KACZMARZ_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let seeds: u32 = std::env::var("KACZMARZ_BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let scale = Scale { factor, seeds };
+    for id in ["fig4", "fig5", ] {
+        let exp = find(id).expect("registered experiment");
+        let sw = Stopwatch::start();
+        let report = exp.run(scale);
+        println!("{}", report.to_markdown());
+        let out = std::path::PathBuf::from("results");
+        let _ = report.write(&out, id);
+        eprintln!("[bench] {id} finished in {:.1} s (scale {factor}, seeds {seeds})", sw.seconds());
+    }
+}

@@ -1,0 +1,165 @@
+//! Micro-benchmarks of the L3 hot paths feeding the cost model and the
+//! §Perf pass: dot/axpy (the per-iteration projection), row sampling
+//! (alias vs CDF), gather-add, atomic CAS-add, memcpy, and barrier
+//! crossings. Prints ns/op and effective GB/s.
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::linalg::vector::{axpy, dot};
+use kaczmarz::metrics::Stopwatch;
+use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
+use kaczmarz::report::Table;
+use kaczmarz::rng::{AliasTable, DiscreteDistribution, Mt19937};
+use kaczmarz::solvers::{SolveOptions, Solver};
+use std::sync::Arc;
+
+fn bench<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    sw.seconds() / iters as f64
+}
+
+fn main() {
+    let mut t = Table::new(
+        "L3 hot-path micro-benchmarks",
+        &["operation", "n", "ns/op", "GB/s (eff)"],
+    );
+
+    let mut rng = Mt19937::new(1);
+    for n in [50usize, 200, 1000, 4000, 10000] {
+        let a: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut y = vec![0.0f64; n];
+        let iters = (50_000_000 / n).max(100);
+
+        let td = bench(
+            || {
+                std::hint::black_box(dot(std::hint::black_box(&a), std::hint::black_box(&b)));
+            },
+            iters,
+        );
+        t.row(vec![
+            "dot".into(),
+            n.to_string(),
+            format!("{:.1}", td * 1e9),
+            format!("{:.1}", 16.0 * n as f64 / td / 1e9),
+        ]);
+
+        let ta = bench(
+            || {
+                axpy(1.0001, std::hint::black_box(&a), std::hint::black_box(&mut y));
+            },
+            iters,
+        );
+        t.row(vec![
+            "axpy".into(),
+            n.to_string(),
+            format!("{:.1}", ta * 1e9),
+            format!("{:.1}", 24.0 * n as f64 / ta / 1e9),
+        ]);
+    }
+
+    // Full projection on a real system (what CostModel::t_proj measures).
+    let sys = DatasetBuilder::new(4000, 1000).seed(3).consistent();
+    let r = kaczmarz::solvers::rk::RkSolver::new(1)
+        .solve(&sys, &SolveOptions::default().with_fixed_iterations(20_000));
+    t.row(vec![
+        "RK projection (4000x1000 system)".into(),
+        "1000".into(),
+        format!("{:.1}", r.seconds / r.iterations as f64 * 1e9),
+        format!("{:.1}", 16_000.0 / (r.seconds / r.iterations as f64) / 1e9),
+    ]);
+
+    // Row sampling: alias vs CDF binary search.
+    let weights = sys.sampling_weights();
+    let alias = AliasTable::new(weights);
+    let cdf = DiscreteDistribution::new(weights);
+    let mut rng2 = Mt19937::new(9);
+    let ts = bench(|| {
+        std::hint::black_box(alias.sample(&mut rng2));
+    }, 2_000_000);
+    t.row(vec!["sample (alias)".into(), "m=4000".into(), format!("{:.1}", ts * 1e9), "-".into()]);
+    let ts = bench(|| {
+        std::hint::black_box(cdf.sample(&mut rng2));
+    }, 2_000_000);
+    t.row(vec!["sample (cdf bsearch)".into(), "m=4000".into(), format!("{:.1}", ts * 1e9), "-".into()]);
+
+    // Gather primitives at n = 1000.
+    let n = 1000;
+    let src: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    let mut dst = vec![0.0f64; n];
+    let tg = bench(
+        || {
+            for i in 0..n {
+                dst[i] += src[i];
+            }
+            std::hint::black_box(&mut dst);
+        },
+        50_000,
+    );
+    t.row(vec![
+        "gather add (critical body)".into(),
+        n.to_string(),
+        format!("{:.1}", tg * 1e9),
+        format!("{:.1}", 24.0 * n as f64 / tg / 1e9),
+    ]);
+    let av = AtomicF64Vec::zeros(n);
+    let tat = bench(
+        || {
+            for i in 0..n {
+                av.add(i, 1.0);
+            }
+        },
+        20_000,
+    );
+    t.row(vec![
+        "atomic CAS add".into(),
+        n.to_string(),
+        format!("{:.1}", tat * 1e9),
+        format!("{:.1}", 24.0 * n as f64 / tat / 1e9),
+    ]);
+    let tc = bench(
+        || {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&mut dst);
+        },
+        100_000,
+    );
+    t.row(vec![
+        "memcpy".into(),
+        n.to_string(),
+        format!("{:.1}", tc * 1e9),
+        format!("{:.1}", 16.0 * n as f64 / tc / 1e9),
+    ]);
+
+    // Barrier crossing (measured; note: 1-core container oversubscribes).
+    for q in [2usize, 4] {
+        let barrier = Arc::new(SpinBarrier::new(q));
+        let rounds = 20_000usize;
+        let sw = Stopwatch::start();
+        std::thread::scope(|scope| {
+            for _ in 0..q {
+                let b = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    for _ in 0..rounds {
+                        b.wait();
+                    }
+                });
+            }
+        });
+        t.row(vec![
+            format!("spin barrier crossing (q={q})"),
+            "-".into(),
+            format!("{:.1}", sw.seconds() / rounds as f64 * 1e9),
+            "-".into(),
+        ]);
+    }
+
+    println!("{}", t.to_markdown());
+    println!("{}", t.to_text());
+}

@@ -1,0 +1,92 @@
+//! Bench: PJRT execution overhead of the AOT Pallas kernels vs the native
+//! Rust implementation of the same update — quantifies the L3<->RT boundary
+//! cost (literal marshalling + PJRT dispatch + interpret-mode kernel).
+//!
+//! Requires `make artifacts`.
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::metrics::Stopwatch;
+use kaczmarz::report::Table;
+use kaczmarz::runtime::{ArtifactKind, PjrtEngine};
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP bench_runtime_pjrt: run `make artifacts` first");
+        return;
+    }
+    let mut engine = PjrtEngine::new(&dir).expect("engine");
+    println!("platform: {}", engine.platform());
+
+    let mut t = Table::new(
+        "PJRT rkab_round step vs native (per call)",
+        &["q", "bs", "n", "pjrt/call", "native/call", "overhead"],
+    );
+
+    for (q, bs, n) in [(2usize, 64usize, 256usize), (4, 64, 256), (4, 256, 256)] {
+        let entry = match engine.find(ArtifactKind::RkabRound, q, bs, n) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        let sys = DatasetBuilder::new(2000, n).seed(1).consistent();
+
+        // Build inputs once.
+        let mut a_blocks = vec![0.0; q * bs * n];
+        let mut b_blocks = vec![0.0; q * bs];
+        let mut inv_norms = vec![0.0; q * bs];
+        for t_ in 0..q {
+            for j in 0..bs {
+                let i = (t_ * bs + j) % sys.rows();
+                a_blocks[(t_ * bs + j) * n..(t_ * bs + j + 1) * n]
+                    .copy_from_slice(sys.a.row(i));
+                b_blocks[t_ * bs + j] = sys.b[i];
+                inv_norms[t_ * bs + j] = 1.0 / sys.row_norms_sq[i];
+            }
+        }
+        let x = vec![0.0f64; n];
+        let mk_inputs = || {
+            [
+                PjrtEngine::literal(&a_blocks, &[q as i64, bs as i64, n as i64]).unwrap(),
+                PjrtEngine::literal(&b_blocks, &[q as i64, bs as i64]).unwrap(),
+                PjrtEngine::literal(&inv_norms, &[q as i64, bs as i64]).unwrap(),
+                PjrtEngine::literal(&x, &[n as i64]).unwrap(),
+                PjrtEngine::literal(&[1.0], &[1]).unwrap(),
+            ]
+        };
+        engine.prepare(&entry.name).unwrap();
+        // Warmup + measure.
+        for _ in 0..3 {
+            engine.run(&entry.name, &mk_inputs()).unwrap();
+        }
+        let calls = 20;
+        let sw = Stopwatch::start();
+        for _ in 0..calls {
+            engine.run(&entry.name, &mk_inputs()).unwrap();
+        }
+        let pjrt_per_call = sw.seconds() / calls as f64;
+
+        // Native equivalent: one RKAB iteration (q workers x bs rows).
+        let native = RkabSolver::new(1, q, bs, 1.0)
+            .solve(&sys, &SolveOptions::default().with_fixed_iterations(200));
+        let native_per_call = native.seconds / native.iterations as f64;
+
+        t.row(vec![
+            q.to_string(),
+            bs.to_string(),
+            n.to_string(),
+            format!("{:.2} ms", pjrt_per_call * 1e3),
+            format!("{:.2} ms", native_per_call * 1e3),
+            format!("{:.1}x", pjrt_per_call / native_per_call),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("{}", t.to_text());
+    println!(
+        "note: the PJRT path runs the Pallas kernel under interpret=True on CPU \
+         (DESIGN.md §Hardware-Adaptation) — the overhead column quantifies \
+         marshalling + dispatch + interpret cost, not TPU performance."
+    );
+}

@@ -1,0 +1,105 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline environment).
+//!
+//! Grammar: `kaczmarz <command> [positional...] [--flag value | --switch]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: String,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` and `--switch` (value "true") flags.
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let value = match iter.peek() {
+                    Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(key.to_string(), value);
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed flag with default; panics with a clear message on parse errors.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {v}: cannot parse ({e:?})")),
+        }
+    }
+
+    /// Boolean switch (present => true).
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_positionals() {
+        let a = parse("experiment fig4 extra");
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig4", "extra"]);
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse("solve --rows 100 --verbose --method rkab");
+        assert_eq!(a.get("rows", "0"), "100");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("method", "rk"), "rkab");
+        assert_eq!(a.get_parse::<usize>("rows", 0), 100);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("solve");
+        assert_eq!(a.get_parse::<f64>("alpha", 1.0), 1.0);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_typed_flag_panics() {
+        let a = parse("solve --rows abc");
+        let _ = a.get_parse::<usize>("rows", 0);
+    }
+}

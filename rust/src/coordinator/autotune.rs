@@ -1,0 +1,155 @@
+//! Automatic block-size selection for RKAB — the paper's explicit
+//! future-work item (§3.4.3: "Further investigation into this topic is
+//! necessary to find a systematic way to choose block size").
+//!
+//! The tuner probes candidate block sizes with a *fixed row budget* (so
+//! every probe does the same amount of raw work), scores each candidate by
+//! error-decay per modeled second
+//!
+//! ```text
+//! score(bs) = ln(err_0 / err_bs) / (iterations * T_iter(q, bs))
+//! ```
+//!
+//! and returns the argmax. The probe honors both effects the paper
+//! identified: larger bs amortizes the gather (numerator grows per second)
+//! but wastes rows past bs ≈ n (numerator stalls), and under partitioned
+//! sampling the per-worker information limit (m/q rows) caps useful bs.
+
+use super::timing::CostModel;
+use crate::data::LinearSystem;
+use crate::solvers::rkab::RkabSolver;
+use crate::solvers::sampling::SamplingScheme;
+use crate::solvers::{SolveOptions, Solver};
+
+/// One probe outcome.
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    /// Candidate block size.
+    pub block_size: usize,
+    /// Probe iterations run (row_budget / (q*bs)).
+    pub iterations: usize,
+    /// Squared error after the probe.
+    pub err_sq: f64,
+    /// Modeled wall time of the probe.
+    pub modeled_seconds: f64,
+    /// Error-decay rate per modeled second (higher = better).
+    pub score: f64,
+}
+
+/// Tuner configuration.
+#[derive(Clone, Debug)]
+pub struct AutotuneConfig {
+    /// Worker count the solve will use.
+    pub q: usize,
+    /// Relaxation weight.
+    pub alpha: f64,
+    /// Sampling scheme.
+    pub scheme: SamplingScheme,
+    /// Rows each probe may consume in total (default 24 * n * q).
+    pub row_budget: Option<usize>,
+    /// Candidate block sizes (default {n/10, n/4, n/2, n, 2n} clamped).
+    pub candidates: Option<Vec<usize>>,
+    /// RNG seed for the probes.
+    pub seed: u32,
+}
+
+impl AutotuneConfig {
+    /// Default tuner for `q` workers.
+    pub fn new(q: usize) -> Self {
+        AutotuneConfig {
+            q,
+            alpha: 1.0,
+            scheme: SamplingScheme::FullMatrix,
+            row_budget: None,
+            candidates: None,
+            seed: 0xA070,
+        }
+    }
+}
+
+/// Probe all candidates and return (best block size, all probe results).
+pub fn autotune_block_size(
+    system: &LinearSystem,
+    model: &CostModel,
+    cfg: &AutotuneConfig,
+) -> (usize, Vec<ProbeResult>) {
+    let n = system.cols();
+    let q = cfg.q;
+    let budget = cfg.row_budget.unwrap_or(24 * n * q);
+    let candidates = cfg.candidates.clone().unwrap_or_else(|| {
+        let mut c: Vec<usize> = [n / 10, n / 4, n / 2, n, 2 * n]
+            .into_iter()
+            .map(|b| b.max(1))
+            .collect();
+        c.dedup();
+        c
+    });
+
+    let mut results = Vec::with_capacity(candidates.len());
+    let err0 = system.error_sq(&vec![0.0; n]).max(1e-300);
+    for &bs in &candidates {
+        let iterations = (budget / (q * bs)).max(1);
+        let opts = SolveOptions::default().with_fixed_iterations(iterations);
+        let r = RkabSolver::new(cfg.seed, q, bs, cfg.alpha)
+            .with_scheme(cfg.scheme)
+            .solve(system, &opts);
+        let err_sq = system.error_sq(&r.x).max(1e-300);
+        let modeled_seconds = iterations as f64 * model.rkab_iteration(q, bs);
+        // ln of the *norm* ratio = 0.5 ln of the squared ratio.
+        let decay = 0.5 * (err0 / err_sq).ln();
+        let score = if decay > 0.0 { decay / modeled_seconds } else { f64::NEG_INFINITY };
+        results.push(ProbeResult { block_size: bs, iterations, err_sq, modeled_seconds, score });
+    }
+    let best = results
+        .iter()
+        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+        .map(|r| r.block_size)
+        .unwrap_or(n);
+    (best, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+
+    #[test]
+    fn tuner_prefers_blocks_near_n_for_full_sampling() {
+        // The paper's rule of thumb: bs ≈ n minimizes time. The tuner must
+        // land within [n/4, 2n] (exact argmax depends on the calibrated
+        // constants; the point is it avoids tiny and huge blocks).
+        let sys = DatasetBuilder::new(2000, 100).seed(1).consistent();
+        let model = CostModel::calibrate(&sys);
+        let (best, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(4));
+        assert!(results.len() >= 4);
+        assert!(
+            best >= 25 && best <= 200,
+            "tuner picked bs={best}, probes: {:?}",
+            results.iter().map(|r| (r.block_size, r.score)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tuner_scores_tiny_blocks_worse() {
+        let sys = DatasetBuilder::new(2000, 100).seed(2).consistent();
+        let model = CostModel::calibrate(&sys);
+        let (_, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(8));
+        let score_of = |bs: usize| {
+            results.iter().find(|r| r.block_size == bs).map(|r| r.score).unwrap()
+        };
+        // bs = n/10 pays the gather every 10 rows: strictly worse than bs = n.
+        assert!(score_of(10) < score_of(100), "{results:?}");
+    }
+
+    #[test]
+    fn probe_respects_budget() {
+        let sys = DatasetBuilder::new(500, 50).seed(3).consistent();
+        let model = CostModel::calibrate(&sys);
+        let cfg = AutotuneConfig { row_budget: Some(4000), ..AutotuneConfig::new(2) };
+        let (_, results) = autotune_block_size(&sys, &model, &cfg);
+        for r in &results {
+            let rows = r.iterations * 2 * r.block_size;
+            assert!(rows <= 4000 + 2 * r.block_size, "bs {} used {rows}", r.block_size);
+        }
+    }
+}

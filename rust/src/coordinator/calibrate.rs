@@ -1,0 +1,99 @@
+//! The paper's §3.1 measurement protocol.
+//!
+//! "First, we determine the number of iterations, k, that parallel
+//! implementations take to achieve a given error; then we measure the
+//! runtime using that previously calculated value as the maximum number of
+//! iterations." Runs are repeated over seeds (the paper uses 10; enough for
+//! ~1% time deviation) and iteration counts averaged.
+
+use crate::data::LinearSystem;
+use crate::metrics::mean_std;
+use crate::solvers::{SolveOptions, SolveResult, Solver};
+
+/// Result of an iteration-count calibration.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Mean iterations to reach the tolerance.
+    pub mean_iterations: f64,
+    /// Std-dev across seeds.
+    pub std_iterations: f64,
+    /// Fraction of seeds that converged (divergers excluded from the mean).
+    pub converged_fraction: f64,
+    /// Mean total rows used.
+    pub mean_rows_used: f64,
+}
+
+impl Calibration {
+    /// Mean iterations rounded for use as a fixed budget.
+    pub fn iterations(&self) -> usize {
+        self.mean_iterations.round() as usize
+    }
+}
+
+/// Run `make_solver(seed)` for `seeds` seeds to the `opts` tolerance and
+/// average the iteration counts.
+pub fn calibrate_iterations<S: Solver>(
+    make_solver: impl Fn(u32) -> S,
+    system: &LinearSystem,
+    opts: &SolveOptions,
+    seeds: u32,
+) -> Calibration {
+    assert!(seeds >= 1);
+    let mut iters = Vec::with_capacity(seeds as usize);
+    let mut rows = Vec::with_capacity(seeds as usize);
+    let mut converged = 0u32;
+    for seed in 0..seeds {
+        let r: SolveResult = make_solver(seed).solve(system, opts);
+        if r.converged {
+            converged += 1;
+            iters.push(r.iterations as f64);
+            rows.push(r.rows_used as f64);
+        }
+    }
+    let (mean_iterations, std_iterations) = mean_std(&iters);
+    let (mean_rows_used, _) = mean_std(&rows);
+    Calibration {
+        mean_iterations,
+        std_iterations,
+        converged_fraction: converged as f64 / seeds as f64,
+        mean_rows_used,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rk::RkSolver;
+    use crate::solvers::rkab::RkabSolver;
+
+    #[test]
+    fn calibration_averages_over_seeds() {
+        let sys = DatasetBuilder::new(300, 15).seed(1).consistent();
+        let c = calibrate_iterations(
+            RkSolver::new,
+            &sys,
+            &SolveOptions::default(),
+            4,
+        );
+        assert_eq!(c.converged_fraction, 1.0);
+        assert!(c.mean_iterations > 100.0);
+        assert!(c.iterations() > 0);
+        // seeds differ => nonzero spread (almost surely)
+        assert!(c.std_iterations > 0.0);
+    }
+
+    #[test]
+    fn divergers_excluded() {
+        let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
+        let opts = SolveOptions {
+            divergence_factor: 1e4,
+            max_iterations: 50_000,
+            ..Default::default()
+        };
+        // alpha=3.9 with large blocks diverges (Fig. 10b behaviour).
+        let c = calibrate_iterations(|s| RkabSolver::new(s, 4, 100, 3.9), &sys, &opts, 3);
+        assert_eq!(c.converged_fraction, 0.0);
+        assert_eq!(c.mean_iterations, 0.0);
+    }
+}

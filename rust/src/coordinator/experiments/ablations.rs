@@ -1,0 +1,206 @@
+//! Ablations beyond the paper's figures — design choices §3.3.1 discusses in
+//! prose but never plots:
+//!
+//! - [`AblationAveraging`] — the four result-gathering strategies of
+//!   Algorithm 1 (critical / atomic / reduce / gather-matrix): identical
+//!   semantics (verified), different gather cost;
+//! - [`AblationSampling`] — alias-table vs CDF-binary-search row sampling on
+//!   the *sequential* RK hot loop (this one is honest wall-clock: it is
+//!   single-threaded, so the 1-core container measures it directly);
+//! - [`AblationAutotune`] — the automatic block-size tuner (our extension of
+//!   the paper's future work) vs the bs = n rule of thumb.
+
+use crate::coordinator::autotune::{autotune_block_size, AutotuneConfig};
+use crate::coordinator::{calibrate_iterations, CostModel, Experiment, Scale};
+use crate::data::DatasetBuilder;
+use crate::metrics::Stopwatch;
+use crate::parallel::AveragingStrategy;
+use crate::report::{fmt_seconds, Report, Table};
+use crate::rng::{AliasTable, DiscreteDistribution, Mt19937};
+use crate::solvers::rkab::RkabSolver;
+use crate::solvers::{SolveOptions, Solver};
+
+/// Averaging-strategy ablation (Algorithm 1's four gathers).
+pub struct AblationAveraging;
+
+impl Experiment for AblationAveraging {
+    fn id(&self) -> &'static str {
+        "ablation-averaging"
+    }
+
+    fn title(&self) -> &'static str {
+        "Ablation: RKA averaging strategies (critical/atomic/reduce/matrix)"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let m = scale.dim(4_000);
+        let n = scale.dim(1_000);
+        let sys = DatasetBuilder::new(m, n).seed(81).consistent();
+        let model = CostModel::calibrate(&sys);
+
+        let mut t = Table::new(
+            format!("Modeled per-iteration gather cost, n = {n}"),
+            &["q", "critical", "atomic", "reduce", "matrix"],
+        );
+        for q in [2usize, 4, 8, 16, 64] {
+            t.row(vec![
+                q.to_string(),
+                fmt_seconds(model.rka_iteration(q, AveragingStrategy::Critical)),
+                fmt_seconds(model.rka_iteration(q, AveragingStrategy::Atomic)),
+                fmt_seconds(model.rka_iteration(q, AveragingStrategy::Reduce)),
+                fmt_seconds(model.rka_iteration(q, AveragingStrategy::MatrixGather)),
+            ]);
+        }
+        report.table(&t);
+        report.text(
+            "**Shape check (paper §3.3.1 prose):** the critical section is the \
+             fastest gather at every thread count; atomics pay CAS+invalidation \
+             traffic, reduce pays the zero+combine, the gather matrix pays \
+             cross-thread cache lines. All four converge identically \
+             (rust/tests/parallel_integration.rs).\n",
+        );
+        report
+    }
+}
+
+/// Sampling-distribution ablation (alias vs CDF) — measured wall-clock.
+pub struct AblationSampling;
+
+impl Experiment for AblationSampling {
+    fn id(&self) -> &'static str {
+        "ablation-sampling"
+    }
+
+    fn title(&self) -> &'static str {
+        "Ablation: alias-table vs CDF binary-search row sampling"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let mut t = Table::new(
+            "Sampling cost (measured) and share of an RK iteration",
+            &["m", "alias ns/draw", "cdf ns/draw", "proj ns", "alias share", "cdf share"],
+        );
+        for m0 in [4_000usize, 40_000, 160_000] {
+            let m = scale.dim(m0);
+            let n = scale.dim(250);
+            let sys = DatasetBuilder::new(m, n).seed(83).consistent();
+            let alias = AliasTable::new(sys.sampling_weights());
+            let cdf = DiscreteDistribution::new(sys.sampling_weights());
+            let mut rng = Mt19937::new(1);
+            let draws = 2_000_000usize;
+            let sw = Stopwatch::start();
+            let mut acc = 0usize;
+            for _ in 0..draws {
+                acc += alias.sample(&mut rng);
+            }
+            let t_alias = sw.seconds() / draws as f64;
+            let sw = Stopwatch::start();
+            for _ in 0..draws {
+                acc += cdf.sample(&mut rng);
+            }
+            let t_cdf = sw.seconds() / draws as f64;
+            std::hint::black_box(acc);
+            let model = CostModel::calibrate(&sys);
+            t.row(vec![
+                m.to_string(),
+                format!("{:.1}", t_alias * 1e9),
+                format!("{:.1}", t_cdf * 1e9),
+                format!("{:.1}", model.t_proj * 1e9),
+                format!("{:.1}%", 100.0 * t_alias / (model.t_proj + t_alias)),
+                format!("{:.1}%", 100.0 * t_cdf / (model.t_proj + t_cdf)),
+            ]);
+        }
+        report.table(&t);
+        report.text(
+            "**Shape check:** O(1) alias sampling is flat in m while the CDF \
+             binary search grows with log m; on narrow systems the sampler is a \
+             visible share of the iteration, which is why the solvers adopted \
+             the alias table in the §Perf pass.\n",
+        );
+        report
+    }
+}
+
+/// Auto block-size tuner vs the bs = n rule (our future-work extension).
+pub struct AblationAutotune;
+
+impl Experiment for AblationAutotune {
+    fn id(&self) -> &'static str {
+        "ablation-autotune"
+    }
+
+    fn title(&self) -> &'static str {
+        "Ablation: automatic RKAB block-size tuner vs bs = n"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let m = scale.dim(8_000);
+        let n = scale.dim(500);
+        let q = 4usize;
+        let sys = DatasetBuilder::new(m, n).seed(85).consistent();
+        let model = CostModel::calibrate(&sys);
+
+        let sw = Stopwatch::start();
+        let (best, probes) = autotune_block_size(&sys, &model, &AutotuneConfig::new(q));
+        let tune_cost = sw.seconds();
+
+        let mut t = Table::new(
+            format!("Tuner probes ({m} x {n}, q = {q}; probe cost {} wall)", fmt_seconds(tune_cost)),
+            &["bs", "probe iters", "err^2 after probe", "modeled time", "score (decay/s)"],
+        );
+        for p in &probes {
+            t.row(vec![
+                p.block_size.to_string(),
+                p.iterations.to_string(),
+                format!("{:.2e}", p.err_sq),
+                fmt_seconds(p.modeled_seconds),
+                format!("{:.1}", p.score),
+            ]);
+        }
+        report.table(&t);
+
+        // Full solves: tuned bs vs the rule of thumb.
+        let opts = SolveOptions::default();
+        let mut t = Table::new("Full solve to eps = 1e-8", &["bs", "iterations", "modeled time"]);
+        for bs in [best, n] {
+            let cal =
+                calibrate_iterations(|s| RkabSolver::new(s, q, bs, 1.0), &sys, &opts, scale.seeds);
+            t.row(vec![
+                format!("{bs}{}", if bs == best { " (tuned)" } else { " (= n)" }),
+                cal.iterations().to_string(),
+                fmt_seconds(cal.mean_iterations * model.rkab_iteration(q, bs)),
+            ]);
+        }
+        report.table(&t);
+        report.text(
+            "**Shape check:** the tuner lands near the bs = n rule on full-matrix \
+             sampling (validating the paper's heuristic) while remaining \
+             applicable where the rule breaks (partitioned sampling, Fig. 9 / \
+             §3.4.3).\n",
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_ablation_averaging() {
+        let md = AblationAveraging.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("critical"));
+    }
+
+    #[test]
+    fn smoke_ablation_autotune() {
+        let md = AblationAutotune.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("tuned"));
+    }
+}

@@ -1,0 +1,80 @@
+//! Fig. 2 — block-sequential parallelization of each RK iteration (§3.2).
+//!
+//! Paper: speedup vs threads for (a) small n (no speedup at all, slowdowns)
+//! and (b) large n (some speedup, far from ideal, degrading at 64 threads).
+//! Workload: fixed row count, n ∈ {50..1000} (a) and {2000, 4000} (b).
+//!
+//! Timing: per-iteration cost from the calibrated CostModel (measured
+//! projection cost + modeled barriers — see coordinator::timing). Iteration
+//! counts are irrelevant here (same chain for every q), so speedup =
+//! t_iter(1) / t_iter(q).
+
+use crate::coordinator::experiments::thread_counts;
+use crate::coordinator::{CostModel, Experiment, Scale};
+use crate::data::DatasetBuilder;
+use crate::report::{fmt_seconds, fmt_speedup, Report, Table};
+
+/// Fig. 2 driver.
+pub struct Fig02;
+
+impl Experiment for Fig02 {
+    fn id(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 2: block-sequential RK speedup vs threads"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        report.text(
+            "Paper workload: m = 20000, n in {50, 100, 500, 1000} (a) and n in \
+             {2000, 4000} (b), threads 1-64. Scaled here by the factor below; \
+             per-iteration timing composed from the measured projection cost + \
+             modeled barrier crossings (see DESIGN.md §3).\n",
+        );
+        report.text(format!("Scale factor: {} (m = {}).\n", scale.factor, scale.dim(20_000)));
+
+        let m = scale.dim(20_000);
+        let small_n = [50usize, 100, 500, 1000];
+        let large_n = [2000usize, 4000];
+
+        for (panel, ns) in [("(a) small n", &small_n[..]), ("(b) large n", &large_n[..])] {
+            let mut t = Table::new(
+                format!("Fig 2{panel}: speedup (t_seq / t_par)"),
+                &["n", "t_iter seq", "q=2", "q=4", "q=8", "q=16", "q=64"],
+            );
+            for &n in ns {
+                let n_scaled = scale.dim(n);
+                let sys = DatasetBuilder::new(m, n_scaled).seed(42).consistent();
+                let model = CostModel::calibrate(&sys);
+                let t1 = model.block_seq_iteration(1);
+                let mut cells = vec![n_scaled.to_string(), fmt_seconds(t1)];
+                for &q in &thread_counts()[1..] {
+                    cells.push(fmt_speedup(t1 / model.block_seq_iteration(q)));
+                }
+                t.row(cells);
+            }
+            report.table(&t);
+        }
+        report.text(
+            "**Shape check (paper Fig. 2):** small n shows no speedup (<1 for all q); \
+             large n improves but stays far from ideal and drops from 16 to 64 threads.\n",
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_produces_both_panels() {
+        let md = Fig02.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("Fig 2(a)"));
+        assert!(md.contains("Fig 2(b)"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig. 10 — RKAB iterations as a function of alpha, for several block
+//! sizes; divergence region included (§3.4.2).
+//!
+//! Paper workload: 80000 x 1000 (scaled 8000 x 250), q in {2, 4}, alpha
+//! swept from 1 to the RKA alpha* for that q. The paper's findings: alpha*
+//! is NOT optimal for RKAB; the optimal alpha shrinks as bs grows; for q = 4
+//! large alpha with large bs diverges (cells marked "div").
+
+use crate::coordinator::{calibrate_iterations, Experiment, Scale};
+use crate::data::DatasetBuilder;
+use crate::report::{Report, Table};
+use crate::solvers::alpha::full_matrix_alpha;
+use crate::solvers::rkab::RkabSolver;
+use crate::solvers::SolveOptions;
+
+/// Fig. 10 driver.
+pub struct Fig10;
+
+impl Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 10: RKAB iterations vs alpha (divergence region)"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let m = scale.dim(8_000);
+        let n = scale.dim(250);
+        report.text(format!("Paper: 80000 x 1000, q in {{2, 4}}. Scaled: {m} x {n}.\n"));
+        let sys = DatasetBuilder::new(m, n).seed(41).consistent();
+        let opts = SolveOptions {
+            divergence_factor: 1e6,
+            max_iterations: 30_000_000,
+            ..Default::default()
+        };
+        let block_sizes: Vec<usize> = vec![5, n / 5, n / 2, n].into_iter().filter(|&b| b >= 1).collect();
+
+        for q in [2usize, 4] {
+            let (astar, _) = full_matrix_alpha(&sys, q).expect("alpha*");
+            // Evenly spaced test alphas in [1, alpha*], like the paper's
+            // {1.0, 1.2, ..., 1.999} for q = 2.
+            let alphas: Vec<f64> = (0..6).map(|i| 1.0 + (astar - 1.0) * i as f64 / 5.0).collect();
+
+            let headers: Vec<String> = std::iter::once("alpha".into())
+                .chain(block_sizes.iter().map(|b| format!("bs={b}")))
+                .collect();
+            let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+            let mut t =
+                Table::new(format!("q = {q} (alpha* = {astar:.3}): iterations"), &hdr_refs);
+            for &alpha in &alphas {
+                let mut cells = vec![format!("{alpha:.3}")];
+                for &bs in &block_sizes {
+                    let cal = calibrate_iterations(
+                        |s| RkabSolver::new(s, q, bs, alpha),
+                        &sys,
+                        &opts,
+                        scale.seeds,
+                    );
+                    cells.push(if cal.converged_fraction == 0.0 {
+                        "div".to_string()
+                    } else {
+                        cal.iterations().to_string()
+                    });
+                }
+                t.row(cells);
+            }
+            report.table(&t);
+        }
+        report.text(
+            "**Shape check (paper Fig. 10):** the best alpha for RKAB is below \
+             alpha* and decreases as bs grows; for q = 4 the large-alpha / \
+             large-bs corner diverges ('div' cells).\n",
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweeps_alpha() {
+        let md = Fig10.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("alpha*"));
+        assert!(md.contains("q = 2"));
+    }
+}

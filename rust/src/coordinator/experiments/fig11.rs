@@ -1,0 +1,93 @@
+//! Fig. 11 — distributed RKAB: time vs block size under the two
+//! process/node configurations (§3.4.3).
+//!
+//! Paper workload: 80000 x 1000 and 80000 x 10000, np = 40-ish; scaled:
+//! 8000 x 250 and 8000 x 1000, np = 8. The paper's point: with the matrix
+//! partitioned, bs = n is no longer the right rule — each rank's submatrix
+//! may be underdetermined (fewer than n rows), so information saturates
+//! earlier and large blocks reuse rows.
+
+use crate::coordinator::{Experiment, Scale};
+use crate::data::DatasetBuilder;
+use crate::distributed::{DistRkab, Placement, SimCluster};
+use crate::report::{fmt_seconds, Report, Table};
+use crate::solvers::SolveOptions;
+
+/// Fig. 11 driver.
+pub struct Fig11;
+
+impl Experiment for Fig11 {
+    fn id(&self) -> &'static str {
+        "fig11"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 11: distributed RKAB time vs block size, two placements"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let np = if scale.factor < 0.5 { 4 } else { 8 };
+
+        for (panel, n0) in [("(a) n small", 250usize), ("(b) n large", 1_000)] {
+            let m = scale.dim(8_000);
+            let n = scale.dim(n0);
+            let sys = DatasetBuilder::new(m, n).seed(61).consistent();
+            let rows_per_rank = m / np;
+            report.text(format!(
+                "Panel {panel}: {m} x {n}, np = {np}; per-rank submatrix \
+                 {rows_per_rank} x {n} ({}).\n",
+                if rows_per_rank >= n { "overdetermined" } else { "underdetermined" }
+            ));
+
+            let block_sizes: Vec<usize> =
+                vec![5, n / 5, n / 2, n, 2 * n].into_iter().filter(|&b| b >= 1).collect();
+            let mut t = Table::new(
+                format!("Fig 11{panel}: simulated time vs bs"),
+                &["bs", "iters", "t 24/node", "t 2/node"],
+            );
+            for bs in block_sizes {
+                let mut times = Vec::new();
+                let mut iters = 0usize;
+                for placement in [Placement::full_node(), Placement::two_per_node()] {
+                    let cluster = SimCluster::new(np, placement);
+                    let cal =
+                        DistRkab::new(3, bs, 1.0).solve(&sys, &SolveOptions::default(), &cluster);
+                    iters = cal.iterations;
+                    let timed = DistRkab::new(3, bs, 1.0).solve(
+                        &sys,
+                        &SolveOptions::default().with_fixed_iterations(cal.iterations.max(1)),
+                        &cluster,
+                    );
+                    times.push(timed.sim_seconds);
+                }
+                t.row(vec![
+                    bs.to_string(),
+                    iters.to_string(),
+                    fmt_seconds(times[0]),
+                    fmt_seconds(times[1]),
+                ]);
+            }
+            report.table(&t);
+        }
+        report.text(
+            "**Shape check (paper Fig. 11):** small blocks favor packing a node \
+             (latency-bound Allreduce); large blocks favor 2-per-node (compute/\
+             memory-bound); for the wide system 2-per-node wins at every bs.\n",
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_both_panels() {
+        let md = Fig11.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("Fig 11(a)"));
+        assert!(md.contains("Fig 11(b)"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Per-figure / per-table experiment drivers (paper order).
+//!
+//! Every driver states the paper's original workload, the container-scaled
+//! workload actually run (DESIGN.md §3), and emits the same rows/series the
+//! paper's figure shows. EXPERIMENTS.md records paper-vs-measured for each.
+
+pub mod ablations;
+pub mod fig01;
+pub mod fig02;
+pub mod fig04_05;
+pub mod fig06;
+pub mod fig07_09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12_14;
+pub mod table1;
+pub mod table2;
+
+use crate::coordinator::Scale;
+
+/// Thread counts used by the shared-memory figures (the paper's 1-64).
+pub fn thread_counts() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 64]
+}
+
+/// Process counts used by the distributed figures (the paper's 1-48).
+pub fn process_counts(scale: Scale) -> Vec<usize> {
+    if scale.factor < 0.5 {
+        vec![1, 2, 4, 8]
+    } else {
+        vec![1, 2, 4, 8, 12, 24, 48]
+    }
+}

@@ -1,0 +1,95 @@
+//! Table 1 — iterations under {full, partial}-matrix alpha x {full-matrix,
+//! distributed} row sampling (§3.3.1).
+//!
+//! Paper workload: 40000 x 10000, threads 2-16, alpha = alpha*.
+//! Scaled workload: 4000 x 1000 by default.
+
+use crate::coordinator::{calibrate_iterations, Experiment, Scale};
+use crate::data::DatasetBuilder;
+use crate::report::{Report, Table};
+use crate::solvers::alpha::{full_matrix_alpha, partial_matrix_alphas};
+use crate::solvers::rka::{RkaSolver, Weights};
+use crate::solvers::sampling::SamplingScheme;
+use crate::solvers::SolveOptions;
+
+/// Table 1 driver.
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+
+    fn title(&self) -> &'static str {
+        "Table 1: sampling scheme x alpha source (RKA iterations)"
+    }
+
+    fn run(&self, scale: Scale) -> Report {
+        let mut report = Report::new();
+        report.text(format!("# {}\n", self.title()));
+        let m = scale.dim(4_000);
+        let n = scale.dim(1_000);
+        report.text(format!(
+            "Paper: 40000 x 10000. Scaled here: {m} x {n}. Cells are mean \
+             iterations to eps = 1e-8; parentheses = difference vs column 2 \
+             (Full alpha / Full access), matching the paper's layout.\n"
+        ));
+
+        let sys = DatasetBuilder::new(m, n).seed(13).consistent();
+        let opts = SolveOptions::default();
+        let mut t = Table::new(
+            format!("RKA iterations, {m} x {n}"),
+            &[
+                "Threads",
+                "Full a / Full access",
+                "Full a / Distributed",
+                "Partial a / Full access",
+                "Partial a / Distributed",
+            ],
+        );
+
+        for q in [2usize, 4, 8, 16] {
+            let (alpha_full, _) = full_matrix_alpha(&sys, q).expect("alpha*");
+            let (alphas_part, _) = partial_matrix_alphas(&sys, q).expect("partial alpha");
+            let cell = |weights: Weights, scheme: SamplingScheme| {
+                calibrate_iterations(
+                    |s| RkaSolver::new(s, q, 1.0).with_weights(weights.clone()).with_scheme(scheme),
+                    &sys,
+                    &opts,
+                    scale.seeds,
+                )
+                .iterations() as i64
+            };
+            let base = cell(Weights::Uniform(alpha_full), SamplingScheme::FullMatrix);
+            let fd = cell(Weights::Uniform(alpha_full), SamplingScheme::Partitioned);
+            let pf = cell(Weights::PerWorker(alphas_part.clone()), SamplingScheme::FullMatrix);
+            let pd = cell(Weights::PerWorker(alphas_part), SamplingScheme::Partitioned);
+            t.row(vec![
+                q.to_string(),
+                base.to_string(),
+                format!("{fd} ({:+})", fd - base),
+                format!("{pf} ({:+})", pf - base),
+                format!("{pd} ({:+})", pd - base),
+            ]);
+        }
+        report.table(&t);
+        report.text(
+            "**Shape check (paper Table 1):** partial-matrix alpha changes the \
+             count by well under 1%; the sampling scheme shifts it slightly either \
+             way, with the distributed approach mildly better at low q.\n",
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_produces_four_scenarios() {
+        let md = Table1.run(Scale::smoke()).to_markdown();
+        assert!(md.contains("Full a / Full access"));
+        assert!(md.contains("Partial a / Distributed"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Experiment coordinator: the paper's evaluation, one driver per figure or
+//! table.
+//!
+//! Each [`Experiment`] follows the paper's protocol (§3.1):
+//!
+//! 1. **Calibrate** — run the algorithm to the ε = 1e-8 stopping criterion
+//!    for several seeds, average the iteration counts ([`calibrate`]);
+//! 2. **Time** — charge the averaged iteration count through the calibrated
+//!    [`timing::CostModel`] (shared memory) or the simulated cluster
+//!    (distributed), keeping the stopping test off the clock;
+//! 3. **Report** — emit the same rows/series the paper's figure shows.
+//!
+//! `Scale` shrinks the paper's matrix dimensions to this container (the
+//! shapes being compared are size-stable; see DESIGN.md §3).
+
+pub mod autotune;
+pub mod calibrate;
+pub mod experiments;
+pub mod timing;
+
+pub use autotune::{autotune_block_size, AutotuneConfig};
+pub use calibrate::{calibrate_iterations, Calibration};
+pub use timing::CostModel;
+
+use crate::report::Report;
+
+/// Experiment scaling knob.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Multiplier on the default (already container-scaled) dimensions.
+    /// `1.0` = the documented EXPERIMENTS.md runs; smaller = smoke tests.
+    pub factor: f64,
+    /// Seeds used in the calibration averages (paper: 10).
+    pub seeds: u32,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale { factor: 1.0, seeds: 5 }
+    }
+}
+
+impl Scale {
+    /// Quick smoke-test scale (CI-sized).
+    pub fn smoke() -> Self {
+        Scale { factor: 0.15, seeds: 2 }
+    }
+
+    /// Scale a dimension, keeping a sane floor.
+    pub fn dim(&self, d: usize) -> usize {
+        ((d as f64 * self.factor) as usize).max(8)
+    }
+}
+
+/// One reproducible unit of the paper's evaluation.
+pub trait Experiment {
+    /// Short id, e.g. "fig4".
+    fn id(&self) -> &'static str;
+    /// Human title matching the paper.
+    fn title(&self) -> &'static str;
+    /// Run and produce the report.
+    fn run(&self, scale: Scale) -> Report;
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(experiments::fig01::Fig01),
+        Box::new(experiments::fig02::Fig02),
+        Box::new(experiments::fig04_05::Fig04),
+        Box::new(experiments::fig04_05::Fig05),
+        Box::new(experiments::table1::Table1),
+        Box::new(experiments::fig06::Fig06),
+        Box::new(experiments::fig07_09::Fig07),
+        Box::new(experiments::fig07_09::Fig08),
+        Box::new(experiments::fig07_09::Fig09),
+        Box::new(experiments::fig10::Fig10),
+        Box::new(experiments::table2::Table2),
+        Box::new(experiments::fig11::Fig11),
+        Box::new(experiments::fig12_14::Fig12),
+        Box::new(experiments::fig12_14::Fig13),
+        Box::new(experiments::fig12_14::Fig14),
+        Box::new(experiments::ablations::AblationAveraging),
+        Box::new(experiments::ablations::AblationSampling),
+        Box::new(experiments::ablations::AblationAutotune),
+    ]
+}
+
+/// Find an experiment by id.
+pub fn find(id: &str) -> Option<Box<dyn Experiment>> {
+    registry().into_iter().find(|e| e.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_experiments() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
+        for want in [
+            "fig1", "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
+            "fig10", "table2", "fig11", "fig12", "fig13", "fig14",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn find_by_id() {
+        assert!(find("fig7").is_some());
+        assert!(find("fig99").is_none());
+    }
+
+    #[test]
+    fn scale_floors_dimensions() {
+        let s = Scale { factor: 0.001, seeds: 1 };
+        assert_eq!(s.dim(100), 8);
+        assert_eq!(Scale::default().dim(100), 100);
+    }
+}

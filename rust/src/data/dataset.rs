@@ -1,0 +1,138 @@
+//! The `LinearSystem` type shared by all solvers and experiments.
+
+use crate::linalg::{gemv, norm2, sub, Matrix};
+use crate::linalg::vector::dist_sq;
+
+/// A (possibly inconsistent) linear system `Ax = b` plus reference solutions.
+///
+/// `row_norms_sq` and `frobenius_sq` are precomputed once: every Kaczmarz
+/// variant needs `‖A^(i)‖²` per iteration and the sampling distribution
+/// needs all of them up front (paper eq. 4).
+#[derive(Clone, Debug)]
+pub struct LinearSystem {
+    /// Coefficient matrix (m x n, m >= n in all paper experiments).
+    pub a: Matrix,
+    /// Right-hand side (len m).
+    pub b: Vec<f64>,
+    /// The unique solution for consistent systems (`x*`), if known.
+    pub x_true: Option<Vec<f64>>,
+    /// The least-squares solution for inconsistent systems (`x_LS`), if known.
+    pub x_ls: Option<Vec<f64>>,
+    /// Squared row norms `‖A^(i)‖²`.
+    pub row_norms_sq: Vec<f64>,
+    /// Squared Frobenius norm `‖A‖²_F`.
+    pub frobenius_sq: f64,
+    /// Whether the system is consistent by construction.
+    pub consistent: bool,
+}
+
+impl LinearSystem {
+    /// Wrap a matrix + rhs, precomputing norms. `x_true`/`x_ls` optional.
+    pub fn new(a: Matrix, b: Vec<f64>, x_true: Option<Vec<f64>>, consistent: bool) -> Self {
+        assert_eq!(a.rows(), b.len(), "rhs length must equal row count");
+        let row_norms_sq = a.row_norms_sq();
+        let frobenius_sq = row_norms_sq.iter().sum();
+        LinearSystem { a, b, x_true, x_ls: None, row_norms_sq, frobenius_sq, consistent }
+    }
+
+    /// Rows (`m`).
+    pub fn rows(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Columns (`n`).
+    pub fn cols(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// The reference solution experiments measure error against:
+    /// `x*` for consistent systems, `x_LS` for inconsistent ones.
+    pub fn reference_solution(&self) -> Option<&[f64]> {
+        if self.consistent {
+            self.x_true.as_deref()
+        } else {
+            self.x_ls.as_deref().or(self.x_true.as_deref())
+        }
+    }
+
+    /// Squared error `‖x - x_ref‖²` against the reference solution.
+    ///
+    /// Panics if no reference solution is known (generator always sets one).
+    pub fn error_sq(&self, x: &[f64]) -> f64 {
+        let r = self.reference_solution().expect("no reference solution");
+        dist_sq(x, r)
+    }
+
+    /// Residual norm `‖Ax - b‖`.
+    pub fn residual_norm(&self, x: &[f64]) -> f64 {
+        let ax = gemv(&self.a, x).expect("shape checked at construction");
+        norm2(&sub(&ax, &self.b))
+    }
+
+    /// Row-sampling weights for eq. 4 (`‖A^(i)‖²`; the samplers normalize).
+    pub fn sampling_weights(&self) -> &[f64] {
+        &self.row_norms_sq
+    }
+
+    /// Restrict to a contiguous block of rows (used to hand each distributed
+    /// rank its partition: rows `[lo, hi)` with `lo = floor(t·m/q)`,
+    /// `hi = floor((t+1)·m/q)` as in §3.3.1).
+    pub fn row_partition(&self, part: usize, parts: usize) -> (usize, usize) {
+        assert!(parts > 0 && part < parts);
+        let m = self.rows();
+        (part * m / parts, (part + 1) * m / parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn tiny() -> LinearSystem {
+        // x_true = [1, 1]
+        let a = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let b = vec![1.0, 1.0, 2.0];
+        LinearSystem::new(a, b, Some(vec![1.0, 1.0]), true)
+    }
+
+    #[test]
+    fn norms_precomputed() {
+        let s = tiny();
+        assert_eq!(s.row_norms_sq, vec![1.0, 1.0, 2.0]);
+        assert_eq!(s.frobenius_sq, 4.0);
+    }
+
+    #[test]
+    fn error_and_residual() {
+        let s = tiny();
+        assert_eq!(s.error_sq(&[1.0, 1.0]), 0.0);
+        assert!(s.residual_norm(&[1.0, 1.0]) < 1e-12);
+        assert!(s.error_sq(&[0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn partition_covers_all_rows() {
+        let s = tiny();
+        let (l0, h0) = s.row_partition(0, 2);
+        let (l1, h1) = s.row_partition(1, 2);
+        assert_eq!(l0, 0);
+        assert_eq!(h0, l1);
+        assert_eq!(h1, 3);
+    }
+
+    #[test]
+    fn reference_prefers_ls_when_inconsistent() {
+        let mut s = tiny();
+        s.consistent = false;
+        s.x_ls = Some(vec![0.9, 1.1]);
+        assert_eq!(s.reference_solution().unwrap(), &[0.9, 1.1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rhs_length_checked() {
+        let a = Matrix::zeros(3, 2);
+        LinearSystem::new(a, vec![0.0; 2], None, true);
+    }
+}

@@ -1,0 +1,248 @@
+//! Data-set generation per §3.1 of the paper.
+
+use super::dataset::LinearSystem;
+use crate::linalg::{gemv, Matrix};
+use crate::rng::{Mt19937, NormalSampler};
+
+/// Builder for the paper's synthetic overdetermined systems.
+///
+/// Matrix entries of row `i` are drawn from `N(μ_i, σ_i)` with
+/// `μ_i ~ U[-5, 5]`, `σ_i ~ U[1, 20]` — a different gaussian per row, as in
+/// §3.1. The solution `x` is drawn from the same family and `b = A x`, so
+/// the system is consistent, full rank (w.p. 1) and its unique solution is
+/// known exactly.
+pub struct DatasetBuilder {
+    rows: usize,
+    cols: usize,
+    seed: u32,
+    mu_range: (f64, f64),
+    sigma_range: (f64, f64),
+    noise_sd: f64,
+}
+
+impl DatasetBuilder {
+    /// A builder for an `m x n` system with the paper's parameter ranges.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0, "empty system");
+        DatasetBuilder {
+            rows,
+            cols,
+            seed: 2024,
+            mu_range: (-5.0, 5.0),
+            sigma_range: (1.0, 20.0),
+            noise_sd: 1.0,
+        }
+    }
+
+    /// Set the generator seed (distinct seeds give distinct systems).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the per-row mean range (default [-5, 5]).
+    pub fn mu_range(mut self, lo: f64, hi: f64) -> Self {
+        assert!(lo <= hi);
+        self.mu_range = (lo, hi);
+        self
+    }
+
+    /// Override the per-row σ range (default [1, 20]).
+    pub fn sigma_range(mut self, lo: f64, hi: f64) -> Self {
+        assert!(0.0 < lo && lo <= hi);
+        self.sigma_range = (lo, hi);
+        self
+    }
+
+    /// Std-dev of the inconsistency noise ξ (default 1.0, the paper's N(0,1)).
+    pub fn noise_sd(mut self, sd: f64) -> Self {
+        assert!(sd > 0.0);
+        self.noise_sd = sd;
+        self
+    }
+
+    fn generate_matrix_and_x(&self) -> (Matrix, Vec<f64>) {
+        let mut rng = Mt19937::new(self.seed);
+        let mut normal = NormalSampler::new();
+        let mut a = Matrix::zeros(self.rows, self.cols);
+        let (mu_lo, mu_hi) = self.mu_range;
+        let (sg_lo, sg_hi) = self.sigma_range;
+        for i in 0..self.rows {
+            // A different gaussian per row (§3.1).
+            let mu = mu_lo + (mu_hi - mu_lo) * rng.next_f64();
+            let sd = sg_lo + (sg_hi - sg_lo) * rng.next_f64();
+            for v in a.row_mut(i) {
+                *v = normal.sample(&mut rng, mu, sd);
+            }
+        }
+        // x from "the same probability distribution used for matrix elements".
+        let mu = mu_lo + (mu_hi - mu_lo) * rng.next_f64();
+        let sd = sg_lo + (sg_hi - sg_lo) * rng.next_f64();
+        let x: Vec<f64> = (0..self.cols).map(|_| normal.sample(&mut rng, mu, sd)).collect();
+        (a, x)
+    }
+
+    /// Consistent system: `b = A x_true` exactly.
+    pub fn consistent(&self) -> LinearSystem {
+        let (a, x) = self.generate_matrix_and_x();
+        let b = gemv(&a, &x).expect("shapes by construction");
+        LinearSystem::new(a, b, Some(x), true)
+    }
+
+    /// Inconsistent system: `b_LS = A x + ξ`, `ξ ~ N(0, noise_sd)` (§3.1).
+    ///
+    /// `x_ls` is *not* filled in here — callers compute it with
+    /// `solvers::cgls` exactly as the paper does. (`x_true` keeps the
+    /// pre-noise generating solution for diagnostics.)
+    pub fn inconsistent(&self) -> LinearSystem {
+        let mut sys = self.consistent();
+        // An independent stream for the noise so the consistent and
+        // inconsistent systems share A and x exactly (paper derives the
+        // inconsistent set from the consistent one).
+        let mut rng = Mt19937::new(self.seed ^ 0xdead_beef);
+        let mut normal = NormalSampler::new();
+        for bi in sys.b.iter_mut() {
+            *bi += normal.sample(&mut rng, 0.0, self.noise_sd);
+        }
+        sys.consistent = false;
+        sys
+    }
+
+    /// The paper's cropping protocol: generate the largest matrix once, then
+    /// derive an `rows x cols` system by taking the top-left submatrix
+    /// (keeps systems of different sizes comparable).
+    pub fn crop_from(&self, largest: &LinearSystem) -> LinearSystem {
+        let a = largest
+            .a
+            .crop(self.rows, self.cols)
+            .expect("crop dims must not exceed source");
+        // The cropped system needs its own consistent rhs: reuse the source
+        // x_true truncated to `cols`, recompute b = A x.
+        let x: Vec<f64> = largest
+            .x_true
+            .as_ref()
+            .expect("source must carry x_true")
+            .iter()
+            .take(self.cols)
+            .copied()
+            .collect();
+        let b = gemv(&a, &x).expect("shapes by construction");
+        LinearSystem::new(a, b, Some(x), true)
+    }
+}
+
+/// A highly coherent consistent system for the Fig. 1 demonstration:
+/// *consecutive* rows subtend a small angle (the matrix is "coherent" in the
+/// Wallace–Sekmen sense), which makes cyclic Kaczmarz crawl — each projection
+/// moves to a hyperplane almost parallel to the previous one — while
+/// randomized Kaczmarz hops between distant hyperplanes.
+///
+/// Row `i` samples a smooth curve on the sphere:
+/// `A[i][j] = cos((j+1)·θ_i + φ_j)` with `θ_i = i · step_angle` and random
+/// phases `φ_j`. Small `step_angle` ⇒ consecutive rows nearly parallel;
+/// the differing per-column frequencies keep the full row set diverse (and
+/// the matrix full rank).
+pub fn coherent_system(rows: usize, cols: usize, step_angle: f64, seed: u32) -> LinearSystem {
+    assert!(rows >= 2 && cols >= 2);
+    assert!(step_angle > 0.0);
+    let mut rng = Mt19937::new(seed);
+    let mut normal = NormalSampler::new();
+    let phases: Vec<f64> = (0..cols)
+        .map(|_| rng.next_f64() * 2.0 * std::f64::consts::PI)
+        .collect();
+    let mut a = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        let theta = i as f64 * step_angle;
+        let row = a.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = ((j + 1) as f64 * theta + phases[j]).cos();
+        }
+    }
+    let x: Vec<f64> = (0..cols).map(|_| normal.standard(&mut rng)).collect();
+    let b = gemv(&a, &x).expect("shapes by construction");
+    LinearSystem::new(a, b, Some(x), true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::dot;
+
+    #[test]
+    fn consistent_has_zero_residual_at_x_true() {
+        let sys = DatasetBuilder::new(50, 8).seed(3).consistent();
+        let x = sys.x_true.clone().unwrap();
+        assert!(sys.residual_norm(&x) < 1e-9 * sys.frobenius_sq.sqrt());
+        assert!(sys.consistent);
+    }
+
+    #[test]
+    fn inconsistent_shares_matrix_with_consistent() {
+        let b = DatasetBuilder::new(40, 6).seed(9);
+        let cons = b.consistent();
+        let inco = b.inconsistent();
+        assert_eq!(cons.a, inco.a);
+        assert!(!inco.consistent);
+        // b differs by the noise
+        let diff: f64 = cons.b.iter().zip(&inco.b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn inconsistent_noise_has_unit_scale() {
+        let sys = DatasetBuilder::new(5000, 4).seed(1).inconsistent();
+        let cons = DatasetBuilder::new(5000, 4).seed(1).consistent();
+        let noise: Vec<f64> = sys.b.iter().zip(&cons.b).map(|(y, x)| y - x).collect();
+        let mean = noise.iter().sum::<f64>() / noise.len() as f64;
+        let var = noise.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / noise.len() as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let a = DatasetBuilder::new(10, 4).seed(1).consistent();
+        let b = DatasetBuilder::new(10, 4).seed(2).consistent();
+        assert_ne!(a.a, b.a);
+    }
+
+    #[test]
+    fn crop_matches_paper_protocol() {
+        let big = DatasetBuilder::new(100, 20).seed(5).consistent();
+        let small = DatasetBuilder::new(30, 8).crop_from(&big);
+        assert_eq!(small.rows(), 30);
+        assert_eq!(small.cols(), 8);
+        // Entries coincide with the source's top-left block.
+        for i in 0..30 {
+            assert_eq!(small.a.row(i), &big.a.row(i)[..8]);
+        }
+        // And the cropped system is itself consistent.
+        let x = small.x_true.clone().unwrap();
+        assert!(small.residual_norm(&x) < 1e-9 * small.frobenius_sq.sqrt());
+    }
+
+    #[test]
+    fn coherent_rows_nearly_parallel() {
+        let sys = coherent_system(20, 10, 0.001, 7);
+        // cos(angle) between consecutive rows should be ~1.
+        for i in 0..19 {
+            let r0 = sys.a.row(i);
+            let r1 = sys.a.row(i + 1);
+            let cos = dot(r0, r1)
+                / (dot(r0, r0).sqrt() * dot(r1, r1).sqrt());
+            assert!(cos > 0.99, "rows {i},{} cos {cos}", i + 1);
+        }
+    }
+
+    #[test]
+    fn coherent_system_is_consistent_and_diverse() {
+        let sys = coherent_system(200, 6, 0.002, 3);
+        let x = sys.x_true.clone().unwrap();
+        assert!(sys.residual_norm(&x) < 1e-8);
+        // Distant rows should NOT be nearly parallel.
+        let r0 = sys.a.row(0);
+        let r_far = sys.a.row(199);
+        let cos = dot(r0, r_far) / (dot(r0, r0).sqrt() * dot(r_far, r_far).sqrt());
+        assert!(cos.abs() < 0.95, "far rows still coherent: cos {cos}");
+    }
+}

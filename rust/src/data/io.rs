@@ -1,0 +1,127 @@
+//! Binary persistence for generated systems.
+//!
+//! Benches regenerate multi-hundred-MB matrices otherwise; the format is a
+//! trivial little-endian dump with a magic header, no external serialization
+//! crates being available offline.
+
+use super::dataset::LinearSystem;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"KCZSYS01";
+
+fn write_f64s<W: Write>(w: &mut W, v: &[f64]) -> Result<()> {
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f64>> {
+    let mut buf = vec![0u8; n * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Save a system to `path`.
+pub fn save(sys: &LinearSystem, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u64(&mut w, sys.rows() as u64)?;
+    write_u64(&mut w, sys.cols() as u64)?;
+    write_u64(&mut w, sys.consistent as u64)?;
+    write_u64(&mut w, sys.x_true.is_some() as u64)?;
+    write_u64(&mut w, sys.x_ls.is_some() as u64)?;
+    write_f64s(&mut w, sys.a.as_slice())?;
+    write_f64s(&mut w, &sys.b)?;
+    if let Some(x) = &sys.x_true {
+        write_f64s(&mut w, x)?;
+    }
+    if let Some(x) = &sys.x_ls {
+        write_f64s(&mut w, x)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a system saved by [`save`].
+pub fn load(path: &Path) -> Result<LinearSystem> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::InvalidArgument(format!(
+            "{} is not a kaczmarz system file",
+            path.display()
+        )));
+    }
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let consistent = read_u64(&mut r)? != 0;
+    let has_true = read_u64(&mut r)? != 0;
+    let has_ls = read_u64(&mut r)? != 0;
+    let a = Matrix::from_vec(rows, cols, read_f64s(&mut r, rows * cols)?)?;
+    let b = read_f64s(&mut r, rows)?;
+    let x_true = if has_true { Some(read_f64s(&mut r, cols)?) } else { None };
+    let x_ls = if has_ls { Some(read_f64s(&mut r, cols)?) } else { None };
+    let mut sys = LinearSystem::new(a, b, x_true, consistent);
+    sys.x_ls = x_ls;
+    Ok(sys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+
+    #[test]
+    fn roundtrip_consistent() {
+        let sys = DatasetBuilder::new(12, 5).seed(4).consistent();
+        let tmp = std::env::temp_dir().join("kcz_io_test_c.bin");
+        save(&sys, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.a, sys.a);
+        assert_eq!(back.b, sys.b);
+        assert_eq!(back.x_true, sys.x_true);
+        assert_eq!(back.consistent, sys.consistent);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_xls() {
+        let mut sys = DatasetBuilder::new(10, 3).seed(8).inconsistent();
+        sys.x_ls = Some(vec![1.0, 2.0, 3.0]);
+        let tmp = std::env::temp_dir().join("kcz_io_test_ls.bin");
+        save(&sys, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.x_ls, sys.x_ls);
+        assert!(!back.consistent);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let tmp = std::env::temp_dir().join("kcz_io_test_bad.bin");
+        std::fs::write(&tmp, b"NOTMAGIC________").unwrap();
+        assert!(load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Workload generation — the paper's §3.1 data sets, rebuilt.
+//!
+//! - consistent overdetermined systems with per-row gaussian entries
+//!   (μ ∈ [-5, 5], σ ∈ [1, 20]), smaller systems obtained by cropping the
+//!   largest one;
+//! - inconsistent systems derived by perturbing `b` with N(0,1) noise, with
+//!   the least-squares reference solution computed by CGLS;
+//! - highly coherent systems (small angles between consecutive rows) for the
+//!   Fig. 1 CK-vs-RK demonstration;
+//! - binary save/load so benches can reuse a generated data set.
+
+pub mod dataset;
+pub mod generator;
+pub mod io;
+
+pub use dataset::LinearSystem;
+pub use generator::{coherent_system, DatasetBuilder};

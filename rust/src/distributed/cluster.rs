@@ -1,0 +1,132 @@
+//! Simulated cluster runner and result types.
+
+use super::comm::Communicator;
+use super::network::{NetworkModel, Placement};
+use crate::metrics::History;
+
+/// A simulated cluster: `np` ranks under a placement and a network model.
+pub struct SimCluster {
+    /// Number of MPI-like processes.
+    pub np: usize,
+    /// Network cost model.
+    pub model: NetworkModel,
+    /// Process-to-node placement.
+    pub placement: Placement,
+}
+
+impl SimCluster {
+    /// Cluster with the default Navigator-like model.
+    pub fn new(np: usize, placement: Placement) -> Self {
+        assert!(np >= 1);
+        SimCluster { np, model: NetworkModel::default(), placement }
+    }
+
+    /// Run one closure per rank on its own thread; returns per-rank outputs.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut Communicator) -> T + Sync,
+    {
+        let comms = Communicator::create_world(self.np, &self.model, self.placement);
+        let mut out: Vec<Option<T>> = (0..self.np).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut c)| {
+                    let f = &f;
+                    scope.spawn(move || f(rank, &mut c))
+                })
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                out[i] = Some(h.join().expect("rank panicked"));
+            }
+        });
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Ranks co-located with `rank` on its node (for contention accounting).
+    pub fn ranks_on_node(&self, rank: usize) -> usize {
+        let node = self.placement.node_of(rank);
+        (0..self.np).filter(|&r| self.placement.node_of(r) == node).count()
+    }
+}
+
+/// Per-rank timing breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankStats {
+    /// Measured compute seconds (iteration work only).
+    pub compute_seconds: f64,
+    /// Modeled communication seconds (α-β model).
+    pub comm_seconds: f64,
+    /// Contention-adjusted compute seconds.
+    pub adjusted_compute_seconds: f64,
+}
+
+/// Result of a distributed solve.
+#[derive(Clone, Debug)]
+pub struct DistResult {
+    /// Final (replicated) solution estimate.
+    pub x: Vec<f64>,
+    /// Outer iterations executed.
+    pub iterations: usize,
+    /// Tolerance met.
+    pub converged: bool,
+    /// Divergence detected.
+    pub diverged: bool,
+    /// Total rows processed across ranks.
+    pub rows_used: usize,
+    /// Host wall-clock of the whole run (threads + channels; *not* the
+    /// number to compare against the paper).
+    pub wall_seconds: f64,
+    /// Simulated time: `max over ranks (adjusted compute + modeled comm)` —
+    /// the number Figs. 6 and 11 are built from.
+    pub sim_seconds: f64,
+    /// Per-rank breakdown.
+    pub rank_stats: Vec<RankStats>,
+    /// Error/residual history recorded by rank 0.
+    pub history: History,
+}
+
+impl DistResult {
+    /// Aggregate sim time from rank stats (max of per-rank totals).
+    pub fn sim_total(stats: &[RankStats]) -> f64 {
+        stats
+            .iter()
+            .map(|s| s.adjusted_compute_seconds + s.comm_seconds)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_executes_every_rank() {
+        let cluster = SimCluster::new(5, Placement::two_per_node());
+        let out = cluster.run(|rank, c| {
+            assert_eq!(c.rank(), rank);
+            rank * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn ranks_on_node_counts() {
+        let cluster = SimCluster::new(5, Placement::two_per_node());
+        assert_eq!(cluster.ranks_on_node(0), 2); // node 0: ranks 0,1
+        assert_eq!(cluster.ranks_on_node(4), 1); // node 2: rank 4 alone
+        let packed = SimCluster::new(5, Placement::full_node());
+        assert_eq!(packed.ranks_on_node(0), 5);
+    }
+
+    #[test]
+    fn sim_total_is_max_over_ranks() {
+        let stats = vec![
+            RankStats { compute_seconds: 1.0, comm_seconds: 0.5, adjusted_compute_seconds: 1.2 },
+            RankStats { compute_seconds: 0.8, comm_seconds: 1.5, adjusted_compute_seconds: 0.9 },
+        ];
+        assert!((DistResult::sim_total(&stats) - 2.4).abs() < 1e-12);
+    }
+}

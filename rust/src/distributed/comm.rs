@@ -1,0 +1,281 @@
+//! Message-passing between simulated ranks.
+//!
+//! Each rank owns a [`Communicator`]: senders to every peer and one inbox.
+//! Receives are *tagged by source* — messages from other partners arriving
+//! early are stashed, exactly the discipline `MPI_Recv(source=...)` gives.
+//!
+//! `allreduce_sum` implements recursive doubling with the standard
+//! fold-to-power-of-two pre/post phases so the paper's np ∈ {12, 24, 48}
+//! work, and charges every message to the α-β model. MPI's tree/hypercube
+//! Allreduce is O(log np) rounds — the very property the paper contrasts
+//! against OpenMP's O(q) critical section (§3.3.2).
+
+use super::network::{NetworkModel, Placement};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One message: source rank + payload.
+struct Msg {
+    from: usize,
+    data: Vec<f64>,
+}
+
+/// Per-rank endpoint of the simulated interconnect.
+pub struct Communicator {
+    rank: usize,
+    np: usize,
+    peers: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+    stash: VecDeque<Msg>,
+    /// Modeled communication seconds accumulated by this rank.
+    pub comm_seconds: f64,
+    model: NetworkModel,
+    placement: Placement,
+}
+
+impl Communicator {
+    /// Wire up a full interconnect for `np` ranks.
+    pub fn create_world(
+        np: usize,
+        model: &NetworkModel,
+        placement: Placement,
+    ) -> Vec<Communicator> {
+        let mut senders = Vec::with_capacity(np);
+        let mut receivers = Vec::with_capacity(np);
+        for _ in 0..np {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| Communicator {
+                rank,
+                np,
+                peers: senders.clone(),
+                inbox,
+                stash: VecDeque::new(),
+                comm_seconds: 0.0,
+                model: model.clone(),
+                placement,
+            })
+            .collect()
+    }
+
+    /// This rank's id.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn world_size(&self) -> usize {
+        self.np
+    }
+
+    /// Send `data` to `to` (charges the α-β cost to this rank).
+    pub fn send(&mut self, to: usize, data: Vec<f64>) {
+        self.comm_seconds +=
+            self.model.message_cost(self.rank, to, data.len() * 8, self.placement);
+        self.peers[to]
+            .send(Msg { from: self.rank, data })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive of the next message *from `from`* (others stashed).
+    pub fn recv_from(&mut self, from: usize) -> Vec<f64> {
+        // Check the stash first.
+        if let Some(pos) = self.stash.iter().position(|m| m.from == from) {
+            return self.stash.remove(pos).unwrap().data;
+        }
+        loop {
+            let msg = self.inbox.recv().expect("world disconnected");
+            if msg.from == from {
+                return msg.data;
+            }
+            self.stash.push_back(msg);
+        }
+    }
+
+    /// In-place sum-Allreduce via recursive doubling.
+    ///
+    /// Non-power-of-two worlds fold the `r = np - 2^k` extra ranks into the
+    /// power-of-two core first and broadcast back after (the classic MPICH
+    /// scheme). After return every rank holds the elementwise sum.
+    pub fn allreduce_sum(&mut self, x: &mut [f64]) {
+        let np = self.np;
+        if np == 1 {
+            return;
+        }
+        let pof2 = np.next_power_of_two() / if np.is_power_of_two() { 1 } else { 2 };
+        let rem = np - pof2;
+        let rank = self.rank;
+
+        // Pre-phase: ranks [0, 2*rem) pair up; odd of each pair sends its
+        // data to the even and drops out of the core exchange.
+        let mut core_rank: Option<usize> = None;
+        if rank < 2 * rem {
+            if rank % 2 == 1 {
+                // Donor: send, wait for the result in the post-phase.
+                let partner = rank - 1;
+                self.send(partner, x.to_vec());
+            } else {
+                let partner = rank + 1;
+                let other = self.recv_from(partner);
+                for (xi, oi) in x.iter_mut().zip(&other) {
+                    *xi += oi;
+                }
+                core_rank = Some(rank / 2);
+            }
+        } else {
+            core_rank = Some(rank - rem);
+        }
+
+        // Core: recursive doubling among pof2 virtual ranks.
+        if let Some(vrank) = core_rank {
+            let to_real = |v: usize| if v < rem { 2 * v } else { v + rem };
+            let mut mask = 1usize;
+            while mask < pof2 {
+                let vpartner = vrank ^ mask;
+                let partner = to_real(vpartner);
+                // Exchange: send ours, receive theirs (full-duplex; charge
+                // one message cost each way — send() charges ours).
+                self.send(partner, x.to_vec());
+                let theirs = self.recv_from(partner);
+                for (xi, ti) in x.iter_mut().zip(&theirs) {
+                    *xi += ti;
+                }
+                mask <<= 1;
+            }
+        }
+
+        // Post-phase: evens send the final result back to their donors.
+        if rank < 2 * rem {
+            if rank % 2 == 0 {
+                self.send(rank + 1, x.to_vec());
+            } else {
+                let result = self.recv_from(rank - 1);
+                x.copy_from_slice(&result);
+            }
+        }
+    }
+
+    /// Broadcast a single flag from rank 0 (used for stop decisions).
+    pub fn broadcast_flag(&mut self, flag: &mut f64) {
+        // Binomial tree from rank 0: node r's parent clears r's lowest set
+        // bit; its children are r + m for m = lowbit(r)/2, lowbit(r)/4, ... 1.
+        let np = self.np;
+        if np == 1 {
+            return;
+        }
+        let rank = self.rank;
+        if rank != 0 {
+            let parent = rank & (rank - 1);
+            let v = self.recv_from(parent);
+            *flag = v[0];
+        }
+        let mut m = if rank == 0 {
+            np.next_power_of_two() / 2
+        } else {
+            (rank & rank.wrapping_neg()) / 2
+        };
+        while m >= 1 {
+            let child = rank + m;
+            if child < np {
+                self.send(child, vec![*flag]);
+            }
+            m /= 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_world<F>(np: usize, f: F) -> Vec<Vec<f64>>
+    where
+        F: Fn(&mut Communicator) -> Vec<f64> + Sync,
+    {
+        let comms = Communicator::create_world(np, &NetworkModel::default(), Placement::full_node());
+        let mut out: Vec<Option<Vec<f64>>> = (0..np).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    let f = &f;
+                    scope.spawn(move || f(&mut c))
+                })
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                out[i] = Some(h.join().unwrap());
+            }
+        });
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    #[test]
+    fn allreduce_sums_across_world_sizes() {
+        for np in [1usize, 2, 3, 4, 5, 8, 12] {
+            let results = run_world(np, |c| {
+                // Rank r contributes [r, 2r, r²].
+                let r = c.rank() as f64;
+                let mut x = vec![r, 2.0 * r, r * r];
+                c.allreduce_sum(&mut x);
+                x
+            });
+            let s: f64 = (0..np).map(|r| r as f64).sum();
+            let sq: f64 = (0..np).map(|r| (r * r) as f64).sum();
+            for (rank, x) in results.iter().enumerate() {
+                assert_eq!(x[0], s, "np={np} rank={rank}");
+                assert_eq!(x[1], 2.0 * s);
+                assert_eq!(x[2], sq);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_charges_comm_time() {
+        let results = run_world(4, |c| {
+            let mut x = vec![1.0; 1000];
+            c.allreduce_sum(&mut x);
+            vec![c.comm_seconds]
+        });
+        for x in &results {
+            assert!(x[0] > 0.0, "no comm time charged");
+        }
+    }
+
+    #[test]
+    fn broadcast_flag_reaches_everyone() {
+        for np in [1usize, 2, 3, 5, 8] {
+            let results = run_world(np, |c| {
+                let mut flag = if c.rank() == 0 { 7.5 } else { 0.0 };
+                c.broadcast_flag(&mut flag);
+                vec![flag]
+            });
+            for (rank, x) in results.iter().enumerate() {
+                assert_eq!(x[0], 7.5, "np={np} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn tagged_receive_stashes_out_of_order() {
+        let results = run_world(3, |c| {
+            match c.rank() {
+                0 => {
+                    // Both peers send immediately; receive 2 first, then 1.
+                    let a = c.recv_from(2);
+                    let b = c.recv_from(1);
+                    vec![a[0], b[0]]
+                }
+                r => {
+                    c.send(0, vec![r as f64]);
+                    vec![]
+                }
+            }
+        });
+        assert_eq!(results[0], vec![2.0, 1.0]);
+    }
+}

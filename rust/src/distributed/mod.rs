@@ -1,0 +1,33 @@
+//! Distributed-memory layer — the paper's MPI side, simulated.
+//!
+//! The paper runs RKA/RKAB on the Navigator cluster (43 nodes, 2 x 12-core
+//! Xeon E5-2697v2, 96 GB each) over MPI. That hardware is not available
+//! here, so this module builds the closest substrate that exercises the same
+//! code paths (see DESIGN.md §3):
+//!
+//! - [`comm`] — ranks are OS threads with *private* memory (each owns only
+//!   its row partition, like an MPI process), exchanging messages over
+//!   channels; `Allreduce` is real recursive doubling, including the
+//!   non-power-of-two pre/post folding (the paper uses np ∈ {12, 24, 48});
+//! - [`network`] — an α-β cost model with distinct intra-/inter-node links
+//!   and a process-placement map (24-per-node vs 2-per-node, the two
+//!   configurations of Figs. 6 and 11), plus an LLC-contention penalty that
+//!   reproduces the paper's "memory access time beats communication time for
+//!   large systems" effect;
+//! - [`rka_dist`] — Algorithm 2; [`rkab_dist`] — Algorithm 4.
+//!
+//! Wall-clock compute time is *measured* per rank; communication time is
+//! *modeled*; the reported simulated time is
+//! `max over ranks (compute + comm)` per the bulk-synchronous structure.
+
+pub mod cluster;
+pub mod comm;
+pub mod network;
+pub mod rka_dist;
+pub mod rkab_dist;
+
+pub use cluster::{DistResult, SimCluster};
+pub use comm::Communicator;
+pub use network::{NetworkModel, Placement};
+pub use rka_dist::DistRka;
+pub use rkab_dist::DistRkab;

@@ -1,0 +1,170 @@
+//! Network cost model and process placement.
+//!
+//! An α-β (latency-bandwidth) model with two link classes. Message cost:
+//! `T(bytes) = α_link + bytes / B_link`, link class decided by whether the
+//! two ranks share a node under the chosen [`Placement`]. Constants default
+//! to values representative of the paper's testbed generation (dual-socket
+//! Xeon E5 v2 nodes on FDR InfiniBand); what matters for reproduction is the
+//! *ratio* intra/inter, not the absolute numbers.
+
+/// How ranks are packed onto cluster nodes.
+///
+/// The paper's two configurations (§3.3.2): fill whole 24-core nodes
+/// (`ppn = 24`) or spread 2 processes per node (`ppn = 2`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// Processes per node.
+    pub ppn: usize,
+}
+
+impl Placement {
+    /// Fill whole nodes (1 process per core, 24-core nodes).
+    pub fn full_node() -> Self {
+        Placement { ppn: 24 }
+    }
+
+    /// Two processes per node (one per socket).
+    pub fn two_per_node() -> Self {
+        Placement { ppn: 2 }
+    }
+
+    /// Node index hosting `rank` (block placement, like `mpirun --map-by`).
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ppn
+    }
+
+    /// Number of nodes needed for `np` ranks.
+    pub fn nodes_for(&self, np: usize) -> usize {
+        np.div_ceil(self.ppn)
+    }
+}
+
+/// α-β network model + LLC contention penalty.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency between ranks on the same node (seconds).
+    pub alpha_intra: f64,
+    /// Per-message latency across nodes (seconds).
+    pub alpha_inter: f64,
+    /// Intra-node bandwidth (bytes/second) — shared-memory transport.
+    pub bw_intra: f64,
+    /// Inter-node bandwidth (bytes/second).
+    pub bw_inter: f64,
+    /// Last-level cache per node (bytes); working sets beyond this pay the
+    /// contention penalty.
+    pub llc_bytes: f64,
+    /// Compute-slowdown factor at full memory contention (the paper's
+    /// "processes on the same node contend for entries in the L3 cache").
+    pub mem_penalty: f64,
+    /// Cores per node (contention scales with co-located ranks).
+    pub cores_per_node: usize,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // Navigator-generation link constants: FDR InfiniBand (~5.8 GB/s
+        // payload, ~1.5 µs latency), shared-memory transport ~10 GB/s /
+        // 0.5 µs. `llc_bytes` is NOT the physical 60 MB of the paper's
+        // nodes: because this repo runs the experiments at ~1/25 of the
+        // paper's matrix areas (DESIGN.md §3), the cache threshold is scaled
+        // so the *regime boundary* is preserved — the paper's smaller system
+        // (20000 x 2000) behaves cache-friendly under full packing while the
+        // larger one (40000 x 4000) contends; at our scaled sizes that
+        // boundary sits between ~13 MB and ~50 MB of per-node working set.
+        NetworkModel {
+            alpha_intra: 0.5e-6,
+            alpha_inter: 1.5e-6,
+            bw_intra: 10.0e9,
+            bw_inter: 5.8e9,
+            llc_bytes: 24.0e6,
+            mem_penalty: 0.5,
+            cores_per_node: 24,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Cost of one point-to-point message of `bytes` between two ranks.
+    pub fn message_cost(&self, from: usize, to: usize, bytes: usize, placement: Placement) -> f64 {
+        if placement.node_of(from) == placement.node_of(to) {
+            self.alpha_intra + bytes as f64 / self.bw_intra
+        } else {
+            self.alpha_inter + bytes as f64 / self.bw_inter
+        }
+    }
+
+    /// Compute-time multiplier for a rank whose node hosts `ranks_on_node`
+    /// ranks each holding `bytes_per_rank` of working set.
+    ///
+    /// Reproduces the §3.3.2 observation: once the per-node working set
+    /// exceeds the LLC, row fetches stream from DRAM and the node's memory
+    /// bandwidth is *shared* — the slowdown grows with the number of
+    /// co-located ranks (up to `ranks_on_node - 1` extra queueing), weighted
+    /// by how far the working set overflows the cache (`overflow`) and by
+    /// the memory-bound fraction of the row sweep (`mem_penalty`). This is a
+    /// bandwidth-sharing model, not a fixed cap: packing 24 ranks on a node
+    /// whose working set spills is several times slower per rank, which is
+    /// exactly why the paper's larger systems favor 2-per-node placement.
+    pub fn contention_factor(&self, ranks_on_node: usize, bytes_per_rank: usize) -> f64 {
+        let ws = ranks_on_node as f64 * bytes_per_rank as f64;
+        if ws <= self.llc_bytes {
+            return 1.0;
+        }
+        let overflow = (1.0 - self.llc_bytes / ws).clamp(0.0, 1.0);
+        1.0 + self.mem_penalty * overflow * (ranks_on_node.saturating_sub(1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_maps_ranks_to_nodes() {
+        let p = Placement::two_per_node();
+        assert_eq!(p.node_of(0), 0);
+        assert_eq!(p.node_of(1), 0);
+        assert_eq!(p.node_of(2), 1);
+        assert_eq!(p.nodes_for(48), 24);
+        assert_eq!(Placement::full_node().nodes_for(48), 2);
+    }
+
+    #[test]
+    fn intra_cheaper_than_inter() {
+        let m = NetworkModel::default();
+        let p = Placement::two_per_node();
+        let intra = m.message_cost(0, 1, 8000, p);
+        let inter = m.message_cost(0, 2, 8000, p);
+        assert!(intra < inter);
+    }
+
+    #[test]
+    fn message_cost_scales_with_bytes() {
+        let m = NetworkModel::default();
+        let p = Placement::full_node();
+        let small = m.message_cost(0, 1, 8, p);
+        let big = m.message_cost(0, 1, 8_000_000, p);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn contention_kicks_in_past_llc() {
+        let m = NetworkModel::default();
+        // Working set under LLC: no penalty.
+        assert_eq!(m.contention_factor(24, 1_000_000), 1.0);
+        // 24 ranks x 100 MB >> 60 MB LLC: penalty close to 1 + mem_penalty.
+        let f = m.contention_factor(24, 100_000_000);
+        assert!(f > 1.5, "factor {f}");
+        // 2 ranks x 100 MB: still overflows but little crowding.
+        let f2 = m.contention_factor(2, 100_000_000);
+        assert!(f2 < f, "2-rank factor {f2} should be below 24-rank {f}");
+    }
+
+    #[test]
+    fn single_rank_never_penalized_much() {
+        let m = NetworkModel::default();
+        let f = m.contention_factor(1, 1_000_000_000);
+        assert!((f - 1.0).abs() < 1e-9, "solo rank factor {f}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the kaczmarz library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dimension mismatch between operands.
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+
+    /// An iterative routine failed to converge within its budget.
+    #[error("no convergence after {iterations} iterations (last residual {residual:.3e})")]
+    NoConvergence { iterations: usize, residual: f64 },
+
+    /// A solver diverged (error grew instead of shrinking).
+    #[error("solver diverged at iteration {iteration} (error {error:.3e})")]
+    Diverged { iteration: usize, error: f64 },
+
+    /// Invalid configuration or argument.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Missing AOT artifact (run `make artifacts`).
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    ArtifactMissing(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Filesystem / IO failure.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_dimension() {
+        let e = Error::Dimension("A is 3x4, x has 5".into());
+        assert!(e.to_string().contains("3x4"));
+    }
+
+    #[test]
+    fn error_display_no_convergence() {
+        let e = Error::NoConvergence { iterations: 10, residual: 0.5 };
+        let s = e.to_string();
+        assert!(s.contains("10"));
+        assert!(s.contains("5.000e-1"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,48 @@
+//! # kaczmarz — Parallel Randomized Kaczmarz for large-scale dense systems
+//!
+//! Full reproduction of *"Parallelization Strategies for the Randomized
+//! Kaczmarz Algorithm on Large-Scale Dense Systems"* (Ferreira, Acebrón,
+//! Monteiro, 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: sequential and parallel solvers,
+//!   a shared-memory execution engine (the paper's OpenMP side), a simulated
+//!   MPI layer with a network cost model (the paper's cluster side), the
+//!   experiment drivers for every figure/table, and the PJRT runtime that
+//!   executes AOT-compiled kernels.
+//! - **L2/L1 (python/compile)** — JAX update graphs and Pallas kernels,
+//!   lowered once to HLO text in `artifacts/` by `make artifacts`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use kaczmarz::data::DatasetBuilder;
+//! use kaczmarz::solvers::{rk::RkSolver, Solver, SolveOptions};
+//!
+//! let sys = DatasetBuilder::new(2000, 200).seed(1).consistent();
+//! let opts = SolveOptions::default().with_tolerance(1e-8);
+//! let result = RkSolver::new(42).solve(&sys, &opts);
+//! assert!(result.converged);
+//! ```
+//!
+//! See `examples/` for realistic workloads (CT reconstruction, camera
+//! calibration) and `rust/src/coordinator` for the paper's experiments.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod distributed;
+pub mod error;
+pub mod linalg;
+pub mod metrics;
+pub mod parallel;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+
+pub use error::{Error, Result};
+
+/// Crate version string (from Cargo).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

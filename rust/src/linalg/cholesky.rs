@@ -1,0 +1,144 @@
+//! Cholesky factorization of a symmetric positive-definite matrix.
+//!
+//! Used by the inverse power iteration: finding `σ_min(A)` for the optimal
+//! RKA relaxation parameter requires the *smallest* eigenvalue of `G = AᵀA`,
+//! which we obtain by iterating `G⁻¹` — i.e. solving `G z = v` repeatedly
+//! with a factorization computed once.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `G = L Lᵀ`.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factorize a symmetric positive-definite matrix.
+    ///
+    /// Returns `Error::InvalidArgument` if the matrix is not square or a
+    /// non-positive pivot appears (not SPD, up to roundoff).
+    pub fn new(g: &Matrix) -> Result<Self> {
+        if g.rows() != g.cols() {
+            return Err(Error::InvalidArgument(format!(
+                "cholesky needs a square matrix, got {}x{}",
+                g.rows(),
+                g.cols()
+            )));
+        }
+        let n = g.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // sum = G[i][j] - Σ_{k<j} L[i][k] L[j][k]
+                let mut sum = g[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(Error::InvalidArgument(format!(
+                            "matrix not positive definite (pivot {} at row {})",
+                            sum, i
+                        )));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower-triangular factor.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `G x = b` via forward + backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.l.rows();
+        if b.len() != n {
+            return Err(Error::Dimension(format!(
+                "cholesky solve: order {}, rhs len {}",
+                n,
+                b.len()
+            )));
+        }
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                sum -= row[k] * y[k];
+            }
+            y[i] = sum / row[i];
+        }
+        // Backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemv::gemv;
+
+    fn spd() -> Matrix {
+        // 4 2 1 / 2 5 3 / 1 3 6 — diagonally dominant, SPD.
+        Matrix::from_vec(3, 3, vec![4.0, 2.0, 1.0, 2.0, 5.0, 3.0, 1.0, 3.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let g = spd();
+        let ch = Cholesky::new(&g).unwrap();
+        let l = ch.factor();
+        let llt = l.matmul(&l.transpose()).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((llt[(i, j)] - g[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_roundtrips() {
+        let g = spd();
+        let ch = Cholesky::new(&g).unwrap();
+        let x_true = vec![1.0, -2.0, 0.5];
+        let b = gemv(&g, &x_true).unwrap();
+        let x = ch.solve(&b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eigenvalues 3, -1
+        assert!(Cholesky::new(&m).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let m = Matrix::zeros(2, 3);
+        assert!(Cholesky::new(&m).is_err());
+    }
+
+    #[test]
+    fn solve_rejects_bad_rhs() {
+        let ch = Cholesky::new(&spd()).unwrap();
+        assert!(ch.solve(&[1.0, 2.0]).is_err());
+    }
+}

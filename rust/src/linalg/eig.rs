@@ -1,0 +1,190 @@
+//! Extreme eigenvalues of symmetric matrices.
+//!
+//! The optimal RKA relaxation parameter (paper eq. 6) needs
+//! `s_min = σ²_min(A)/‖A‖²_F` and `s_max = σ²_max(A)/‖A‖²_F`, i.e. the
+//! extreme eigenvalues of `G = AᵀA`. The paper notes this computation is
+//! "considerably high" cost — Table 2 charges ~2500 s for it — and we
+//! reproduce both the value (power/inverse-power iteration) and the cost
+//! accounting (see `solvers::alpha`).
+
+use super::cholesky::Cholesky;
+use super::gemv::gemv_into;
+use super::matrix::Matrix;
+use super::vector::{dot, norm2, scale_in_place};
+use crate::error::{Error, Result};
+use crate::rng::Mt19937;
+
+/// Result of an eigenvalue iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct EigResult {
+    /// Converged eigenvalue estimate.
+    pub value: f64,
+    /// Iterations used.
+    pub iterations: usize,
+}
+
+fn random_unit_vector(n: usize, seed: u32) -> Vec<f64> {
+    let mut rng = Mt19937::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+    let nrm = norm2(&v);
+    scale_in_place(&mut v, 1.0 / nrm);
+    v
+}
+
+/// Largest eigenvalue of a symmetric matrix by power iteration.
+///
+/// Converges when two successive Rayleigh quotients agree to `tol`
+/// (relative). For `G = AᵀA` this yields `σ²_max(A)`.
+pub fn power_iteration(g: &Matrix, tol: f64, max_iter: usize) -> Result<EigResult> {
+    if g.rows() != g.cols() {
+        return Err(Error::InvalidArgument("power iteration needs square matrix".into()));
+    }
+    let n = g.rows();
+    let mut v = random_unit_vector(n, 0x9e3779b9);
+    let mut w = vec![0.0; n];
+    let mut lambda = 0.0f64;
+    for it in 1..=max_iter {
+        gemv_into(g, &v, &mut w);
+        let new_lambda = dot(&v, &w); // Rayleigh quotient (v normalized)
+        let nrm = norm2(&w);
+        if nrm == 0.0 {
+            return Ok(EigResult { value: 0.0, iterations: it });
+        }
+        for k in 0..n {
+            v[k] = w[k] / nrm;
+        }
+        if (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-300) {
+            return Ok(EigResult { value: new_lambda, iterations: it });
+        }
+        lambda = new_lambda;
+    }
+    Err(Error::NoConvergence { iterations: max_iter, residual: lambda })
+}
+
+/// Smallest eigenvalue of an SPD matrix by inverse power iteration.
+///
+/// Factorizes once with Cholesky, then iterates `G z = v`. For `G = AᵀA` of
+/// a full-rank `A` this yields `σ²_min(A)`.
+pub fn inverse_power_iteration(g: &Matrix, tol: f64, max_iter: usize) -> Result<EigResult> {
+    let chol = Cholesky::new(g)?;
+    let n = g.rows();
+    let mut v = random_unit_vector(n, 0x85ebca6b);
+    let mut mu = 0.0f64; // eigenvalue of G⁻¹
+    for it in 1..=max_iter {
+        let z = chol.solve(&v)?;
+        let new_mu = dot(&v, &z);
+        let nrm = norm2(&z);
+        for k in 0..n {
+            v[k] = z[k] / nrm;
+        }
+        if (new_mu - mu).abs() <= tol * new_mu.abs().max(1e-300) {
+            return Ok(EigResult { value: 1.0 / new_mu, iterations: it });
+        }
+        mu = new_mu;
+    }
+    Err(Error::NoConvergence { iterations: max_iter, residual: 1.0 / mu.max(1e-300) })
+}
+
+/// All eigenvalues of a symmetric matrix by the cyclic Jacobi method.
+///
+/// O(n³) per sweep — used as the *test oracle* for the iterative routines
+/// and for small systems in examples; never on a hot path.
+pub fn jacobi_eigenvalues(g: &Matrix, tol: f64, max_sweeps: usize) -> Result<Vec<f64>> {
+    if g.rows() != g.cols() {
+        return Err(Error::InvalidArgument("jacobi needs square matrix".into()));
+    }
+    let n = g.rows();
+    let mut a = g.clone();
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            let mut eig: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+            eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            return Ok(eig);
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    Err(Error::NoConvergence { iterations: max_sweeps, residual: f64::NAN })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sym() -> Matrix {
+        // Eigenvalues of [[2,1],[1,2]] are 3 and 1.
+        Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]).unwrap()
+    }
+
+    #[test]
+    fn power_finds_largest() {
+        let r = power_iteration(&sym(), 1e-12, 1000).unwrap();
+        assert!((r.value - 3.0).abs() < 1e-8, "got {}", r.value);
+    }
+
+    #[test]
+    fn inverse_power_finds_smallest() {
+        let r = inverse_power_iteration(&sym(), 1e-12, 1000).unwrap();
+        assert!((r.value - 1.0).abs() < 1e-8, "got {}", r.value);
+    }
+
+    #[test]
+    fn jacobi_finds_all() {
+        let eig = jacobi_eigenvalues(&sym(), 1e-12, 100).unwrap();
+        assert!((eig[0] - 3.0).abs() < 1e-10);
+        assert!((eig[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn iterative_matches_jacobi_on_random_gram() {
+        use crate::rng::Mt19937;
+        let mut rng = Mt19937::new(7);
+        let m = 30;
+        let n = 6;
+        let data: Vec<f64> = (0..m * n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let a = Matrix::from_vec(m, n, data).unwrap();
+        let g = a.gram();
+        let eig = jacobi_eigenvalues(&g, 1e-12, 200).unwrap();
+        let hi = power_iteration(&g, 1e-13, 5000).unwrap().value;
+        let lo = inverse_power_iteration(&g, 1e-13, 5000).unwrap().value;
+        assert!((hi - eig[0]).abs() / eig[0] < 1e-6, "hi {hi} vs {}", eig[0]);
+        assert!((lo - eig[n - 1]).abs() / eig[n - 1] < 1e-6, "lo {lo} vs {}", eig[n - 1]);
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let m = Matrix::zeros(2, 3);
+        assert!(power_iteration(&m, 1e-8, 10).is_err());
+        assert!(jacobi_eigenvalues(&m, 1e-8, 10).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Matrix-vector products.
+//!
+//! `gemv` (`y = A x`) is the CGLS workhorse; `gemv_transpose` (`y = Aᵀ x`)
+//! avoids materializing `Aᵀ` by accumulating row-scaled axpys, which keeps
+//! the access pattern row-major and cache-friendly.
+
+use super::matrix::Matrix;
+use super::vector::{axpy, dot};
+use crate::error::{Error, Result};
+
+/// `y = A x` (allocates the output).
+pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    if x.len() != a.cols() {
+        return Err(Error::Dimension(format!(
+            "gemv: A is {}x{}, x has len {}",
+            a.rows(),
+            a.cols(),
+            x.len()
+        )));
+    }
+    let mut y = vec![0.0; a.rows()];
+    gemv_into(a, x, &mut y);
+    Ok(y)
+}
+
+/// `y = A x` into a caller-provided buffer (no allocation; hot path).
+pub fn gemv_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.cols());
+    debug_assert_eq!(y.len(), a.rows());
+    for (yi, row) in y.iter_mut().zip(a.rows_iter()) {
+        *yi = dot(row, x);
+    }
+}
+
+/// `y = Aᵀ x` (allocates the output).
+pub fn gemv_transpose(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    if x.len() != a.rows() {
+        return Err(Error::Dimension(format!(
+            "gemv_transpose: A is {}x{}, x has len {}",
+            a.rows(),
+            a.cols(),
+            x.len()
+        )));
+    }
+    let mut y = vec![0.0; a.cols()];
+    gemv_transpose_into(a, x, &mut y);
+    Ok(y)
+}
+
+/// `y = Aᵀ x` into a caller-provided buffer.
+///
+/// Walks A row-by-row (`y += x_i * A^(i)`), never touching a column stride.
+pub fn gemv_transpose_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.rows());
+    debug_assert_eq!(y.len(), a.cols());
+    y.fill(0.0);
+    for (xi, row) in x.iter().zip(a.rows_iter()) {
+        if *xi != 0.0 {
+            axpy(*xi, row, y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn gemv_basic() {
+        let y = gemv(&a(), &[1.0, 0.0, -1.0]).unwrap();
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn gemv_rejects_bad_shape() {
+        assert!(gemv(&a(), &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn gemv_transpose_basic() {
+        let y = gemv_transpose(&a(), &[1.0, -1.0]).unwrap();
+        assert_eq!(y, vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn gemv_transpose_rejects_bad_shape() {
+        assert!(gemv_transpose(&a(), &[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn transpose_consistency() {
+        // gemv_transpose(A, x) == gemv(Aᵀ, x)
+        let m = a();
+        let x = [0.5, -2.5];
+        let via_t = gemv(&m.transpose(), &x).unwrap();
+        let direct = gemv_transpose(&m, &x).unwrap();
+        for (u, v) in via_t.iter().zip(&direct) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+}

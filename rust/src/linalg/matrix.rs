@@ -1,0 +1,307 @@
+//! Row-major dense matrix.
+//!
+//! Row-major layout is deliberate: every Kaczmarz variant touches whole rows
+//! (`<A^(i), x>` then `x += scale * A^(i)`), so a row must be a contiguous
+//! slice. This is the same choice the paper's C++ implementation makes.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero matrix of shape `rows x cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a flat row-major buffer.
+    ///
+    /// Returns an error if `data.len() != rows * cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Dimension(format!(
+                "buffer of len {} cannot be a {}x{} matrix",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Matrix { data, rows, cols })
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Number of rows (`m` in the paper).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (`n` in the paper).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Contiguous view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Iterator over rows as slices.
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.cols)
+    }
+
+    /// Flat row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Flat mutable row-major buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Squared Euclidean norm of every row: `‖A^(i)‖²`.
+    ///
+    /// Precomputed once per system; the Kaczmarz scale factor divides by it
+    /// on every iteration.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        self.rows_iter().map(super::vector::norm2_sq).collect()
+    }
+
+    /// Squared Frobenius norm `‖A‖²_F = Σ ‖A^(i)‖²`.
+    pub fn frobenius_sq(&self) -> f64 {
+        super::vector::norm2_sq(&self.data)
+    }
+
+    /// "Crop" the top-left `rows x cols` submatrix.
+    ///
+    /// The paper generates its largest matrix once and derives all smaller
+    /// systems by cropping so matrices of different sizes stay comparable
+    /// (§3.1); this implements that derivation.
+    pub fn crop(&self, rows: usize, cols: usize) -> Result<Matrix> {
+        if rows > self.rows || cols > self.cols {
+            return Err(Error::Dimension(format!(
+                "cannot crop {}x{} out of {}x{}",
+                rows, cols, self.rows, self.cols
+            )));
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
+        }
+        Ok(out)
+    }
+
+    /// Contiguous block of rows `[start, end)` as a new matrix.
+    pub fn row_block(&self, start: usize, end: usize) -> Result<Matrix> {
+        if start > end || end > self.rows {
+            return Err(Error::Dimension(format!(
+                "row block [{start}, {end}) out of range for {} rows",
+                self.rows
+            )));
+        }
+        Ok(Matrix {
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+            rows: end - start,
+            cols: self.cols,
+        })
+    }
+
+    /// Gram matrix `AᵀA` (`n x n`).
+    ///
+    /// Used by the `alpha*` computation (σ² of A are eigenvalues of AᵀA) and
+    /// by CGLS tests. Accumulates rank-1 row outer products, which walks `A`
+    /// exactly once in row-major order.
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for row in self.rows_iter() {
+            // Only the upper triangle; mirror at the end.
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Transpose (used by test oracles; the solvers never materialize Aᵀ).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Dense matmul (test oracle only — O(mnk), not a hot path).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Dimension(format!(
+                "{}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for j in 0..brow.len() {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn shape_and_index() {
+        let m = sample();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn row_views() {
+        let m = sample();
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.rows_iter().count(), 2);
+    }
+
+    #[test]
+    fn row_mut_writes_through() {
+        let mut m = sample();
+        m.row_mut(1)[0] = -4.0;
+        assert_eq!(m[(1, 0)], -4.0);
+    }
+
+    #[test]
+    fn row_norms_and_frobenius() {
+        let m = sample();
+        let norms = m.row_norms_sq();
+        assert_eq!(norms, vec![14.0, 77.0]);
+        assert_eq!(m.frobenius_sq(), 91.0);
+    }
+
+    #[test]
+    fn crop_top_left() {
+        let m = sample();
+        let c = m.crop(1, 2).unwrap();
+        assert_eq!(c.rows(), 1);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c.row(0), &[1.0, 2.0]);
+        assert!(m.crop(3, 1).is_err());
+    }
+
+    #[test]
+    fn row_block_extracts() {
+        let m = sample();
+        let b = m.row_block(1, 2).unwrap();
+        assert_eq!(b.rows(), 1);
+        assert_eq!(b.row(0), &[4.0, 5.0, 6.0]);
+        assert!(m.row_block(1, 3).is_err());
+    }
+
+    #[test]
+    fn gram_matches_transpose_matmul() {
+        let m = sample();
+        let g = m.gram();
+        let expect = m.transpose().matmul(&m).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((g[(i, j)] - expect[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let m = sample();
+        let id = Matrix::identity(3);
+        let p = m.matmul(&id).unwrap();
+        assert_eq!(p, m);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+}

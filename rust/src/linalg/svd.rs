@@ -1,0 +1,104 @@
+//! Singular values via one-sided Jacobi.
+//!
+//! Test oracle for `solvers::alpha` (which uses the cheaper power /
+//! inverse-power iterations on `AᵀA`). One-sided Jacobi orthogonalizes the
+//! *columns* of A by plane rotations; at convergence the column norms are
+//! the singular values. Robust for the small/medium matrices the tests use.
+
+use super::matrix::Matrix;
+use super::vector::{dot, norm2};
+use crate::error::{Error, Result};
+
+/// All singular values of `a`, descending.
+///
+/// `tol` bounds the normalized off-diagonal inner products; a few sweeps
+/// (typically < 15) suffice for random dense matrices.
+pub fn jacobi_singular_values(a: &Matrix, tol: f64, max_sweeps: usize) -> Result<Vec<f64>> {
+    if a.rows() < a.cols() {
+        return Err(Error::InvalidArgument(
+            "one-sided jacobi expects m >= n (overdetermined, as in the paper)".into(),
+        ));
+    }
+    let m = a.rows();
+    let n = a.cols();
+    // Work on columns: transpose into column-major (each "row" of `cols` is a column of A).
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a[(i, j)]).collect())
+        .collect();
+
+    for _sweep in 0..max_sweeps {
+        let mut converged = true;
+        for p in 0..n {
+            for q in p + 1..n {
+                let app = dot(&cols[p], &cols[p]);
+                let aqq = dot(&cols[q], &cols[q]);
+                let apq = dot(&cols[p], &cols[q]);
+                if apq.abs() > tol * (app * aqq).sqrt().max(1e-300) {
+                    converged = false;
+                    // Jacobi rotation that zeroes the (p,q) inner product.
+                    let tau = (aqq - app) / (2.0 * apq);
+                    let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = c * t;
+                    for i in 0..m {
+                        let vp = cols[p][i];
+                        let vq = cols[q][i];
+                        cols[p][i] = c * vp - s * vq;
+                        cols[q][i] = s * vp + c * vq;
+                    }
+                }
+            }
+        }
+        if converged {
+            let mut sv: Vec<f64> = cols.iter().map(|c| norm2(c)).collect();
+            sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            return Ok(sv);
+        }
+    }
+    Err(Error::NoConvergence { iterations: max_sweeps, residual: f64::NAN })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Mt19937;
+
+    #[test]
+    fn diagonal_matrix_sv() {
+        let a = Matrix::from_vec(3, 2, vec![3.0, 0.0, 0.0, -4.0, 0.0, 0.0]).unwrap();
+        let sv = jacobi_singular_values(&a, 1e-14, 50).unwrap();
+        assert!((sv[0] - 4.0).abs() < 1e-12);
+        assert!((sv[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sv_squared_match_gram_eigenvalues() {
+        let mut rng = Mt19937::new(99);
+        let (m, n) = (25, 5);
+        let data: Vec<f64> = (0..m * n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let a = Matrix::from_vec(m, n, data).unwrap();
+        let sv = jacobi_singular_values(&a, 1e-13, 100).unwrap();
+        let eig = crate::linalg::eig::jacobi_eigenvalues(&a.gram(), 1e-12, 200).unwrap();
+        for (s, e) in sv.iter().zip(&eig) {
+            assert!((s * s - e).abs() < 1e-8 * e.max(1.0), "σ²={} vs λ={}", s * s, e);
+        }
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // Σ σ² == ‖A‖²_F
+        let mut rng = Mt19937::new(3);
+        let (m, n) = (12, 4);
+        let data: Vec<f64> = (0..m * n).map(|_| rng.next_f64() - 0.5).collect();
+        let a = Matrix::from_vec(m, n, data).unwrap();
+        let sv = jacobi_singular_values(&a, 1e-13, 100).unwrap();
+        let sum_sq: f64 = sv.iter().map(|s| s * s).sum();
+        assert!((sum_sq - a.frobenius_sq()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let a = Matrix::zeros(2, 3);
+        assert!(jacobi_singular_values(&a, 1e-12, 10).is_err());
+    }
+}

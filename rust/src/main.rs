@@ -1,0 +1,145 @@
+//! `kaczmarz` — CLI for the parallel Randomized Kaczmarz reproduction.
+//!
+//! Subcommands:
+//!   list                         list the paper's experiments
+//!   experiment <id> [--scale f] [--seeds k] [--out dir]
+//!                                run one experiment (fig1..fig14, table1/2)
+//!   all [--scale f] [--out dir]  run the full evaluation suite
+//!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n] ...
+//!                                one-off solve on a generated system
+//!   info                         version, core count, artifact status
+
+use kaczmarz::cli::Args;
+use kaczmarz::coordinator::{find, registry, Scale};
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::parallel::{AsyRkSolver, ParallelRka, ParallelRkab};
+use kaczmarz::runtime::{default_artifacts_dir, Manifest, PjrtRkabSolver};
+use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, SolveResult, Solver};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "list" => cmd_list(),
+        "experiment" => cmd_experiment(&args),
+        "all" => cmd_all(&args),
+        "solve" => cmd_solve(&args),
+        "info" | "" => cmd_info(),
+        other => {
+            eprintln!("unknown command '{other}'; try: list, experiment, all, solve, info");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn scale_from(args: &Args) -> Scale {
+    Scale {
+        factor: args.get_parse("scale", 1.0),
+        seeds: args.get_parse("seeds", 5u32),
+    }
+}
+
+fn cmd_list() {
+    println!("{:<8} {}", "id", "title");
+    for e in registry() {
+        println!("{:<8} {}", e.id(), e.title());
+    }
+}
+
+fn cmd_experiment(args: &Args) {
+    let Some(id) = args.positional.first() else {
+        eprintln!("usage: kaczmarz experiment <id> [--scale f] [--seeds k] [--out dir]");
+        std::process::exit(2);
+    };
+    let Some(exp) = find(id) else {
+        eprintln!("no experiment '{id}'; see `kaczmarz list`");
+        std::process::exit(2);
+    };
+    let scale = scale_from(args);
+    eprintln!("running {} (scale {}, seeds {})...", exp.id(), scale.factor, scale.seeds);
+    let report = exp.run(scale);
+    let out = PathBuf::from(args.get("out", "results"));
+    let path = report.write(&out, exp.id()).expect("write report");
+    println!("{}", report.to_markdown());
+    eprintln!("wrote {}", path.display());
+}
+
+fn cmd_all(args: &Args) {
+    let scale = scale_from(args);
+    let out = PathBuf::from(args.get("out", "results"));
+    for exp in registry() {
+        eprintln!("=== {} ===", exp.id());
+        let report = exp.run(scale);
+        let path = report.write(&out, exp.id()).expect("write report");
+        eprintln!("wrote {}", path.display());
+    }
+    eprintln!("all experiments written to {}", out.display());
+}
+
+fn print_result(name: &str, sys_err: f64, r: &SolveResult) {
+    println!(
+        "{name}: iterations={} rows_used={} converged={} diverged={} time={:.3}s err^2={:.3e}",
+        r.iterations, r.rows_used, r.converged, r.diverged, r.seconds, sys_err
+    );
+}
+
+fn cmd_solve(args: &Args) {
+    let m = args.get_parse("rows", 2000usize);
+    let n = args.get_parse("cols", 200usize);
+    let q = args.get_parse("q", 4usize);
+    let bs = args.get_parse("bs", n);
+    let alpha = args.get_parse("alpha", 1.0f64);
+    let seed = args.get_parse("seed", 1u32);
+    let method = args.get("method", "rk");
+    let inconsistent = args.has("inconsistent");
+
+    eprintln!("generating {m} x {n} {} system...", if inconsistent { "inconsistent" } else { "consistent" });
+    let builder = DatasetBuilder::new(m, n).seed(seed);
+    let mut sys = if inconsistent { builder.inconsistent() } else { builder.consistent() };
+    if inconsistent {
+        kaczmarz::solvers::cgls::attach_least_squares(&mut sys, 1e-12, 100_000)
+            .expect("CGLS failed");
+    }
+
+    let opts = SolveOptions::default()
+        .with_tolerance(args.get_parse("tolerance", 1e-8))
+        .with_max_iterations(args.get_parse("max-iterations", 100_000_000));
+
+    let r = match method.as_str() {
+        "ck" => CkSolver::new().solve(&sys, &opts),
+        "rk" => RkSolver::new(seed).solve(&sys, &opts),
+        "rka" => RkaSolver::new(seed, q, alpha).solve(&sys, &opts),
+        "rkab" => RkabSolver::new(seed, q, bs, alpha).solve(&sys, &opts),
+        "rka-par" => ParallelRka::new(seed, q, alpha).solve(&sys, &opts),
+        "rkab-par" => ParallelRkab::new(seed, q, bs, alpha).solve(&sys, &opts),
+        "asyrk" => AsyRkSolver::new(seed, q).solve(&sys, &opts),
+        "pjrt" => {
+            let dir = default_artifacts_dir();
+            let solver = PjrtRkabSolver::new(&dir, seed, q, bs, n, alpha)
+                .expect("PJRT solver (run `make artifacts`; shape must be exported)");
+            solver.solve(&sys, &opts).expect("PJRT solve")
+        }
+        other => {
+            eprintln!("unknown method '{other}'");
+            std::process::exit(2);
+        }
+    };
+    print_result(&method, sys.error_sq(&r.x), &r);
+}
+
+fn cmd_info() {
+    println!("kaczmarz {} — parallel Randomized Kaczmarz reproduction", kaczmarz::version());
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(0)
+    );
+    let dir = default_artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => println!("artifacts: {} entries at {}", m.entries().len(), dir.display()),
+        Err(_) => println!("artifacts: NOT BUILT (run `make artifacts`) at {}", dir.display()),
+    }
+}

@@ -1,0 +1,163 @@
+//! Measurement utilities: timers, step-sampled histories, summary stats.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Step-sampled history of (iteration, error, residual), mirroring the
+/// paper's §3.5 protocol ("stored the error and residual every `step`
+/// iterations").
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    /// Sampling period; 0 disables recording.
+    pub step: usize,
+    /// Recorded iteration numbers.
+    pub iterations: Vec<usize>,
+    /// `‖x^(k) - x_ref‖` at each recorded iteration.
+    pub errors: Vec<f64>,
+    /// `‖A x^(k) - b‖` at each recorded iteration.
+    pub residuals: Vec<f64>,
+}
+
+impl History {
+    /// History that records every `step` iterations (0 = never).
+    pub fn every(step: usize) -> Self {
+        History { step, ..Default::default() }
+    }
+
+    /// Should iteration `k` be recorded?
+    #[inline]
+    pub fn due(&self, k: usize) -> bool {
+        self.step != 0 && k % self.step == 0
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, k: usize, error: f64, residual: f64) {
+        self.iterations.push(k);
+        self.errors.push(error);
+        self.residuals.push(residual);
+    }
+
+    /// Number of samples taken.
+    pub fn len(&self) -> usize {
+        self.iterations.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.iterations.is_empty()
+    }
+
+    /// Minimum recorded error (the convergence-horizon estimate).
+    pub fn min_error(&self) -> Option<f64> {
+        self.errors.iter().copied().fold(None, |m, e| match m {
+            None => Some(e),
+            Some(v) => Some(v.min(e)),
+        })
+    }
+
+    /// Mean of the last `k` recorded errors (the stabilized horizon).
+    pub fn tail_error(&self, k: usize) -> Option<f64> {
+        if self.errors.is_empty() {
+            return None;
+        }
+        let tail = &self.errors[self.errors.len().saturating_sub(k)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    if values.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Median of a sample (copies + sorts; fine for experiment-sized data).
+pub fn median(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 0 {
+        (v[mid - 1] + v[mid]) / 2.0
+    } else {
+        v[mid]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.seconds() >= 0.004);
+    }
+
+    #[test]
+    fn history_due_and_record() {
+        let mut h = History::every(10);
+        assert!(h.due(0));
+        assert!(!h.due(5));
+        assert!(h.due(20));
+        h.record(0, 1.0, 2.0);
+        h.record(10, 0.5, 1.0);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.min_error(), Some(0.5));
+    }
+
+    #[test]
+    fn history_disabled() {
+        let h = History::every(0);
+        assert!(!h.due(0));
+        assert!(h.is_empty());
+        assert_eq!(h.min_error(), None);
+    }
+
+    #[test]
+    fn tail_error_averages_last_k() {
+        let mut h = History::every(1);
+        for (i, e) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            h.record(i, *e, 0.0);
+        }
+        assert_eq!(h.tail_error(2), Some(1.5));
+        assert_eq!(h.tail_error(100), Some(2.5));
+    }
+
+    #[test]
+    fn stats() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(m, 5.0);
+        assert_eq!(s, 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

@@ -1,0 +1,185 @@
+//! AsyRK — the asynchronous (HOGWILD!-style) parallel RK of Liu, Wright &
+//! Sridhar, reviewed in §2.3.3 of the paper.
+//!
+//! Threads never synchronize: each owns a partition of the rows, samples
+//! them *without replacement* (reshuffling after each full scan, as the
+//! original paper found superior), reads the shared iterate racily, and
+//! applies its update with per-entry atomic adds.
+//!
+//! AsyRK was designed for **sparse** systems, where concurrent updates
+//! rarely touch the same entries of `x`. On the dense systems studied here
+//! every update touches every entry, so the "memory overwrites are minimal"
+//! assumption collapses — this implementation exists as the baseline that
+//! demonstrates exactly that (its convergence degrades with thread count and
+//! its atomic traffic makes it slow), motivating the paper's synchronous
+//! RKA/RKAB line instead.
+
+use super::shared::AtomicF64Vec;
+use crate::data::LinearSystem;
+use crate::metrics::{History, Stopwatch};
+use crate::rng::{derive_seed, Mt19937};
+use crate::solvers::{SolveOptions, SolveResult, Solver};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Lock-free asynchronous RK (HOGWILD! scheme).
+pub struct AsyRkSolver {
+    /// Base RNG seed.
+    pub seed: u32,
+    /// Thread count.
+    pub threads: usize,
+    /// Step size multiplier (the AsyRK theory requires a conservative step;
+    /// 1.0 reproduces plain projections).
+    pub step: f64,
+}
+
+impl AsyRkSolver {
+    /// AsyRK with full projection steps.
+    pub fn new(seed: u32, threads: usize) -> Self {
+        assert!(threads >= 1);
+        AsyRkSolver { seed, threads, step: 1.0 }
+    }
+
+    /// Override the step size.
+    pub fn with_step(mut self, step: f64) -> Self {
+        assert!(step > 0.0 && step <= 1.0);
+        self.step = step;
+        self
+    }
+}
+
+impl Solver for AsyRkSolver {
+    fn name(&self) -> &'static str {
+        "AsyRK"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let q = self.threads;
+        let x = AtomicF64Vec::zeros(n);
+        let stop = AtomicBool::new(false);
+        let total_updates = AtomicUsize::new(0);
+        let initial_err = system.error_sq(&vec![0.0; n]);
+
+        // Monitor cadence: check convergence every `check_every` global
+        // updates (the async loop has no natural iteration boundary).
+        let check_every = (q * 32).max(64);
+        let budget = opts.fixed_iterations.unwrap_or(opts.max_iterations);
+
+        let sw = Stopwatch::start();
+        let mut history = History::every(opts.history_step);
+        let mut converged = false;
+        let mut diverged = false;
+        std::thread::scope(|scope| {
+            // Worker threads: the HOGWILD loop.
+            for t in 0..q {
+                let x = &x;
+                let stop = &stop;
+                let total_updates = &total_updates;
+                scope.spawn(move || {
+                    let mut rng = Mt19937::new(derive_seed(self.seed, t));
+                    let (lo, hi) = system.row_partition(t, q);
+                    // Sampling without replacement: shuffle own rows, scan,
+                    // reshuffle (the AsyRK recipe).
+                    let mut order: Vec<usize> = (lo..hi).collect();
+                    rng.shuffle(&mut order);
+                    let mut pos = 0usize;
+                    let mut xbuf = vec![0.0; n];
+                    while !stop.load(Ordering::Relaxed) {
+                        if pos == order.len() {
+                            rng.shuffle(&mut order);
+                            pos = 0;
+                        }
+                        let i = order[pos];
+                        pos += 1;
+                        let row = system.a.row(i);
+                        // Racy read of x (the HOGWILD ingredient).
+                        x.snapshot_into(&mut xbuf);
+                        let scale = self.step * (system.b[i] - crate::linalg::dot(row, &xbuf))
+                            / system.row_norms_sq[i];
+                        // Lock-free update: per-entry atomic adds.
+                        for (j, &rj) in row.iter().enumerate() {
+                            x.add(j, scale * rj);
+                        }
+                        total_updates.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            // Monitor thread (this thread): stopping test + history.
+            let mut xbuf = vec![0.0; n];
+            let mut last_recorded = usize::MAX;
+            loop {
+                let done = total_updates.load(Ordering::Relaxed);
+                x.snapshot_into(&mut xbuf);
+                let err = system.error_sq(&xbuf);
+                let tick = if history.step > 0 { done / history.step } else { 0 };
+                if history.step > 0 && tick != last_recorded {
+                    last_recorded = tick;
+                    history.record(done, err.sqrt(), system.residual_norm(&xbuf));
+                }
+                if opts.fixed_iterations.is_none() && err < opts.tolerance {
+                    converged = true;
+                    break;
+                }
+                if err > initial_err * opts.divergence_factor && initial_err > 0.0 {
+                    diverged = true;
+                    break;
+                }
+                if done >= budget {
+                    converged = opts.fixed_iterations.is_some();
+                    break;
+                }
+                // Light backoff so the monitor does not saturate a core.
+                for _ in 0..check_every {
+                    std::hint::spin_loop();
+                }
+            }
+            stop.store(true, Ordering::SeqCst);
+        });
+        let seconds = sw.seconds();
+        let iterations = total_updates.load(Ordering::SeqCst);
+
+        SolveResult {
+            x: x.snapshot(),
+            iterations,
+            converged,
+            diverged,
+            seconds,
+            rows_used: iterations,
+            history,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+
+    #[test]
+    fn converges_single_thread() {
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let r = AsyRkSolver::new(3, 1).solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-6);
+    }
+
+    #[test]
+    fn converges_multithreaded_on_small_system() {
+        // Dense HOGWILD still converges (slowly) at low thread counts.
+        let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
+        let opts = SolveOptions::default().with_tolerance(1e-6).with_max_iterations(2_000_000);
+        let r = AsyRkSolver::new(3, 4).solve(&sys, &opts);
+        assert!(r.converged, "async run did not converge in {} updates", r.iterations);
+    }
+
+    #[test]
+    fn respects_update_budget() {
+        let sys = DatasetBuilder::new(100, 8).seed(3).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(5_000);
+        let r = AsyRkSolver::new(3, 2).solve(&sys, &opts);
+        // Async workers overshoot by whatever lands between monitor checks;
+        // it must be the same order of magnitude, not unbounded.
+        assert!(r.iterations >= 5_000);
+        assert!(r.iterations < 4 * 5_000, "overshoot {}", r.iterations);
+    }
+}

@@ -1,0 +1,228 @@
+//! Block-sequential parallelization of RK — §3.2 of the paper.
+//!
+//! One RK iteration at a time (sequential over iterations), but the two O(n)
+//! pieces *inside* the iteration are split across threads:
+//!
+//! - the dot product `<A^(row), x>` — an `omp reduce(+)` (each thread sums a
+//!   chunk, partials are combined);
+//! - the update `x += scale * A^(row)` — an `omp for` over entries.
+//!
+//! The paper's finding, which this module reproduces in Fig. 2, is that the
+//! per-iteration work (O(n)) is too small to amortize two barrier crossings,
+//! so there is *no* speedup for small n and a poor one for large n.
+
+use super::shared::{SharedSlice, SpinBarrier};
+use crate::data::LinearSystem;
+use crate::linalg::vector::dot;
+use crate::metrics::{History, Stopwatch};
+use crate::rng::{AliasTable, Mt19937};
+use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Block-sequential RK (every iteration's dot/update parallelized).
+pub struct BlockSequentialRk {
+    /// RNG seed (one stream — row choice is shared by all threads).
+    pub seed: u32,
+    /// Thread count.
+    pub threads: usize,
+    /// Relaxation parameter.
+    pub relaxation: f64,
+}
+
+impl BlockSequentialRk {
+    /// Block-sequential RK with unit relaxation.
+    pub fn new(seed: u32, threads: usize) -> Self {
+        assert!(threads >= 1);
+        BlockSequentialRk { seed, threads, relaxation: 1.0 }
+    }
+}
+
+struct Region {
+    x: SharedSlice,
+    /// Per-thread partial dot products (padded to a cache line each to avoid
+    /// false sharing — 8 f64 = 64 bytes).
+    partials: SharedSlice,
+    /// Row chosen for the current iteration (published by thread 0).
+    row: AtomicUsize,
+    /// Bits of the combined scale factor (published by thread 0).
+    scale_bits: AtomicU64,
+    barrier: SpinBarrier,
+    stop: AtomicBool,
+    converged: AtomicBool,
+    diverged: AtomicBool,
+}
+
+const PAD: usize = 8; // one cache line of f64 per thread
+
+impl Solver for BlockSequentialRk {
+    fn name(&self) -> &'static str {
+        "RK-block-seq"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let q = self.threads;
+        let region = Region {
+            x: SharedSlice::zeros(n),
+            partials: SharedSlice::zeros(q * PAD),
+            row: AtomicUsize::new(0),
+            scale_bits: AtomicU64::new(0),
+            barrier: SpinBarrier::new(q),
+            stop: AtomicBool::new(false),
+            converged: AtomicBool::new(false),
+            diverged: AtomicBool::new(false),
+        };
+        let initial_err = system.error_sq(&vec![0.0; n]);
+        let timed = opts.fixed_iterations.is_some();
+
+        let sw = Stopwatch::start();
+        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(q);
+            for t in 0..q {
+                let region = &region;
+                handles.push(scope.spawn(move || {
+                    self.worker(t, system, opts, region, initial_err, timed)
+                }));
+            }
+            for h in handles {
+                histories.push(h.join().expect("worker panicked"));
+            }
+        });
+        let seconds = sw.seconds();
+
+        let (history, iterations) =
+            histories.into_iter().flatten().next().expect("thread 0 reports history");
+        SolveResult {
+            x: region.x.into_vec(),
+            iterations,
+            converged: region.converged.load(Ordering::SeqCst),
+            diverged: region.diverged.load(Ordering::SeqCst),
+            seconds,
+            rows_used: iterations,
+            history,
+        }
+    }
+}
+
+impl BlockSequentialRk {
+    fn worker(
+        &self,
+        t: usize,
+        system: &LinearSystem,
+        opts: &SolveOptions,
+        region: &Region,
+        initial_err: f64,
+        timed: bool,
+    ) -> Option<(History, usize)> {
+        let q = self.threads;
+        // Row sampling is *shared* (one RK chain): thread 0 draws, publishes.
+        let mut rng = Mt19937::new(self.seed);
+        let dist = if t == 0 { Some(AliasTable::new(system.sampling_weights())) } else { None };
+        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
+        let mut k = 0usize;
+        let (lo, hi) = region.x.chunk(t, q);
+
+        loop {
+            region.barrier.wait(); // (A) previous update complete
+            if t == 0 {
+                // SAFETY: all writers passed barrier (A); x is stable.
+                let x = unsafe { region.x.as_ref_unchecked() };
+                let err = if !timed || history.due(k) { system.error_sq(x) } else { f64::NAN };
+                if history.due(k) {
+                    history.record(k, err.sqrt(), system.residual_norm(x));
+                }
+                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                region.converged.store(c, Ordering::SeqCst);
+                region.diverged.store(d, Ordering::SeqCst);
+                region.stop.store(stop, Ordering::SeqCst);
+                if !stop {
+                    let i = dist.as_ref().unwrap().sample(&mut rng);
+                    region.row.store(i, Ordering::SeqCst);
+                }
+            }
+            region.barrier.wait(); // (B) row/stop published
+            if region.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let i = region.row.load(Ordering::SeqCst);
+            let row = system.a.row(i);
+
+            // Parallel dot: chunked partial sums (`omp reduce`).
+            {
+                // SAFETY: x read-only here; partials slot t is thread-private.
+                let x = unsafe { region.x.as_ref_unchecked() };
+                let partials = unsafe { region.partials.as_mut_unchecked() };
+                partials[t * PAD] = dot(&row[lo..hi], &x[lo..hi]);
+            }
+            region.barrier.wait(); // (C) partials ready
+            if t == 0 {
+                // Combine partials and publish the scale factor.
+                let partials = unsafe { region.partials.as_ref_unchecked() };
+                let mut s = 0.0;
+                for r in 0..q {
+                    s += partials[r * PAD];
+                }
+                let scale = self.relaxation * (system.b[i] - s) / system.row_norms_sq[i];
+                region.scale_bits.store(scale.to_bits(), Ordering::SeqCst);
+            }
+            region.barrier.wait(); // (D) scale published
+            let scale = f64::from_bits(region.scale_bits.load(Ordering::SeqCst));
+            {
+                // Parallel update: disjoint chunks (`omp for`).
+                // SAFETY: chunks disjoint.
+                let x = unsafe { region.x.as_mut_unchecked() };
+                for j in lo..hi {
+                    x[j] += scale * row[j];
+                }
+            }
+            k += 1;
+        }
+
+        if t == 0 {
+            Some((history, k))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rk::RkSolver;
+
+    #[test]
+    fn converges_like_rk() {
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let r = BlockSequentialRk::new(42, 4).solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-8);
+    }
+
+    #[test]
+    fn identical_chain_to_sequential_rk() {
+        // Same seed => same rows => numerically near-identical iterates
+        // (chunked dot reassociates the sum, so allow tiny drift).
+        let sys = DatasetBuilder::new(150, 8).seed(2).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(400);
+        let par = BlockSequentialRk::new(11, 3).solve(&sys, &opts);
+        let seq = RkSolver::new(11).solve(&sys, &opts);
+        let drift: f64 =
+            par.x.iter().zip(&seq.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        let scale = seq.x.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        assert!(drift < 1e-8 * scale.max(1.0), "drift {drift}");
+    }
+
+    #[test]
+    fn iteration_count_matches_rk_statistically() {
+        // The chain is the same algorithm; iteration counts at equal seeds
+        // must be exactly equal (rows identical).
+        let sys = DatasetBuilder::new(200, 10).seed(3).consistent();
+        let opts = SolveOptions::default();
+        let par = BlockSequentialRk::new(7, 2).solve(&sys, &opts);
+        let seq = RkSolver::new(7).solve(&sys, &opts);
+        assert_eq!(par.iterations, seq.iterations);
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared-memory parallel engine — the paper's OpenMP side, rebuilt on
+//! `std::thread`.
+//!
+//! Every method here runs the *whole iteration loop inside one parallel
+//! region* (threads are spawned once per solve, exactly like an OpenMP
+//! `parallel` block around the paper's Algorithms 1/3), synchronizing with
+//! barriers and a mutex-backed critical section:
+//!
+//! - [`rka_shared`] — Algorithm 1 (RKA) with the paper's four gather
+//!   strategies: critical section, atomic entries, reduction, and the
+//!   (q x n) gather matrix of Fig. 3;
+//! - [`rkab_shared`] — Algorithm 3 (RKAB);
+//! - [`block_seq`] — §3.2, the block-sequential attempt that parallelizes
+//!   the dot product and solution update *inside* each RK iteration;
+//! - [`asyrk`] — the HOGWILD!-style lock-free AsyRK baseline (§2.3.3);
+//! - [`shared`] — the unsafe-but-disciplined shared buffers and the spin
+//!   barrier the engine is built on.
+
+pub mod asyrk;
+pub mod block_seq;
+pub mod rka_shared;
+pub mod rkab_shared;
+pub mod shared;
+
+pub use asyrk::AsyRkSolver;
+pub use block_seq::BlockSequentialRk;
+pub use rka_shared::{AveragingStrategy, ParallelRka};
+pub use rkab_shared::ParallelRkab;
+pub use shared::{SharedSlice, SpinBarrier};

@@ -1,0 +1,387 @@
+//! Parallel RKA — the paper's Algorithm 1, with all four result-gathering
+//! strategies of §3.3.1.
+//!
+//! The whole iteration loop runs inside one parallel region: `q` threads
+//! each sample a row, compute the scaled projection against the *previous*
+//! iterate `x_prev`, and gather their contributions into the shared `x`.
+//! The paper's central finding is that this gather is the bottleneck — it is
+//! sequential under the critical section and cache-hostile under every
+//! alternative — and this module reproduces all four variants so the claim
+//! can be measured:
+//!
+//! - [`AveragingStrategy::Critical`] — Algorithm 1 as printed: a mutex
+//!   serializes `x += scale * A^(row)` (the paper's default and fastest);
+//! - [`AveragingStrategy::Atomic`] — per-entry atomic adds, each thread
+//!   starting at a different offset; false sharing at chunk boundaries makes
+//!   it slower (paper bullet 1);
+//! - [`AveragingStrategy::Reduce`] — OpenMP-`reduction` semantics: zero `x`,
+//!   accumulate private copies, combine; the zeroing + extra traffic makes
+//!   it slower (paper bullet 2);
+//! - [`AveragingStrategy::MatrixGather`] — the Fig. 3 (q x n) matrix: each
+//!   thread writes its full estimate to a row, then all threads average
+//!   disjoint column chunks; the extra barrier + cross-thread cache lines
+//!   make it slower (paper bullet 3).
+
+use super::shared::{AtomicF64Vec, SharedSlice, SpinBarrier};
+use crate::data::LinearSystem;
+use crate::linalg::vector::dot;
+use crate::metrics::{History, Stopwatch};
+use crate::solvers::rka::Weights;
+use crate::solvers::sampling::{RowSampler, SamplingScheme};
+use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// How threads combine their projections into the shared iterate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AveragingStrategy {
+    /// Mutex-guarded sequential gather (Algorithm 1 as printed).
+    Critical,
+    /// Per-entry atomic adds with staggered start offsets.
+    Atomic,
+    /// OpenMP-`reduction` semantics (zero, accumulate, combine).
+    Reduce,
+    /// The Fig. 3 gather matrix with parallel column averaging.
+    MatrixGather,
+}
+
+/// Shared-memory RKA (Algorithm 1).
+pub struct ParallelRka {
+    /// Base RNG seed (worker `t` derives its own stream).
+    pub seed: u32,
+    /// Thread count `q`.
+    pub q: usize,
+    /// Row weights (uniform `alpha` or per-worker partial-matrix alphas).
+    pub weights: Weights,
+    /// Row-sampling scheme.
+    pub scheme: SamplingScheme,
+    /// Gather strategy.
+    pub strategy: AveragingStrategy,
+}
+
+impl ParallelRka {
+    /// RKA with uniform weights, full-matrix sampling, critical-section gather.
+    pub fn new(seed: u32, q: usize, alpha: f64) -> Self {
+        assert!(q >= 1);
+        ParallelRka {
+            seed,
+            q,
+            weights: Weights::Uniform(alpha),
+            scheme: SamplingScheme::FullMatrix,
+            strategy: AveragingStrategy::Critical,
+        }
+    }
+
+    /// Select a gather strategy.
+    pub fn with_strategy(mut self, strategy: AveragingStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Select a sampling scheme.
+    pub fn with_scheme(mut self, scheme: SamplingScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Use per-worker weights.
+    pub fn with_weights(mut self, weights: Weights) -> Self {
+        if let Some(len) = weights.len() {
+            assert_eq!(len, self.q, "need one weight per worker");
+        }
+        self.weights = weights;
+        self
+    }
+}
+
+/// Per-solve shared state visible to every thread.
+struct Region {
+    x: AtomicF64Vec,
+    x_prev: SharedSlice,
+    /// Scratch for Reduce (accumulation target) and MatrixGather (q x n rows).
+    gather: SharedSlice,
+    barrier: SpinBarrier,
+    critical: Mutex<()>,
+    stop: AtomicBool,
+    converged: AtomicBool,
+    diverged: AtomicBool,
+}
+
+impl Solver for ParallelRka {
+    fn name(&self) -> &'static str {
+        "RKA-parallel"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let q = self.q;
+        let gather_len = match self.strategy {
+            AveragingStrategy::MatrixGather => q * n,
+            _ => n,
+        };
+        let region = Region {
+            x: AtomicF64Vec::zeros(n),
+            x_prev: SharedSlice::zeros(n),
+            gather: SharedSlice::zeros(gather_len),
+            barrier: SpinBarrier::new(q),
+            critical: Mutex::new(()),
+            stop: AtomicBool::new(false),
+            converged: AtomicBool::new(false),
+            diverged: AtomicBool::new(false),
+        };
+        let initial_err = system.error_sq(&vec![0.0; n]);
+        let timed = opts.fixed_iterations.is_some();
+
+        let sw = Stopwatch::start();
+        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(q);
+            for t in 0..q {
+                let region = &region;
+                let weights = &self.weights;
+                handles.push(scope.spawn(move || {
+                    self.worker(t, system, opts, region, weights, initial_err, timed)
+                }));
+            }
+            for h in handles {
+                histories.push(h.join().expect("worker panicked"));
+            }
+        });
+        let seconds = sw.seconds();
+
+        let (history, iterations) = histories
+            .into_iter()
+            .flatten()
+            .next()
+            .expect("thread 0 reports history");
+        SolveResult {
+            x: region.x.snapshot(),
+            iterations,
+            converged: region.converged.load(Ordering::SeqCst),
+            diverged: region.diverged.load(Ordering::SeqCst),
+            seconds,
+            rows_used: iterations * q,
+            history,
+        }
+    }
+}
+
+impl ParallelRka {
+    /// Body run by every thread of the parallel region. Thread 0 returns the
+    /// recorded history and iteration count.
+    #[allow(clippy::too_many_arguments)]
+    fn worker(
+        &self,
+        t: usize,
+        system: &LinearSystem,
+        opts: &SolveOptions,
+        region: &Region,
+        weights: &Weights,
+        initial_err: f64,
+        timed: bool,
+    ) -> Option<(History, usize)> {
+        let n = system.cols();
+        let q = self.q;
+        let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
+        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
+        // Private buffers (allocated once, reused every iteration).
+        let mut local = vec![0.0; n];
+        let mut err_buf = vec![0.0; n];
+        let mut k = 0usize;
+
+        loop {
+            // (A) previous iteration's gather is complete.
+            region.barrier.wait();
+            if t == 0 {
+                // Stopping test + history, off the clock in timed runs.
+                let err = if !timed || history.due(k) {
+                    region.x.snapshot_into(&mut err_buf);
+                    system.error_sq(&err_buf)
+                } else {
+                    f64::NAN
+                };
+                if history.due(k) {
+                    history.record(k, err.sqrt(), system.residual_norm(&err_buf));
+                }
+                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                region.converged.store(c, Ordering::SeqCst);
+                region.diverged.store(d, Ordering::SeqCst);
+                region.stop.store(stop, Ordering::SeqCst);
+            }
+            // (B) stop flag published.
+            region.barrier.wait();
+            if region.stop.load(Ordering::SeqCst) {
+                break;
+            }
+
+            // x_prev = x, chunked (`omp for` of Algorithm 1 lines 3-4).
+            let (lo, hi) = region.x_prev.chunk(t, q);
+            {
+                // SAFETY: chunks are disjoint; x is only read here (all
+                // writers passed barrier B).
+                let prev = unsafe { region.x_prev.as_mut_unchecked() };
+                for i in lo..hi {
+                    prev[i] = region.x.get(i);
+                }
+            }
+            if matches!(self.strategy, AveragingStrategy::Reduce) {
+                // OpenMP `reduction` requires x zeroed before combining.
+                for i in lo..hi {
+                    region.x.set(i, 0.0);
+                }
+            }
+            // (C) copy complete; x_prev is frozen for this iteration.
+            region.barrier.wait();
+
+            // Sample a row and compute the scaled projection (lines 5-6).
+            // SAFETY: x_prev is read-only until the next barrier (A).
+            let x_prev = unsafe { region.x_prev.as_ref_unchecked() };
+            let i = sampler.sample();
+            let row = system.a.row(i);
+            let scale = weights.get(t) * (system.b[i] - dot(row, x_prev))
+                / (q as f64 * system.row_norms_sq[i]);
+
+            match self.strategy {
+                AveragingStrategy::Critical => {
+                    // Lines 7-9: sequential gather under the critical section.
+                    let _guard = region.critical.lock().unwrap();
+                    for j in 0..n {
+                        region.x.set(j, region.x.get(j) + scale * row[j]);
+                    }
+                }
+                AveragingStrategy::Atomic => {
+                    // Staggered start offsets; per-entry atomic adds. The
+                    // cache-line invalidation storm this causes is the
+                    // paper's explanation for it losing to Critical.
+                    let start = t * n / q;
+                    for d in 0..n {
+                        let j = if start + d < n { start + d } else { start + d - n };
+                        region.x.add(j, scale * row[j]);
+                    }
+                }
+                AveragingStrategy::Reduce => {
+                    // Private partial result: x_prev/q + scale*row (sums over
+                    // threads reconstruct eq. 7 after x was zeroed above).
+                    let inv_q = 1.0 / q as f64;
+                    for j in 0..n {
+                        local[j] = x_prev[j] * inv_q + scale * row[j];
+                    }
+                    let _guard = region.critical.lock().unwrap();
+                    for j in 0..n {
+                        region.x.set(j, region.x.get(j) + local[j]);
+                    }
+                }
+                AveragingStrategy::MatrixGather => {
+                    // Fig. 3: row t of the gather matrix holds this thread's
+                    // full estimate x_prev + (q*scale)*A^(row) (the q cancels
+                    // in the average, reconstructing eq. 7).
+                    {
+                        // SAFETY: each thread writes only its own row.
+                        let g = unsafe { region.gather.as_mut_unchecked() };
+                        let mine = &mut g[t * n..(t + 1) * n];
+                        let full_scale = q as f64 * scale;
+                        for j in 0..n {
+                            mine[j] = x_prev[j] + full_scale * row[j];
+                        }
+                    }
+                    // Extra synchronization point the paper calls out.
+                    region.barrier.wait();
+                    // Parallel column averaging over disjoint chunks.
+                    let g = unsafe { region.gather.as_ref_unchecked() };
+                    let inv_q = 1.0 / q as f64;
+                    for j in lo..hi {
+                        let mut s = 0.0;
+                        for r in 0..q {
+                            s += g[r * n + j];
+                        }
+                        region.x.set(j, s * inv_q);
+                    }
+                }
+            }
+            k += 1;
+        }
+
+        if t == 0 {
+            Some((history, k))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rka::RkaSolver;
+
+    fn all_strategies() -> [AveragingStrategy; 4] {
+        [
+            AveragingStrategy::Critical,
+            AveragingStrategy::Atomic,
+            AveragingStrategy::Reduce,
+            AveragingStrategy::MatrixGather,
+        ]
+    }
+
+    #[test]
+    fn every_strategy_converges() {
+        let sys = DatasetBuilder::new(300, 12).seed(1).consistent();
+        for strategy in all_strategies() {
+            let r = ParallelRka::new(3, 4, 1.0)
+                .with_strategy(strategy)
+                .solve(&sys, &SolveOptions::default());
+            assert!(r.converged, "{strategy:?} did not converge");
+            assert!(sys.error_sq(&r.x) < 1e-8, "{strategy:?} error too big");
+        }
+    }
+
+    #[test]
+    fn matches_sequential_semantics() {
+        // Same seeds => same sampled rows => same iterates up to FP
+        // reassociation in the gather.
+        let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(300);
+        let seq = RkaSolver::new(7, 4, 1.0).solve(&sys, &opts);
+        for strategy in all_strategies() {
+            let par =
+                ParallelRka::new(7, 4, 1.0).with_strategy(strategy).solve(&sys, &opts);
+            let err: f64 = seq
+                .x
+                .iter()
+                .zip(&par.x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            let scale = seq.x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+            assert!(err < 1e-6 * scale.max(1.0), "{strategy:?} drifted {err} (scale {scale})");
+        }
+    }
+
+    #[test]
+    fn single_thread_equals_rk_stream() {
+        let sys = DatasetBuilder::new(100, 8).seed(3).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(200);
+        let par = ParallelRka::new(5, 1, 1.0).solve(&sys, &opts);
+        let seq = RkaSolver::new(5, 1, 1.0).solve(&sys, &opts);
+        for (a, b) in par.x.iter().zip(&seq.x) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn partitioned_sampling_converges() {
+        let sys = DatasetBuilder::new(300, 12).seed(4).consistent();
+        let r = ParallelRka::new(3, 4, 1.0)
+            .with_scheme(SamplingScheme::Partitioned)
+            .solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn history_recorded_by_thread0() {
+        let sys = DatasetBuilder::new(100, 8).seed(5).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(100).with_history_step(25);
+        let r = ParallelRka::new(1, 2, 1.0).solve(&sys, &opts);
+        assert_eq!(r.history.len(), 5); // k = 0, 25, 50, 75, 100
+    }
+}

@@ -1,0 +1,233 @@
+//! Parallel RKAB — the paper's Algorithm 3.
+//!
+//! Each thread copies the shared iterate into a *private* estimate `v`,
+//! applies `block_size` sequential Kaczmarz projections to it, subtracts the
+//! shared iterate (so only the difference is gathered), and after a barrier
+//! adds `v/q` to the shared `x` under the critical section. Communication
+//! happens once per block instead of once per row — the point of the method.
+//!
+//! The gather is still the critical section of Algorithm 1, but it now costs
+//! O(q·n) once per `block_size` row updates instead of once per row update,
+//! which is why RKAB parallelizes where RKA does not (§3.4.2, Table 2).
+
+use super::shared::{AtomicF64Vec, SpinBarrier};
+use crate::data::LinearSystem;
+use crate::linalg::vector::{axpy, dot};
+use crate::metrics::{History, Stopwatch};
+use crate::solvers::sampling::{RowSampler, SamplingScheme};
+use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Shared-memory RKAB (Algorithm 3).
+pub struct ParallelRkab {
+    /// Base RNG seed (worker `t` derives its own stream).
+    pub seed: u32,
+    /// Thread count `q`.
+    pub q: usize,
+    /// Rows each thread processes between gathers (`bs`).
+    pub block_size: usize,
+    /// Uniform relaxation weight applied inside the block sweep.
+    pub alpha: f64,
+    /// Row-sampling scheme.
+    pub scheme: SamplingScheme,
+}
+
+struct Region {
+    x: AtomicF64Vec,
+    barrier: SpinBarrier,
+    critical: Mutex<()>,
+    stop: AtomicBool,
+    converged: AtomicBool,
+    diverged: AtomicBool,
+}
+
+impl ParallelRkab {
+    /// RKAB with full-matrix sampling.
+    pub fn new(seed: u32, q: usize, block_size: usize, alpha: f64) -> Self {
+        assert!(q >= 1 && block_size >= 1);
+        ParallelRkab { seed, q, block_size, alpha, scheme: SamplingScheme::FullMatrix }
+    }
+
+    /// Select a sampling scheme.
+    pub fn with_scheme(mut self, scheme: SamplingScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+}
+
+impl Solver for ParallelRkab {
+    fn name(&self) -> &'static str {
+        "RKAB-parallel"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let q = self.q;
+        let region = Region {
+            x: AtomicF64Vec::zeros(n),
+            barrier: SpinBarrier::new(q),
+            critical: Mutex::new(()),
+            stop: AtomicBool::new(false),
+            converged: AtomicBool::new(false),
+            diverged: AtomicBool::new(false),
+        };
+        let initial_err = system.error_sq(&vec![0.0; n]);
+        let timed = opts.fixed_iterations.is_some();
+
+        let sw = Stopwatch::start();
+        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(q);
+            for t in 0..q {
+                let region = &region;
+                handles.push(scope.spawn(move || {
+                    self.worker(t, system, opts, region, initial_err, timed)
+                }));
+            }
+            for h in handles {
+                histories.push(h.join().expect("worker panicked"));
+            }
+        });
+        let seconds = sw.seconds();
+
+        let (history, iterations) =
+            histories.into_iter().flatten().next().expect("thread 0 reports history");
+        SolveResult {
+            x: region.x.snapshot(),
+            iterations,
+            converged: region.converged.load(Ordering::SeqCst),
+            diverged: region.diverged.load(Ordering::SeqCst),
+            seconds,
+            rows_used: iterations * q * self.block_size,
+            history,
+        }
+    }
+}
+
+impl ParallelRkab {
+    fn worker(
+        &self,
+        t: usize,
+        system: &LinearSystem,
+        opts: &SolveOptions,
+        region: &Region,
+        initial_err: f64,
+        timed: bool,
+    ) -> Option<(History, usize)> {
+        let n = system.cols();
+        let q = self.q;
+        let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
+        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
+        let mut v = vec![0.0; n]; // private block estimate
+        let mut err_buf = vec![0.0; n];
+        let mut k = 0usize;
+
+        loop {
+            // (A) previous gather complete.
+            region.barrier.wait();
+            if t == 0 {
+                let err = if !timed || history.due(k) {
+                    region.x.snapshot_into(&mut err_buf);
+                    system.error_sq(&err_buf)
+                } else {
+                    f64::NAN
+                };
+                if history.due(k) {
+                    history.record(k, err.sqrt(), system.residual_norm(&err_buf));
+                }
+                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                region.converged.store(c, Ordering::SeqCst);
+                region.diverged.store(d, Ordering::SeqCst);
+                region.stop.store(stop, Ordering::SeqCst);
+            }
+            // (B) stop flag published.
+            region.barrier.wait();
+            if region.stop.load(Ordering::SeqCst) {
+                break;
+            }
+
+            // v = x^(k), then block_size sequential projections on v (eq. 8;
+            // Algorithm 3 lines 3-11). x is read-only in this phase.
+            for i in 0..n {
+                v[i] = region.x.get(i);
+            }
+            for _ in 0..self.block_size {
+                let i = sampler.sample();
+                let row = system.a.row(i);
+                let scale = self.alpha * (system.b[i] - dot(row, &v)) / system.row_norms_sq[i];
+                axpy(scale, row, &mut v);
+            }
+            // v -= x (lines 12-13), so the gather sums only differences.
+            for i in 0..n {
+                v[i] -= region.x.get(i);
+            }
+            // Line 14: nobody may update x while others still read it above.
+            region.barrier.wait();
+            {
+                // Lines 15-17: x += v/q under the critical section.
+                let _guard = region.critical.lock().unwrap();
+                let inv_q = 1.0 / q as f64;
+                for i in 0..n {
+                    region.x.set(i, region.x.get(i) + v[i] * inv_q);
+                }
+            }
+            k += 1;
+        }
+
+        if t == 0 {
+            Some((history, k))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rkab::RkabSolver;
+
+    #[test]
+    fn converges_on_consistent_system() {
+        let sys = DatasetBuilder::new(300, 12).seed(1).consistent();
+        let r = ParallelRkab::new(3, 4, 12, 1.0).solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-8);
+        assert_eq!(r.rows_used, r.iterations * 4 * 12);
+    }
+
+    #[test]
+    fn matches_sequential_semantics() {
+        let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(50);
+        let seq = RkabSolver::new(7, 4, 8, 1.0).solve(&sys, &opts);
+        let par = ParallelRkab::new(7, 4, 8, 1.0).solve(&sys, &opts);
+        let drift: f64 =
+            seq.x.iter().zip(&par.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        let scale = seq.x.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        assert!(drift < 1e-6 * scale.max(1.0), "drift {drift}");
+    }
+
+    #[test]
+    fn partitioned_sampling_converges() {
+        let sys = DatasetBuilder::new(300, 12).seed(3).consistent();
+        let r = ParallelRkab::new(3, 4, 12, 1.0)
+            .with_scheme(SamplingScheme::Partitioned)
+            .solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn block_size_one_matches_parallel_rka() {
+        use crate::parallel::rka_shared::ParallelRka;
+        let sys = DatasetBuilder::new(150, 8).seed(4).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(100);
+        let a = ParallelRkab::new(9, 3, 1, 1.0).solve(&sys, &opts);
+        let b = ParallelRka::new(9, 3, 1.0).solve(&sys, &opts);
+        let drift: f64 = a.x.iter().zip(&b.x).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+        let scale = b.x.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        assert!(drift < 1e-6 * scale.max(1.0), "drift {drift}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Report emitters: markdown tables, CSV, and simple aligned text output for
+//! the experiment drivers and benches.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-oriented table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Table caption.
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given caption and column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as GitHub markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(s, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    /// Render as CSV (headers first).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+
+    /// Render as aligned plain text (for terminal output).
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let _ = writeln!(s, "{}", fmt_row(&self.headers));
+        let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(r));
+        }
+        s
+    }
+}
+
+/// A report: a list of sections, each free text or a table.
+#[derive(Default)]
+pub struct Report {
+    sections: Vec<String>,
+}
+
+impl Report {
+    /// Empty report.
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    /// Append a markdown paragraph.
+    pub fn text(&mut self, text: impl Into<String>) {
+        self.sections.push(text.into());
+    }
+
+    /// Append a table (markdown form).
+    pub fn table(&mut self, t: &Table) {
+        self.sections.push(t.to_markdown());
+    }
+
+    /// Full markdown document.
+    pub fn to_markdown(&self) -> String {
+        self.sections.join("\n")
+    }
+
+    /// Write to `<dir>/<name>.md` (creates the directory).
+    pub fn write(&self, dir: &Path, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.md"));
+        std::fs::write(&path, self.to_markdown())?;
+        Ok(path)
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".to_string();
+    }
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Format a speedup ratio.
+pub fn fmt_speedup(s: f64) -> String {
+    if s.is_finite() {
+        format!("{s:.2}x")
+    } else {
+        "-".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["30".into(), "40".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 30 | 40 |"));
+    }
+
+    #[test]
+    fn csv_renders() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("a,b"));
+    }
+
+    #[test]
+    fn text_aligns() {
+        let txt = sample().to_text();
+        assert!(txt.contains("Demo"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn report_writes_file() {
+        let mut r = Report::new();
+        r.text("hello");
+        r.table(&sample());
+        let dir = std::env::temp_dir().join("kcz_report_test");
+        let path = r.write(&dir, "demo").unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("hello"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_seconds(2.5), "2.50 s");
+        assert_eq!(fmt_seconds(0.0025), "2.50 ms");
+        assert_eq!(fmt_seconds(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_speedup(1.5), "1.50x");
+    }
+}

@@ -1,0 +1,260 @@
+//! Sampling distributions over row indices.
+//!
+//! The RK family samples row `l` with probability `‖A^(l)‖² / ‖A‖²_F`
+//! (paper eq. 4). Two interchangeable samplers:
+//!
+//! - [`DiscreteDistribution`] — cumulative weights + binary search, the same
+//!   algorithm family as libstdc++'s `std::discrete_distribution`
+//!   (O(log m) per draw).
+//! - [`AliasTable`] — Walker's alias method (O(1) per draw, O(m) setup).
+//!   Adopted on the hot path during the §Perf pass.
+//!
+//! Plus [`NormalSampler`], a Box–Muller gaussian used by the dataset
+//! generator (§3.1: matrix entries ~ N(μ, σ), noise ~ N(0,1)).
+
+use super::mt19937::Mt19937;
+
+/// CDF + binary-search discrete distribution.
+pub struct DiscreteDistribution {
+    cumulative: Vec<f64>,
+    total: f64,
+}
+
+impl DiscreteDistribution {
+    /// Build from non-negative weights (need not be normalized).
+    ///
+    /// Panics on empty weights or a non-positive total, which would make the
+    /// distribution meaningless.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "discrete distribution needs >= 1 weight");
+        let mut cumulative = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "weights must be finite and >= 0, got {w}");
+            acc += w;
+            cumulative.push(acc);
+        }
+        assert!(acc > 0.0, "total weight must be positive");
+        DiscreteDistribution { cumulative, total: acc }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.cumulative.len()
+    }
+
+    /// True if there are no categories (never: constructor forbids it).
+    pub fn is_empty(&self) -> bool {
+        self.cumulative.is_empty()
+    }
+
+    /// Draw an index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Mt19937) -> usize {
+        let u = rng.next_f64() * self.total;
+        // partition_point returns the first index with cumulative > u.
+        self.cumulative.partition_point(|&c| c <= u).min(self.cumulative.len() - 1)
+    }
+}
+
+/// Walker alias table: O(1) sampling from a discrete distribution.
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized).
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "alias table needs >= 1 weight");
+        let n = weights.len();
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "total weight must be positive/finite");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias = vec![0u32; n];
+        // Split indices into under/over-full stacks.
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            // l donates (1 - prob[s]) of its mass to s's column.
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers: saturate.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if empty (never: constructor forbids it).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw an index: one uniform for the column, one for the coin flip.
+    #[inline]
+    pub fn sample(&self, rng: &mut Mt19937) -> usize {
+        let col = rng.next_below(self.prob.len() as u32) as usize;
+        if rng.next_f64() < self.prob[col] {
+            col
+        } else {
+            self.alias[col] as usize
+        }
+    }
+}
+
+/// Box–Muller gaussian sampler with caching of the second variate.
+pub struct NormalSampler {
+    spare: Option<f64>,
+}
+
+impl NormalSampler {
+    /// New sampler (stateless apart from the cached spare variate).
+    pub fn new() -> Self {
+        NormalSampler { spare: None }
+    }
+
+    /// Draw from N(mean, sd).
+    #[inline]
+    pub fn sample(&mut self, rng: &mut Mt19937, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.standard(rng)
+    }
+
+    /// Draw from N(0, 1).
+    pub fn standard(&mut self, rng: &mut Mt19937) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // Polar Box–Muller: rejection-sample a point in the unit disc.
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+}
+
+impl Default for NormalSampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frequencies(mut draw: impl FnMut(&mut Mt19937) -> usize, k: usize, n: usize) -> Vec<f64> {
+        let mut rng = Mt19937::new(1234);
+        let mut counts = vec![0usize; k];
+        for _ in 0..n {
+            counts[draw(&mut rng)] += 1;
+        }
+        counts.into_iter().map(|c| c as f64 / n as f64).collect()
+    }
+
+    #[test]
+    fn discrete_matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let d = DiscreteDistribution::new(&w);
+        let f = frequencies(|r| d.sample(r), 4, 200_000);
+        for (i, &wi) in w.iter().enumerate() {
+            assert!((f[i] - wi / 10.0).abs() < 0.01, "cat {i}: {} vs {}", f[i], wi / 10.0);
+        }
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let w = [0.5, 0.0, 2.5, 1.0, 6.0];
+        let t = AliasTable::new(&w);
+        let f = frequencies(|r| t.sample(r), 5, 200_000);
+        for (i, &wi) in w.iter().enumerate() {
+            assert!((f[i] - wi / 10.0).abs() < 0.01, "cat {i}: {} vs {}", f[i], wi / 10.0);
+        }
+    }
+
+    #[test]
+    fn alias_and_discrete_agree_statistically() {
+        let w: Vec<f64> = (1..=32).map(|i| (i as f64).sqrt()).collect();
+        let total: f64 = w.iter().sum();
+        let d = DiscreteDistribution::new(&w);
+        let t = AliasTable::new(&w);
+        let fd = frequencies(|r| d.sample(r), 32, 100_000);
+        let ft = frequencies(|r| t.sample(r), 32, 100_000);
+        for i in 0..32 {
+            let p = w[i] / total;
+            assert!((fd[i] - p).abs() < 0.01);
+            assert!((ft[i] - p).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let d = DiscreteDistribution::new(&[1.0, 0.0, 1.0]);
+        let mut rng = Mt19937::new(5);
+        for _ in 0..10_000 {
+            assert_ne!(d.sample(&mut rng), 1);
+        }
+        let t = AliasTable::new(&[1.0, 0.0, 1.0]);
+        for _ in 0..10_000 {
+            assert_ne!(t.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn single_category() {
+        let d = DiscreteDistribution::new(&[3.0]);
+        let t = AliasTable::new(&[3.0]);
+        let mut rng = Mt19937::new(9);
+        assert_eq!(d.sample(&mut rng), 0);
+        assert_eq!(t.sample(&mut rng), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_weights_panic() {
+        DiscreteDistribution::new(&[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_weight_panics() {
+        DiscreteDistribution::new(&[1.0, -0.5]);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Mt19937::new(77);
+        let mut ns = NormalSampler::new();
+        let n = 200_000;
+        let samples: Vec<f64> = (0..n).map(|_| ns.sample(&mut rng, 3.0, 2.0)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.02, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.08, "var {var}");
+    }
+}

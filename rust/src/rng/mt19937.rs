@@ -1,0 +1,173 @@
+//! MT19937 Mersenne Twister — bit-exact port of the generator the paper uses
+//! (C++ `std::mt19937` / Matsumoto-Nishimura 2002 reference code).
+//!
+//! Known-answer tests below pin the output to the published reference
+//! sequence (seed 5489: first output 3499211612).
+
+const N: usize = 624;
+const M: usize = 397;
+const MATRIX_A: u32 = 0x9908_b0df;
+const UPPER_MASK: u32 = 0x8000_0000;
+const LOWER_MASK: u32 = 0x7fff_ffff;
+
+/// 32-bit Mersenne Twister state.
+#[derive(Clone)]
+pub struct Mt19937 {
+    mt: [u32; N],
+    mti: usize,
+}
+
+impl Mt19937 {
+    /// Seed exactly like `std::mt19937(seed)`.
+    pub fn new(seed: u32) -> Self {
+        let mut mt = [0u32; N];
+        mt[0] = seed;
+        for i in 1..N {
+            mt[i] = 1812433253u32
+                .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+                .wrapping_add(i as u32);
+        }
+        Mt19937 { mt, mti: N }
+    }
+
+    /// Next 32-bit output (tempered).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.mti >= N {
+            self.generate();
+        }
+        let mut y = self.mt[self.mti];
+        self.mti += 1;
+        y ^= y >> 11;
+        y ^= (y << 7) & 0x9d2c_5680;
+        y ^= (y << 15) & 0xefc6_0000;
+        y ^= y >> 18;
+        y
+    }
+
+    fn generate(&mut self) {
+        for i in 0..N {
+            let y = (self.mt[i] & UPPER_MASK) | (self.mt[(i + 1) % N] & LOWER_MASK);
+            let mut next = self.mt[(i + M) % N] ^ (y >> 1);
+            if y & 1 != 0 {
+                next ^= MATRIX_A;
+            }
+            self.mt[i] = next;
+        }
+        self.mti = 0;
+    }
+
+    /// Uniform double in [0, 1) with 53-bit resolution
+    /// (`genrand_res53` from the reference implementation).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        let a = (self.next_u32() >> 5) as f64; // 27 bits
+        let b = (self.next_u32() >> 6) as f64; // 26 bits
+        (a * 67108864.0 + b) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform u64 built from two 32-bit outputs.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` by rejection (unbiased).
+    #[inline]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let zone = u32::MAX - (u32::MAX % bound);
+        loop {
+            let v = self.next_u32();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle (used by AsyRK's without-replacement sampling).
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            slice.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_sequence_seed_5489() {
+        // First 10 outputs of mt19937 with the default C++ seed 5489.
+        let expected: [u32; 10] = [
+            3499211612, 581869302, 3890346734, 3586334585, 545404204, 4161255391, 3922919429,
+            949333985, 2715962298, 1323567403,
+        ];
+        let mut rng = Mt19937::new(5489);
+        for &e in &expected {
+            assert_eq!(rng.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn tenthousandth_output_seed_5489() {
+        // The classic C++11 spec check: the 10000th output of
+        // default-seeded mt19937 is 4123659995.
+        let mut rng = Mt19937::new(5489);
+        let mut last = 0;
+        for _ in 0..10000 {
+            last = rng.next_u32();
+        }
+        assert_eq!(last, 4123659995);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Mt19937::new(1);
+        for _ in 0..1000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut rng = Mt19937::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_range() {
+        let mut rng = Mt19937::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Mt19937::new(11);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely to be identity
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Mt19937::new(1);
+        let mut b = Mt19937::new(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! The PJRT execution engine: compile-once cache over the CPU client.
+
+use super::manifest::{ArtifactEntry, ArtifactKind, Manifest};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Compile-once, execute-many PJRT wrapper.
+///
+/// One engine per process is the intended usage; compiled executables are
+/// cached by artifact name. All methods take `&mut self` because the cache
+/// mutates — the coordinator owns the engine on its event loop, matching the
+/// "leader loads artifacts, workers feed it requests" shape.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and index the artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string of the underlying PJRT client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifacts directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Find an artifact by kind + shape (exact match).
+    pub fn find(&self, kind: ArtifactKind, q: usize, bs: usize, n: usize) -> Result<ArtifactEntry> {
+        self.manifest.find(kind, q, bs, n).cloned().ok_or_else(|| {
+            Error::ArtifactMissing(format!(
+                "{kind:?} with q={q} bs={bs} n={n} (available: {})",
+                self.manifest
+                    .entries()
+                    .iter()
+                    .map(|e| e.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| Error::ArtifactMissing(name.to_string()))?;
+        let path = entry.path.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::InvalidArgument("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named artifact. The AOT contract is `return_tuple=True`
+    /// with a single element, so the result is unwrapped with `to_tuple1`
+    /// and returned as a `Vec<f64>`.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f64>> {
+        self.prepare(name)?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Build an f64 literal of the given shape from a flat buffer.
+    pub fn literal(data: &[f64], shape: &[i64]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data);
+        let expected: i64 = shape.iter().product();
+        if expected != data.len() as i64 {
+            return Err(Error::Dimension(format!(
+                "literal of len {} cannot have shape {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(lit.reshape(shape)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+
+    #[test]
+    fn literal_shape_checked() {
+        let data = vec![1.0f64; 6];
+        assert!(PjrtEngine::literal(&data, &[2, 3]).is_ok());
+        assert!(PjrtEngine::literal(&data, &[4, 2]).is_err());
+    }
+
+    #[test]
+    fn missing_dir_reports_artifact_missing() {
+        let r = PjrtEngine::new(Path::new("/definitely/not/here"));
+        assert!(matches!(r, Err(Error::ArtifactMissing(_))));
+    }
+}

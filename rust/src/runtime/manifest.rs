@@ -1,0 +1,148 @@
+//! Artifact manifest: the index `aot.py` writes next to the HLO files.
+//!
+//! Line format: `<name> <kind> <q> <bs> <n> <file>`.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Eq. (7): one averaged RKA update.
+    RkaStep,
+    /// Eq. (8): one worker's sequential block sweep.
+    RkabBlock,
+    /// Eqs. (8)+(9): full RKAB iteration (q sweeps + average).
+    RkabRound,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "rka_step" => Ok(ArtifactKind::RkaStep),
+            "rkab_block" => Ok(ArtifactKind::RkabBlock),
+            "rkab_round" => Ok(ArtifactKind::RkabRound),
+            other => Err(Error::InvalidArgument(format!("unknown artifact kind {other}"))),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Unique artifact name (also the cache key).
+    pub name: String,
+    /// Computation kind.
+    pub kind: ArtifactKind,
+    /// Workers `q` (1 for per-worker kernels).
+    pub q: usize,
+    /// Block size `bs` (1 for rka_step).
+    pub bs: usize,
+    /// Columns `n`.
+    pub n: usize,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|_| Error::ArtifactMissing(path.display().to_string()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 6 {
+                return Err(Error::InvalidArgument(format!(
+                    "manifest line {} malformed: {line}",
+                    lineno + 1
+                )));
+            }
+            let parse_usize = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    Error::InvalidArgument(format!("manifest line {}: bad {what}", lineno + 1))
+                })
+            };
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                kind: ArtifactKind::parse(parts[1])?,
+                q: parse_usize(parts[2], "q")?,
+                bs: parse_usize(parts[3], "bs")?,
+                n: parse_usize(parts[4], "n")?,
+                path: dir.join(parts[5]),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Look up by name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find an artifact of `kind` with the exact shape.
+    pub fn find(&self, kind: ArtifactKind, q: usize, bs: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.q == q && e.bs == bs && e.n == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kcz_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = write_manifest(
+            "rka_step_q4_n256 rka_step 4 1 256 rka_step_q4_n256.hlo.txt\n\
+             rkab_round_q4_bs64_n256 rkab_round 4 64 256 r.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.find(ArtifactKind::RkabRound, 4, 64, 256).unwrap();
+        assert_eq!(e.name, "rkab_round_q4_bs64_n256");
+        assert!(m.find(ArtifactKind::RkaStep, 4, 1, 999).is_none());
+        assert!(m.by_name("rka_step_q4_n256").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = write_manifest("too few fields\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let dir = std::env::temp_dir().join("kcz_definitely_absent_dir");
+        match Manifest::load(&dir) {
+            Err(Error::ArtifactMissing(_)) => {}
+            other => panic!("expected ArtifactMissing, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime — loads the AOT artifacts and executes them from the L3
+//! coordinator, Python-free.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo and DESIGN.md §1):
+//!
+//! ```text
+//! artifacts/<name>.hlo.txt           (written once by `make artifacts`)
+//!   -> HloModuleProto::from_text_file   (text parser reassigns 64-bit ids)
+//!   -> XlaComputation::from_proto
+//!   -> PjRtClient::cpu().compile        (once per shape, cached)
+//!   -> execute(&[Literal]) per iteration
+//! ```
+//!
+//! [`PjrtRkabSolver`] is the proof the three layers compose: a full RKAB
+//! solver whose inner block update runs through the compiled Pallas kernel,
+//! validated numerically against the native Rust solver in
+//! `rust/tests/runtime_integration.rs`.
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt_solver;
+
+pub use engine::PjrtEngine;
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};
+pub use pjrt_solver::PjrtRkabSolver;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$KACZMARZ_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("KACZMARZ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

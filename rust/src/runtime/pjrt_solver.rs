@@ -1,0 +1,140 @@
+//! RKAB with the inner update executed by the compiled Pallas kernel.
+//!
+//! This is the end-to-end proof of the three-layer architecture: L3 (this
+//! struct) owns sampling, the iteration loop, stopping, and metrics; the
+//! per-iteration compute `x^(k+1) = mean_gamma(block sweep)` is the
+//! `rkab_round` artifact — the L2 jax graph vmapping the L1 Pallas kernel —
+//! executed on the PJRT CPU client.
+//!
+//! Semantics are *identical* to [`crate::solvers::rkab::RkabSolver`] with
+//! full-matrix sampling given the same seed (same derived worker streams,
+//! same sampled rows); the integration tests assert the iterates agree to
+//! f64 reassociation tolerance.
+
+use super::engine::PjrtEngine;
+use super::manifest::ArtifactKind;
+use crate::data::LinearSystem;
+use crate::error::Result;
+use crate::metrics::{History, Stopwatch};
+use crate::solvers::sampling::{RowSampler, SamplingScheme};
+use crate::solvers::{stop_check, SolveOptions, SolveResult};
+use std::cell::RefCell;
+use std::path::Path;
+
+/// PJRT-backed RKAB solver.
+pub struct PjrtRkabSolver {
+    /// Base RNG seed (worker streams derived as in the native solver).
+    pub seed: u32,
+    /// Number of averaged workers.
+    pub q: usize,
+    /// Rows per worker per iteration.
+    pub block_size: usize,
+    /// Uniform relaxation weight.
+    pub alpha: f64,
+    engine: RefCell<PjrtEngine>,
+    artifact: String,
+}
+
+impl PjrtRkabSolver {
+    /// Build a solver bound to the `rkab_round_q{q}_bs{bs}_n{n}` artifact.
+    ///
+    /// Fails with `ArtifactMissing` if the shape was not AOT-exported
+    /// (extend the catalogue in `python/compile/aot.py` and re-run
+    /// `make artifacts`).
+    pub fn new(
+        artifacts_dir: &Path,
+        seed: u32,
+        q: usize,
+        block_size: usize,
+        n: usize,
+        alpha: f64,
+    ) -> Result<Self> {
+        let mut engine = PjrtEngine::new(artifacts_dir)?;
+        let entry = engine.find(ArtifactKind::RkabRound, q, block_size, n)?;
+        let artifact = entry.name.clone();
+        engine.prepare(&artifact)?; // compile up front, off the solve clock
+        Ok(PjrtRkabSolver {
+            seed,
+            q,
+            block_size,
+            alpha,
+            engine: RefCell::new(engine),
+            artifact,
+        })
+    }
+
+    /// Solver name (mirrors the `Solver` trait; kept inherent because
+    /// `solve` returns `Result` — PJRT execution can fail).
+    pub fn name(&self) -> &'static str {
+        "RKAB-pjrt"
+    }
+
+    /// Run RKAB with the PJRT-executed inner update.
+    pub fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> Result<SolveResult> {
+        let n = system.cols();
+        let q = self.q;
+        let bs = self.block_size;
+        let mut x = vec![0.0; n];
+        let mut samplers: Vec<RowSampler> = (0..q)
+            .map(|t| RowSampler::new(system, SamplingScheme::FullMatrix, t, q, self.seed))
+            .collect();
+        let mut history = History::every(opts.history_step);
+        let initial_err = system.error_sq(&x);
+        let timed = opts.fixed_iterations.is_some();
+        let mut engine = self.engine.borrow_mut();
+
+        // Gather buffers (reused across iterations).
+        let mut a_blocks = vec![0.0; q * bs * n];
+        let mut b_blocks = vec![0.0; q * bs];
+        let mut inv_norms = vec![0.0; q * bs];
+        let alpha_lit = PjrtEngine::literal(&[self.alpha], &[1])?;
+
+        let sw = Stopwatch::start();
+        let mut k = 0usize;
+        let (mut converged, mut diverged);
+        loop {
+            let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
+            if history.due(k) {
+                history.record(k, err.sqrt(), system.residual_norm(&x));
+            }
+            let (stop, c, d) = stop_check(opts, k, err, initial_err);
+            converged = c;
+            diverged = d;
+            if stop {
+                break;
+            }
+
+            // L3 responsibility: sample q*bs rows, gather their data.
+            for (t, sampler) in samplers.iter_mut().enumerate() {
+                for j in 0..bs {
+                    let i = sampler.sample();
+                    let dst = (t * bs + j) * n;
+                    a_blocks[dst..dst + n].copy_from_slice(system.a.row(i));
+                    b_blocks[t * bs + j] = system.b[i];
+                    inv_norms[t * bs + j] = 1.0 / system.row_norms_sq[i];
+                }
+            }
+
+            // L1/L2 responsibility: the compiled rkab_round graph.
+            let inputs = [
+                PjrtEngine::literal(&a_blocks, &[q as i64, bs as i64, n as i64])?,
+                PjrtEngine::literal(&b_blocks, &[q as i64, bs as i64])?,
+                PjrtEngine::literal(&inv_norms, &[q as i64, bs as i64])?,
+                PjrtEngine::literal(&x, &[n as i64])?,
+                alpha_lit.clone(),
+            ];
+            x = engine.run(&self.artifact, &inputs)?;
+            k += 1;
+        }
+
+        Ok(SolveResult {
+            x,
+            iterations: k,
+            converged,
+            diverged,
+            seconds: sw.seconds(),
+            rows_used: k * q * bs,
+            history,
+        })
+    }
+}

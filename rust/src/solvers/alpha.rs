@@ -1,0 +1,163 @@
+//! Optimal uniform row weight `alpha*` for RKA (paper eq. 6).
+//!
+//! For consistent systems and uniform weights `w_i = alpha`, Moorman et al.
+//! derive the convergence-optimal value from the extreme singular values:
+//!
+//! ```text
+//! s_min = σ²_min(A) / ‖A‖²_F      s_max = σ²_max(A) / ‖A‖²_F
+//!
+//! alpha* = q / (1 + (q-1) s_min)                     if s_max - s_min <= 1/(q-1)
+//!        = 2q / (1 + (q-1)(s_min + s_max))           otherwise
+//! ```
+//!
+//! The paper stresses that computing `alpha*` is expensive (Table 2 charges
+//! ~2500 s — the singular values of the full matrix) and therefore also
+//! evaluates a *partial-matrix* variant where each worker computes its own
+//! `alpha` from only the rows it owns (§3.3.1, Table 1). Both are here, and
+//! both report their computation time so Table 2 can charge it.
+
+use crate::data::LinearSystem;
+use crate::error::Result;
+use crate::linalg::eig::{inverse_power_iteration, power_iteration};
+use crate::metrics::Stopwatch;
+
+/// Extreme-singular-value summary of a (sub)matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralBounds {
+    /// `σ²_min / ‖A‖²_F`.
+    pub s_min: f64,
+    /// `σ²_max / ‖A‖²_F`.
+    pub s_max: f64,
+    /// Seconds spent computing the bounds (charged by Table 2).
+    pub seconds: f64,
+}
+
+/// Compute `s_min`/`s_max` over rows `[lo, hi)` of the system.
+///
+/// Builds the Gram matrix of the row block (n x n), then runs power and
+/// inverse-power iteration. For the full matrix pass `0..m`.
+pub fn spectral_bounds(system: &LinearSystem, lo: usize, hi: usize) -> Result<SpectralBounds> {
+    let sw = Stopwatch::start();
+    let block = system.a.row_block(lo, hi)?;
+    let fro_sq: f64 = system.row_norms_sq[lo..hi].iter().sum();
+    let g = block.gram();
+    let hi_eig = power_iteration(&g, 1e-10, 50_000)?;
+    // An underdetermined block (fewer rows than columns) has sigma_min = 0
+    // exactly; a near-singular Gram can also defeat the Cholesky-based
+    // inverse iteration numerically — in both cases report 0 rather than
+    // failing (the partial-matrix alpha of §3.3.1 then degenerates to q,
+    // which is the correct limit of eq. 6).
+    let s_min = if block.rows() < block.cols() {
+        0.0
+    } else {
+        match inverse_power_iteration(&g, 1e-10, 50_000) {
+            Ok(e) => e.value / fro_sq,
+            Err(_) => 0.0,
+        }
+    };
+    Ok(SpectralBounds {
+        s_min,
+        s_max: hi_eig.value / fro_sq,
+        seconds: sw.seconds(),
+    })
+}
+
+/// Paper eq. 6: the optimal uniform weight for `q` workers.
+pub fn optimal_alpha(bounds: &SpectralBounds, q: usize) -> f64 {
+    assert!(q >= 1);
+    if q == 1 {
+        // RKA with one worker is RK; eq. 6 degenerates to 1/(1) = 1... but
+        // formally q/(1+0) = 1, consistent.
+        return 1.0;
+    }
+    let qf = q as f64;
+    let (smin, smax) = (bounds.s_min, bounds.s_max);
+    if smax - smin <= 1.0 / (qf - 1.0) {
+        qf / (1.0 + (qf - 1.0) * smin)
+    } else {
+        2.0 * qf / (1.0 + (qf - 1.0) * (smin + smax))
+    }
+}
+
+/// Full-matrix `alpha*` (one value shared by all workers) + its cost.
+pub fn full_matrix_alpha(system: &LinearSystem, q: usize) -> Result<(f64, f64)> {
+    let b = spectral_bounds(system, 0, system.rows())?;
+    Ok((optimal_alpha(&b, q), b.seconds))
+}
+
+/// Partial-matrix `alpha` (§3.3.1): worker `t` of `q` computes its own value
+/// from the row partition it owns. Returns one alpha per worker plus the
+/// *maximum* per-worker cost (they run concurrently in the paper).
+pub fn partial_matrix_alphas(system: &LinearSystem, q: usize) -> Result<(Vec<f64>, f64)> {
+    let mut alphas = Vec::with_capacity(q);
+    let mut max_cost = 0.0f64;
+    for t in 0..q {
+        let (lo, hi) = system.row_partition(t, q);
+        let b = spectral_bounds(system, lo, hi)?;
+        alphas.push(optimal_alpha(&b, q));
+        max_cost = max_cost.max(b.seconds);
+    }
+    Ok((alphas, max_cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::linalg::jacobi_singular_values;
+
+    #[test]
+    fn bounds_match_jacobi_svd() {
+        let sys = DatasetBuilder::new(60, 6).seed(10).consistent();
+        let b = spectral_bounds(&sys, 0, 60).unwrap();
+        let sv = jacobi_singular_values(&sys.a, 1e-13, 200).unwrap();
+        let smax = sv[0] * sv[0] / sys.frobenius_sq;
+        let smin = sv[5] * sv[5] / sys.frobenius_sq;
+        assert!((b.s_max - smax).abs() / smax < 1e-6);
+        assert!((b.s_min - smin).abs() / smin < 1e-5);
+    }
+
+    #[test]
+    fn alpha_exceeds_one_and_is_bounded_by_q() {
+        // For well-conditioned random matrices alpha* ≈ q (the paper observes
+        // 1.999 and 3.992 for q = 2, 4).
+        let sys = DatasetBuilder::new(400, 20).seed(11).consistent();
+        let b = spectral_bounds(&sys, 0, 400).unwrap();
+        for q in [2usize, 4, 8, 16] {
+            let a = optimal_alpha(&b, q);
+            assert!(a > 1.0, "alpha {a} for q {q}");
+            assert!(a <= q as f64 + 1e-9, "alpha {a} for q {q}");
+        }
+    }
+
+    #[test]
+    fn q1_is_unit() {
+        let b = SpectralBounds { s_min: 0.01, s_max: 0.2, seconds: 0.0 };
+        assert_eq!(optimal_alpha(&b, 1), 1.0);
+    }
+
+    #[test]
+    fn branch_selection() {
+        // Tight spectrum -> first branch.
+        let tight = SpectralBounds { s_min: 0.10, s_max: 0.12, seconds: 0.0 };
+        let a1 = optimal_alpha(&tight, 4);
+        assert!((a1 - 4.0 / (1.0 + 3.0 * 0.10)).abs() < 1e-12);
+        // Wide spectrum -> second branch.
+        let wide = SpectralBounds { s_min: 0.01, s_max: 0.9, seconds: 0.0 };
+        let a2 = optimal_alpha(&wide, 4);
+        assert!((a2 - 8.0 / (1.0 + 3.0 * 0.91)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_alphas_close_to_full_for_few_workers() {
+        // Table 1's observation: partial-matrix alpha barely changes the
+        // iteration count because the per-partition spectra resemble the
+        // full spectrum when partitions are large.
+        let sys = DatasetBuilder::new(300, 10).seed(12).consistent();
+        let (full, _) = full_matrix_alpha(&sys, 2).unwrap();
+        let (parts, _) = partial_matrix_alphas(&sys, 2).unwrap();
+        for p in parts {
+            assert!((p - full).abs() / full < 0.05, "partial {p} vs full {full}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Conjugate Gradient for Least Squares (CGLS).
+//!
+//! The paper (§3.1) computes the least-squares reference solution `x_LS` of
+//! the inconsistent data set with CGLS; experiments then measure
+//! `‖x^(k) - x_LS‖`. CGLS applies CG to the normal equations `AᵀA x = Aᵀb`
+//! using only products with `A` and `Aᵀ` (never forming `AᵀA`).
+
+use crate::data::LinearSystem;
+use crate::error::{Error, Result};
+use crate::linalg::gemv::{gemv_into, gemv_transpose_into};
+use crate::linalg::vector::{axpy, norm2_sq};
+
+/// Solve `min ‖Ax - b‖` to relative normal-equation residual `tol`.
+///
+/// Returns `x_LS`; errors out if `max_iter` is exhausted first.
+pub fn solve_least_squares(system: &LinearSystem, tol: f64, max_iter: usize) -> Result<Vec<f64>> {
+    let m = system.rows();
+    let n = system.cols();
+    let a = &system.a;
+
+    let mut x = vec![0.0; n];
+    // r = b - A x  (x = 0 ⇒ r = b)
+    let mut r = system.b.clone();
+    // s = Aᵀ r
+    let mut s = vec![0.0; n];
+    gemv_transpose_into(a, &r, &mut s);
+    let mut p = s.clone();
+    let mut gamma = norm2_sq(&s);
+    let gamma0 = gamma;
+    if gamma0 == 0.0 {
+        return Ok(x); // b orthogonal to range(A): x = 0 is the LS solution
+    }
+    let mut q = vec![0.0; m];
+
+    for _ in 0..max_iter {
+        // q = A p
+        gemv_into(a, &p, &mut q);
+        let qq = norm2_sq(&q);
+        if qq == 0.0 {
+            break; // p in null space (rank deficient); x is optimal over explored space
+        }
+        let alpha = gamma / qq;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &q, &mut r);
+        gemv_transpose_into(a, &r, &mut s);
+        let gamma_new = norm2_sq(&s);
+        if gamma_new <= tol * tol * gamma0 {
+            return Ok(x);
+        }
+        let beta = gamma_new / gamma;
+        gamma = gamma_new;
+        // p = s + beta p
+        for i in 0..n {
+            p[i] = s[i] + beta * p[i];
+        }
+    }
+    Err(Error::NoConvergence { iterations: max_iter, residual: gamma.sqrt() })
+}
+
+/// Convenience: fill `system.x_ls` in place (no-op when already set).
+pub fn attach_least_squares(system: &mut LinearSystem, tol: f64, max_iter: usize) -> Result<()> {
+    if system.x_ls.is_none() {
+        system.x_ls = Some(solve_least_squares(system, tol, max_iter)?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::linalg::gemv::gemv_transpose;
+    use crate::linalg::{norm2, sub};
+
+    #[test]
+    fn exact_on_consistent_system() {
+        let sys = DatasetBuilder::new(80, 10).seed(5).consistent();
+        let x = solve_least_squares(&sys, 1e-12, 1000).unwrap();
+        let x_true = sys.x_true.as_ref().unwrap();
+        let rel = norm2(&sub(&x, x_true)) / norm2(x_true);
+        assert!(rel < 1e-8, "rel err {rel}");
+    }
+
+    #[test]
+    fn normal_equations_hold_on_inconsistent_system() {
+        // x_LS is characterized by Aᵀ(Ax - b) = 0.
+        let sys = DatasetBuilder::new(120, 8).seed(6).inconsistent();
+        let x = solve_least_squares(&sys, 1e-12, 2000).unwrap();
+        let ax = crate::linalg::gemv::gemv(&sys.a, &x).unwrap();
+        let resid = sub(&ax, &sys.b);
+        let grad = gemv_transpose(&sys.a, &resid).unwrap();
+        let scale = norm2(&sys.b) * sys.frobenius_sq.sqrt();
+        assert!(norm2(&grad) / scale < 1e-9, "grad norm {}", norm2(&grad));
+    }
+
+    #[test]
+    fn ls_residual_no_worse_than_any_probe() {
+        let sys = DatasetBuilder::new(60, 5).seed(7).inconsistent();
+        let x = solve_least_squares(&sys, 1e-12, 1000).unwrap();
+        let r_ls = sys.residual_norm(&x);
+        // Perturbations can only increase the residual.
+        for i in 0..5 {
+            let mut probe = x.clone();
+            probe[i] += 0.1;
+            assert!(sys.residual_norm(&probe) >= r_ls);
+        }
+    }
+
+    #[test]
+    fn attach_is_idempotent() {
+        let mut sys = DatasetBuilder::new(40, 4).seed(8).inconsistent();
+        attach_least_squares(&mut sys, 1e-10, 500).unwrap();
+        let first = sys.x_ls.clone().unwrap();
+        attach_least_squares(&mut sys, 1e-10, 500).unwrap();
+        assert_eq!(sys.x_ls.unwrap(), first);
+    }
+}

@@ -1,0 +1,134 @@
+//! Randomized Kaczmarz (Strohmer–Vershynin 2009), paper §2.2.
+//!
+//! Identical to cyclic Kaczmarz except the row index is sampled with
+//! probability `‖A^(l)‖² / ‖A‖²_F` (eq. 4). This is the sequential baseline
+//! every parallel method in the paper is compared against.
+
+use super::{stop_check, SolveOptions, SolveResult, Solver};
+use crate::data::LinearSystem;
+use crate::linalg::vector::{axpy, dot};
+use crate::metrics::{History, Stopwatch};
+use crate::rng::{AliasTable, Mt19937};
+
+/// Randomized Kaczmarz solver.
+pub struct RkSolver {
+    /// RNG seed (the paper runs 10 seeds and averages iteration counts).
+    pub seed: u32,
+    /// Relaxation parameter (1.0 = pure projection).
+    pub relaxation: f64,
+}
+
+impl RkSolver {
+    /// RK with unit relaxation.
+    pub fn new(seed: u32) -> Self {
+        RkSolver { seed, relaxation: 1.0 }
+    }
+
+    /// Override the relaxation parameter.
+    pub fn with_relaxation(seed: u32, relaxation: f64) -> Self {
+        assert!(relaxation > 0.0 && relaxation < 2.0, "alpha must be in (0,2)");
+        RkSolver { seed, relaxation }
+    }
+}
+
+impl Solver for RkSolver {
+    fn name(&self) -> &'static str {
+        "RK"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let mut x = vec![0.0; n];
+        let mut rng = Mt19937::new(self.seed);
+        // Alias table: O(1) row sampling (see rng::distribution docs).
+        let dist = AliasTable::new(system.sampling_weights());
+        let mut history = History::every(opts.history_step);
+        let initial_err = system.error_sq(&x);
+        let timed = opts.fixed_iterations.is_some();
+
+        let sw = Stopwatch::start();
+        let mut k = 0usize;
+        let (mut converged, mut diverged);
+        loop {
+            let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
+            if history.due(k) {
+                history.record(k, err.sqrt(), system.residual_norm(&x));
+            }
+            let (stop, c, d) = stop_check(opts, k, err, initial_err);
+            converged = c;
+            diverged = d;
+            if stop {
+                break;
+            }
+            let i = dist.sample(&mut rng);
+            let row = system.a.row(i);
+            let scale = self.relaxation * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
+            axpy(scale, row, &mut x);
+            k += 1;
+        }
+
+        SolveResult {
+            x,
+            iterations: k,
+            converged,
+            diverged,
+            seconds: sw.seconds(),
+            rows_used: k,
+            history,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{coherent_system, DatasetBuilder};
+    use crate::solvers::ck::CkSolver;
+
+    #[test]
+    fn converges_on_consistent_system() {
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let r = RkSolver::new(42).solve(&sys, &SolveOptions::default().with_tolerance(1e-12));
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-12);
+    }
+
+    #[test]
+    fn different_seeds_different_iteration_counts() {
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let opts = SolveOptions::default().with_tolerance(1e-10);
+        let it: Vec<usize> =
+            (0..4).map(|s| RkSolver::new(s).solve(&sys, &opts).iterations).collect();
+        // At least two runs should differ (sampling order differs).
+        assert!(it.windows(2).any(|w| w[0] != w[1]), "{it:?}");
+    }
+
+    #[test]
+    fn beats_cyclic_on_coherent_system() {
+        // Fig. 1 in miniature: consecutive rows nearly parallel makes CK
+        // crawl; RK jumps between distant hyperplanes and needs far fewer
+        // iterations at equal tolerance.
+        let sys = coherent_system(400, 4, 0.002, 11);
+        let opts = SolveOptions::default().with_tolerance(1e-6).with_max_iterations(4_000_000);
+        let ck = CkSolver::new().solve(&sys, &opts);
+        let rk = RkSolver::new(7).solve(&sys, &opts);
+        assert!(rk.converged);
+        assert!(
+            !ck.converged || ck.iterations > 2 * rk.iterations,
+            "ck {} rk {}",
+            ck.iterations,
+            rk.iterations
+        );
+    }
+
+    #[test]
+    fn does_not_reach_ls_solution_on_inconsistent() {
+        // §2.2: RK stalls at a convergence horizon away from x_LS.
+        let sys = DatasetBuilder::new(300, 5).seed(9).inconsistent();
+        let mut sys = sys;
+        sys.x_ls = Some(crate::solvers::cgls::solve_least_squares(&sys, 1e-12, 10_000).unwrap());
+        let opts = SolveOptions::default().with_tolerance(1e-10).with_max_iterations(200_000);
+        let r = RkSolver::new(3).solve(&sys, &opts);
+        assert!(!r.converged, "RK should not hit 1e-10 of x_LS on noisy system");
+    }
+}

@@ -1,0 +1,235 @@
+//! Randomized Kaczmarz with Averaging (Moorman et al. 2021) — sequential
+//! semantics of the paper's Algorithm 1 / eq. 7:
+//!
+//! ```text
+//! x^(k+1) = x^(k) + (alpha/q) Σ_{i ∈ τ_k}  (b_i - <A^(i), x^(k)>)/‖A^(i)‖²  A^(i)ᵀ
+//! ```
+//!
+//! Each of the `q` (virtual) workers samples one row per iteration from its
+//! own RNG stream; all projections use the *previous* iterate (that is what
+//! `x^(prev)` in Algorithm 1 enforces) and are then averaged. This module is
+//! the semantic reference: `parallel::rka_shared` and `distributed::rka_dist`
+//! must produce exactly the same iterates given the same seeds.
+//!
+//! With `q = 1` this is exactly RK.
+
+use super::sampling::{RowSampler, SamplingScheme};
+use super::{stop_check, SolveOptions, SolveResult, Solver};
+use crate::data::LinearSystem;
+use crate::linalg::vector::{axpy, dot};
+use crate::metrics::{History, Stopwatch};
+
+/// Per-worker relaxation weights.
+#[derive(Clone, Debug)]
+pub enum Weights {
+    /// One uniform `alpha` for all workers (the paper's main setting).
+    Uniform(f64),
+    /// A distinct `alpha` per worker — the partial-matrix variant of §3.3.1.
+    PerWorker(Vec<f64>),
+}
+
+impl Weights {
+    /// Weight for worker `t`.
+    #[inline]
+    pub fn get(&self, t: usize) -> f64 {
+        match self {
+            Weights::Uniform(a) => *a,
+            Weights::PerWorker(v) => v[t],
+        }
+    }
+
+    /// Number of per-worker entries (None for uniform).
+    pub fn len(&self) -> Option<usize> {
+        match self {
+            Weights::Uniform(_) => None,
+            Weights::PerWorker(v) => Some(v.len()),
+        }
+    }
+}
+
+/// RKA with `q` virtual workers (sequential reference implementation).
+pub struct RkaSolver {
+    /// Base RNG seed; worker `t` uses `derive_seed(seed, t)`.
+    pub seed: u32,
+    /// Number of averaged updates per iteration (`q` in eq. 7).
+    pub q: usize,
+    /// Row weights (uniform `alpha` or per-worker).
+    pub weights: Weights,
+    /// Row-sampling scheme (Full Matrix Access vs Distributed Approach).
+    pub scheme: SamplingScheme,
+}
+
+impl RkaSolver {
+    /// RKA with uniform weights and full-matrix sampling.
+    pub fn new(seed: u32, q: usize, alpha: f64) -> Self {
+        assert!(q >= 1, "q must be >= 1");
+        RkaSolver { seed, q, weights: Weights::Uniform(alpha), scheme: SamplingScheme::FullMatrix }
+    }
+
+    /// Override the sampling scheme.
+    pub fn with_scheme(mut self, scheme: SamplingScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Use per-worker weights (partial-matrix alphas).
+    pub fn with_weights(mut self, weights: Weights) -> Self {
+        if let Some(len) = weights.len() {
+            assert_eq!(len, self.q, "need one weight per worker");
+        }
+        self.weights = weights;
+        self
+    }
+}
+
+impl Solver for RkaSolver {
+    fn name(&self) -> &'static str {
+        "RKA"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let q = self.q;
+        let mut x = vec![0.0; n];
+        let mut delta = vec![0.0; n]; // accumulated averaged update
+        let mut samplers: Vec<RowSampler> = (0..q)
+            .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
+            .collect();
+        let mut history = History::every(opts.history_step);
+        let initial_err = system.error_sq(&x);
+        let timed = opts.fixed_iterations.is_some();
+
+        let sw = Stopwatch::start();
+        let mut k = 0usize;
+        let (mut converged, mut diverged);
+        loop {
+            let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
+            if history.due(k) {
+                history.record(k, err.sqrt(), system.residual_norm(&x));
+            }
+            let (stop, c, d) = stop_check(opts, k, err, initial_err);
+            converged = c;
+            diverged = d;
+            if stop {
+                break;
+            }
+            // All q projections against the same x^(k) (the x^(prev) rule).
+            delta.fill(0.0);
+            for (t, sampler) in samplers.iter_mut().enumerate() {
+                let i = sampler.sample();
+                let row = system.a.row(i);
+                let scale = self.weights.get(t) * (system.b[i] - dot(row, &x))
+                    / (q as f64 * system.row_norms_sq[i]);
+                axpy(scale, row, &mut delta);
+            }
+            axpy(1.0, &delta, &mut x);
+            k += 1;
+        }
+
+        SolveResult {
+            x,
+            iterations: k,
+            converged,
+            diverged,
+            seconds: sw.seconds(),
+            rows_used: k * q,
+            history,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rk::RkSolver;
+
+    #[test]
+    fn converges_with_unit_alpha() {
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let r = RkaSolver::new(3, 4, 1.0).solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-8);
+        assert_eq!(r.rows_used, r.iterations * 4);
+    }
+
+    #[test]
+    fn more_workers_fewer_iterations() {
+        // Fig. 4a: iterations decrease with q. The effect is strongest for
+        // well-overdetermined systems (the paper's are 5:1 to 40:1), so use a
+        // 20:1 aspect ratio and average over seeds to beat sampling noise.
+        let sys = DatasetBuilder::new(2000, 100).seed(2).consistent();
+        let opts = SolveOptions::default().with_tolerance(1e-8);
+        let avg = |q: usize| -> f64 {
+            (0..3)
+                .map(|s| RkaSolver::new(s, q, 1.0).solve(&sys, &opts).iterations)
+                .sum::<usize>() as f64
+                / 3.0
+        };
+        let i1 = avg(1);
+        let i8 = avg(8);
+        assert!(i8 < 0.9 * i1, "q=8 took {i8} vs q=1 {i1}");
+    }
+
+    #[test]
+    fn optimal_alpha_beats_unit_alpha() {
+        // Fig. 5a vs 4a: alpha* reduces iterations much more than alpha = 1.
+        let sys = DatasetBuilder::new(400, 20).seed(3).consistent();
+        let opts = SolveOptions::default().with_tolerance(1e-8);
+        let (astar, _) = crate::solvers::alpha::full_matrix_alpha(&sys, 8).unwrap();
+        let unit = RkaSolver::new(5, 8, 1.0).solve(&sys, &opts).iterations;
+        let opt = RkaSolver::new(5, 8, astar).solve(&sys, &opts).iterations;
+        assert!(opt < unit, "alpha* {opt} vs alpha=1 {unit}");
+    }
+
+    #[test]
+    fn q1_matches_rk_exactly() {
+        // "Note that, if q = 1, we recover the RK method."
+        let sys = DatasetBuilder::new(100, 8).seed(4).consistent();
+        let opts = SolveOptions::default().with_fixed_iterations(500);
+        let rka = RkaSolver::new(9, 1, 1.0).solve(&sys, &opts);
+        // RK with the same derived stream:
+        let rk = RkSolver { seed: crate::rng::derive_seed(9, 0), relaxation: 1.0 }
+            .solve(&sys, &opts);
+        for (a, b) in rka.x.iter().zip(&rk.x) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partitioned_sampling_converges_too() {
+        let sys = DatasetBuilder::new(200, 10).seed(6).consistent();
+        let r = RkaSolver::new(3, 4, 1.0)
+            .with_scheme(SamplingScheme::Partitioned)
+            .solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn per_worker_weights_converge() {
+        let sys = DatasetBuilder::new(200, 10).seed(7).consistent();
+        let (alphas, _) = crate::solvers::alpha::partial_matrix_alphas(&sys, 4).unwrap();
+        let r = RkaSolver::new(3, 4, 1.0)
+            .with_weights(Weights::PerWorker(alphas))
+            .solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn reduces_horizon_on_inconsistent_systems() {
+        // §3.5 / Fig. 12: larger q ⇒ lower error plateau vs x_LS.
+        let mut sys = DatasetBuilder::new(400, 10).seed(8).inconsistent();
+        crate::solvers::cgls::attach_least_squares(&mut sys, 1e-12, 5000).unwrap();
+        let opts = SolveOptions::default()
+            .with_fixed_iterations(20_000)
+            .with_history_step(500);
+        let h1 = RkaSolver::new(2, 1, 1.0).solve(&sys, &opts).history;
+        let h20 = RkaSolver::new(2, 20, 1.0).solve(&sys, &opts).history;
+        let tail1 = h1.tail_error(10).unwrap();
+        let tail20 = h20.tail_error(10).unwrap();
+        assert!(
+            tail20 < tail1 / 2.0,
+            "horizon q=20 ({tail20:.3e}) should be well below q=1 ({tail1:.3e})"
+        );
+    }
+}

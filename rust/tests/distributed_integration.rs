@@ -1,0 +1,108 @@
+//! Integration of the simulated-MPI layer: Algorithms 2/4 across world
+//! sizes, placements, and against their shared-memory/sequential semantics.
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::distributed::{DistRka, DistRkab, Placement, SimCluster};
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::sampling::SamplingScheme;
+use kaczmarz::solvers::{SolveOptions, Solver};
+
+#[test]
+fn dist_rka_converges_across_world_sizes_and_placements() {
+    let sys = DatasetBuilder::new(480, 16).seed(1).consistent();
+    let opts = SolveOptions::default();
+    for np in [1usize, 2, 4, 8, 12] {
+        for placement in [Placement::full_node(), Placement::two_per_node()] {
+            let cluster = SimCluster::new(np, placement);
+            let r = DistRka::new(3, 1.0).solve(&sys, &opts, &cluster);
+            assert!(r.converged, "np={np} ppn={}", placement.ppn);
+            assert!(sys.error_sq(&r.x) < 1e-8);
+        }
+    }
+}
+
+#[test]
+fn dist_rka_iterations_match_sequential_partitioned() {
+    let sys = DatasetBuilder::new(500, 20).seed(2).consistent();
+    let opts = SolveOptions::default();
+    for np in [2usize, 4] {
+        let cluster = SimCluster::new(np, Placement::two_per_node());
+        let dist = DistRka::new(11, 1.0).solve(&sys, &opts, &cluster);
+        let seq = RkaSolver::new(11, np, 1.0)
+            .with_scheme(SamplingScheme::Partitioned)
+            .solve(&sys, &opts);
+        let diff = (dist.iterations as f64 - seq.iterations as f64).abs() / seq.iterations as f64;
+        assert!(diff < 0.01, "np={np}: {} vs {}", dist.iterations, seq.iterations);
+    }
+}
+
+#[test]
+fn dist_rkab_block_amortizes_allreduce() {
+    // Fixed row budget: bigger blocks => fewer Allreduces => less modeled
+    // comm time (the Fig. 11 mechanism).
+    let sys = DatasetBuilder::new(960, 24).seed(3).consistent();
+    let total_rows_per_rank = 240;
+    let comm_of = |bs: usize| {
+        let cluster = SimCluster::new(4, Placement::two_per_node());
+        let opts = SolveOptions::default().with_fixed_iterations(total_rows_per_rank / bs);
+        let r = DistRkab::new(5, bs, 1.0).solve(&sys, &opts, &cluster);
+        r.rank_stats.iter().map(|s| s.comm_seconds).fold(0.0, f64::max)
+    };
+    let c_small = comm_of(4);
+    let c_big = comm_of(48);
+    assert!(c_big < c_small / 4.0, "bs=48 comm {c_big:.3e} vs bs=4 {c_small:.3e}");
+}
+
+#[test]
+fn placement_changes_simulated_time_shape() {
+    // Small per-rank working sets: packing a node is cheaper (intra links).
+    // That is the Fig. 6a observation.
+    let sys = DatasetBuilder::new(480, 16).seed(4).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(300);
+    let sim_of = |placement: Placement| {
+        let cluster = SimCluster::new(8, placement);
+        let r = DistRka::new(7, 1.0).solve(&sys, &opts, &cluster);
+        (r.sim_seconds, r.rank_stats.iter().map(|s| s.comm_seconds).fold(0.0, f64::max))
+    };
+    let (_, comm_packed) = sim_of(Placement::full_node());
+    let (_, comm_spread) = sim_of(Placement::two_per_node());
+    // Packed placement never crosses a node at np=8 <= 24: cheaper comm.
+    assert!(comm_packed < comm_spread, "packed {comm_packed:.3e} spread {comm_spread:.3e}");
+}
+
+#[test]
+fn contention_penalizes_packed_nodes_for_large_working_sets() {
+    // Large per-rank working set *relative to the LLC*: the contention
+    // model must make the packed placement's compute slower (the Fig. 6b
+    // mechanism). The test system is small, so shrink the modeled LLC
+    // rather than blowing up the matrix.
+    let sys = DatasetBuilder::new(2400, 100).seed(5).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(50);
+    let adj_of = |placement: Placement| {
+        let mut cluster = SimCluster::new(12, placement);
+        cluster.model.llc_bytes = 100_000.0; // rank working set ~160 KB
+        let r = DistRka::new(7, 1.0).solve(&sys, &opts, &cluster);
+        let raw: f64 = r.rank_stats.iter().map(|s| s.compute_seconds).sum();
+        let adj: f64 = r.rank_stats.iter().map(|s| s.adjusted_compute_seconds).sum();
+        adj / raw
+    };
+    let packed_factor = adj_of(Placement::full_node());
+    let spread_factor = adj_of(Placement::two_per_node());
+    assert!(
+        packed_factor > spread_factor,
+        "packed {packed_factor} should exceed spread {spread_factor}"
+    );
+}
+
+#[test]
+fn dist_results_replicated_across_ranks() {
+    // After the final Allreduce every rank holds the same x; the collected
+    // result must be consistent with solving on any rank.
+    let sys = DatasetBuilder::new(240, 12).seed(6).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(100);
+    let cluster = SimCluster::new(3, Placement::two_per_node());
+    let r = DistRkab::new(9, 6, 1.0).solve(&sys, &opts, &cluster);
+    assert_eq!(r.iterations, 100);
+    assert_eq!(r.x.len(), 12);
+    assert_eq!(r.rank_stats.len(), 3);
+}

@@ -1,0 +1,45 @@
+//! Smoke-runs every registered experiment at CI scale and sanity-checks the
+//! emitted reports (every driver must produce its shape-check section and at
+//! least one table).
+
+use kaczmarz::coordinator::{find, registry, Scale};
+
+#[test]
+fn every_experiment_smokes() {
+    // One pass over the whole registry at smoke scale. This is the paper's
+    // full evaluation pipeline end to end, miniaturized.
+    let scale = Scale::smoke();
+    for exp in registry() {
+        let md = exp.run(scale).to_markdown();
+        assert!(
+            md.contains("###"),
+            "{} produced no table:\n{md}",
+            exp.id()
+        );
+        assert!(
+            md.contains("Shape check") || md.contains("horizon"),
+            "{} missing its shape-check note",
+            exp.id()
+        );
+    }
+}
+
+#[test]
+fn reports_write_to_disk() {
+    let exp = find("fig1").unwrap();
+    let report = exp.run(Scale::smoke());
+    let dir = std::env::temp_dir().join("kcz_experiments_smoke");
+    let path = report.write(&dir, exp.id()).unwrap();
+    let content = std::fs::read_to_string(&path).unwrap();
+    assert!(content.contains("Fig 1"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_ids_unique() {
+    let mut ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
+    let before = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), before);
+}

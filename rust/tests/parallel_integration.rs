@@ -1,0 +1,114 @@
+//! Integration of the shared-memory engine: parallel solvers vs their
+//! sequential semantic references, across strategies, schemes, and thread
+//! counts (including oversubscription).
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::parallel::{
+    AsyRkSolver, AveragingStrategy, BlockSequentialRk, ParallelRka, ParallelRkab,
+};
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::sampling::SamplingScheme;
+use kaczmarz::solvers::{SolveOptions, Solver};
+
+#[test]
+fn rka_all_strategies_all_thread_counts() {
+    let sys = DatasetBuilder::new(400, 16).seed(1).consistent();
+    let opts = SolveOptions::default();
+    for q in [1usize, 2, 4, 8] {
+        for strategy in [
+            AveragingStrategy::Critical,
+            AveragingStrategy::Atomic,
+            AveragingStrategy::Reduce,
+            AveragingStrategy::MatrixGather,
+        ] {
+            let r = ParallelRka::new(3, q, 1.0).with_strategy(strategy).solve(&sys, &opts);
+            assert!(r.converged, "q={q} {strategy:?}");
+            assert!(sys.error_sq(&r.x) < 1e-8, "q={q} {strategy:?}");
+        }
+    }
+}
+
+#[test]
+fn rka_iteration_counts_match_sequential_reference() {
+    // Same seeds => identical row streams => identical iteration counts
+    // (modulo FP reassociation affecting the last iteration, so allow 1%).
+    let sys = DatasetBuilder::new(500, 20).seed(2).consistent();
+    let opts = SolveOptions::default();
+    for q in [2usize, 4] {
+        let par = ParallelRka::new(11, q, 1.0).solve(&sys, &opts).iterations;
+        let seq = RkaSolver::new(11, q, 1.0).solve(&sys, &opts).iterations;
+        let diff = (par as f64 - seq as f64).abs() / seq as f64;
+        assert!(diff < 0.01, "q={q}: par {par} vs seq {seq}");
+    }
+}
+
+#[test]
+fn rkab_matches_sequential_across_block_sizes() {
+    let sys = DatasetBuilder::new(400, 16).seed(3).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(30);
+    for bs in [1usize, 4, 16, 64] {
+        let par = ParallelRkab::new(7, 4, bs, 1.0).solve(&sys, &opts);
+        let seq = RkabSolver::new(7, 4, bs, 1.0).solve(&sys, &opts);
+        let drift: f64 =
+            par.x.iter().zip(&seq.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        let scale = seq.x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        assert!(drift < 1e-6 * scale.max(1.0), "bs={bs} drift {drift}");
+    }
+}
+
+#[test]
+fn rkab_partitioned_equals_distributed_sampling_semantics() {
+    let sys = DatasetBuilder::new(400, 16).seed(4).consistent();
+    let opts = SolveOptions::default();
+    let r = ParallelRkab::new(5, 4, 16, 1.0)
+        .with_scheme(SamplingScheme::Partitioned)
+        .solve(&sys, &opts);
+    assert!(r.converged);
+}
+
+#[test]
+fn block_sequential_same_chain_as_rk() {
+    let sys = DatasetBuilder::new(300, 64).seed(5).consistent();
+    let opts = SolveOptions::default();
+    let counts: Vec<usize> = [1usize, 2, 4]
+        .iter()
+        .map(|&q| BlockSequentialRk::new(13, q).solve(&sys, &opts).iterations)
+        .collect();
+    // The chain is identical regardless of thread count.
+    assert_eq!(counts[0], counts[1]);
+    assert_eq!(counts[1], counts[2]);
+}
+
+#[test]
+fn asyrk_error_floor_grows_with_threads_on_dense() {
+    // The §2.3.3 point: HOGWILD assumptions break on dense systems — more
+    // threads means more overwritten updates. We check it still converges
+    // for small q but takes more updates than sequential RK-equivalent.
+    let sys = DatasetBuilder::new(300, 12).seed(6).consistent();
+    let opts = SolveOptions::default().with_tolerance(1e-6).with_max_iterations(3_000_000);
+    let r1 = AsyRkSolver::new(3, 1).solve(&sys, &opts);
+    let r4 = AsyRkSolver::new(3, 4).solve(&sys, &opts);
+    assert!(r1.converged && r4.converged);
+    // Stale-read updates waste work: q=4 should use at least as many total
+    // row updates as q=1 (allow small slack for run-to-run noise).
+    assert!(
+        r4.iterations as f64 > 0.8 * r1.iterations as f64,
+        "q4 {} vs q1 {}",
+        r4.iterations,
+        r1.iterations
+    );
+}
+
+#[test]
+fn oversubscribed_thread_counts_still_correct() {
+    // The paper runs 64 threads; this container has fewer cores. The engine
+    // must stay correct under oversubscription.
+    let sys = DatasetBuilder::new(300, 12).seed(7).consistent();
+    let opts = SolveOptions::default().with_max_iterations(2_000_000);
+    let q = 2 * std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let r = ParallelRka::new(3, q, 1.0).solve(&sys, &opts);
+    assert!(r.converged, "q={q}");
+    let r = ParallelRkab::new(3, q, 12, 1.0).solve(&sys, &opts);
+    assert!(r.converged, "rkab q={q}");
+}

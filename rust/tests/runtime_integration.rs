@@ -1,0 +1,107 @@
+//! Integration: artifacts -> PJRT -> numerics vs the native solvers.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::runtime::{ArtifactKind, Manifest, PjrtEngine, PjrtRkabSolver};
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_all_kinds() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.entries().iter().any(|e| e.kind == ArtifactKind::RkaStep));
+    assert!(m.entries().iter().any(|e| e.kind == ArtifactKind::RkabBlock));
+    assert!(m.entries().iter().any(|e| e.kind == ArtifactKind::RkabRound));
+}
+
+#[test]
+fn engine_compiles_and_runs_rka_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::new(&dir).unwrap();
+    let entry = engine.find(ArtifactKind::RkaStep, 4, 1, 256).unwrap();
+    let (q, n) = (entry.q, entry.n);
+
+    // Identity-ish check: x = 0, rows = unit vectors e_0..e_3, b = 1 =>
+    // update = (alpha/q) * sum e_i.
+    let mut a = vec![0.0f64; q * n];
+    for t in 0..q {
+        a[t * n + t] = 1.0;
+    }
+    let b = vec![1.0f64; q];
+    let inv_norms = vec![1.0f64; q];
+    let x = vec![0.0f64; n];
+    let alpha_over_q = [1.0 / q as f64];
+
+    let inputs = [
+        PjrtEngine::literal(&a, &[q as i64, n as i64]).unwrap(),
+        PjrtEngine::literal(&b, &[q as i64]).unwrap(),
+        PjrtEngine::literal(&inv_norms, &[q as i64]).unwrap(),
+        PjrtEngine::literal(&x, &[n as i64]).unwrap(),
+        PjrtEngine::literal(&alpha_over_q, &[1]).unwrap(),
+    ];
+    let out = engine.run(&entry.name, &inputs).unwrap();
+    assert_eq!(out.len(), n);
+    for t in 0..q {
+        assert!((out[t] - 0.25).abs() < 1e-12, "out[{t}] = {}", out[t]);
+    }
+    for j in q..n {
+        assert_eq!(out[j], 0.0);
+    }
+}
+
+#[test]
+fn pjrt_rkab_matches_native_rkab() {
+    // The headline composition test: same seed => same sampled rows =>
+    // same iterates as the native solver, up to f64 reassociation inside
+    // the XLA-compiled reduction.
+    let Some(dir) = artifacts_dir() else { return };
+    let (q, bs, n) = (4, 64, 256);
+    let sys = DatasetBuilder::new(2000, n).seed(5).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(20);
+
+    let pjrt = PjrtRkabSolver::new(&dir, 9, q, bs, n, 1.0).unwrap();
+    let got = pjrt.solve(&sys, &opts).unwrap();
+    let native = RkabSolver::new(9, q, bs, 1.0).solve(&sys, &opts);
+
+    let drift: f64 =
+        got.x.iter().zip(&native.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    let scale = native.x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+    assert!(drift < 1e-8 * scale.max(1.0), "drift {drift} (scale {scale})");
+    assert_eq!(got.rows_used, native.rows_used);
+}
+
+#[test]
+fn pjrt_rkab_converges_to_solution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (q, bs, n) = (4, 256, 256);
+    let sys = DatasetBuilder::new(4000, n).seed(7).consistent();
+    let opts = SolveOptions::default().with_tolerance(1e-8).with_max_iterations(2000);
+    let pjrt = PjrtRkabSolver::new(&dir, 3, q, bs, n, 1.0).unwrap();
+    let r = pjrt.solve(&sys, &opts).unwrap();
+    assert!(r.converged, "did not converge in {} iterations", r.iterations);
+    assert!(sys.error_sq(&r.x) < 1e-8);
+}
+
+#[test]
+fn missing_shape_is_clear_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = match PjrtRkabSolver::new(&dir, 1, 13, 999, 123, 1.0) {
+        Err(e) => e,
+        Ok(_) => panic!("expected missing-artifact error"),
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("artifact not found"), "got: {msg}");
+}

@@ -1,0 +1,104 @@
+//! Cross-module integration of the sequential solvers on paper-shaped
+//! workloads: consistent + inconsistent data sets, CGLS references, the
+//! alpha* pipeline, and dataset IO.
+
+use kaczmarz::data::{io, DatasetBuilder};
+use kaczmarz::solvers::alpha::{full_matrix_alpha, partial_matrix_alphas};
+use kaczmarz::solvers::cgls::attach_least_squares;
+use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+
+#[test]
+fn all_solvers_agree_on_the_solution() {
+    let sys = DatasetBuilder::new(600, 30).seed(21).consistent();
+    let x_true = sys.x_true.clone().unwrap();
+    let opts = SolveOptions::default().with_tolerance(1e-12);
+    let solvers: Vec<Box<dyn Solver>> = vec![
+        Box::new(CkSolver::new()),
+        Box::new(RkSolver::new(1)),
+        Box::new(RkaSolver::new(1, 4, 1.0)),
+        Box::new(RkabSolver::new(1, 4, 30, 1.0)),
+    ];
+    for s in solvers {
+        let r = s.solve(&sys, &opts);
+        assert!(r.converged, "{} did not converge", s.name());
+        let err: f64 = r
+            .x
+            .iter()
+            .zip(&x_true)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-5, "{}: err {err}", s.name());
+    }
+}
+
+#[test]
+fn paper_timing_protocol_roundtrip() {
+    // The §3.1 protocol: calibrate iterations over seeds, then run timed
+    // with fixed iterations — the fixed run must land within tolerance of
+    // the converged state.
+    let sys = DatasetBuilder::new(500, 25).seed(3).consistent();
+    let calibrate = SolveOptions::default().with_tolerance(1e-8);
+    let mut total = 0usize;
+    for seed in 0..5 {
+        let r = RkSolver::new(seed).solve(&sys, &calibrate);
+        assert!(r.converged);
+        total += r.iterations;
+    }
+    let avg = total / 5;
+    let timed = SolveOptions::default().with_fixed_iterations(avg);
+    let r = RkSolver::new(2).solve(&sys, &timed);
+    assert_eq!(r.iterations, avg);
+    // Near the calibrated tolerance (within 100x — seeds differ).
+    assert!(sys.error_sq(&r.x) < 1e-6, "err {}", sys.error_sq(&r.x));
+}
+
+#[test]
+fn inconsistent_pipeline_cgls_reference_and_horizon() {
+    let mut sys = DatasetBuilder::new(800, 20).seed(17).inconsistent();
+    attach_least_squares(&mut sys, 1e-12, 10_000).unwrap();
+    // RK stalls above the LS solution; RKA with q=20 gets closer.
+    let opts = SolveOptions::default().with_fixed_iterations(30_000).with_history_step(1000);
+    let rk = RkSolver::new(4).solve(&sys, &opts);
+    let rka = RkaSolver::new(4, 20, 1.0).solve(&sys, &opts);
+    let rk_tail = rk.history.tail_error(5).unwrap();
+    let rka_tail = rka.history.tail_error(5).unwrap();
+    assert!(rka_tail < rk_tail, "rka {rka_tail:.3e} vs rk {rk_tail:.3e}");
+    // Neither reaches the LS solution exactly.
+    assert!(sys.error_sq(&rk.x) > 0.0);
+}
+
+#[test]
+fn alpha_star_pipeline_reduces_iterations() {
+    let sys = DatasetBuilder::new(800, 40).seed(5).consistent();
+    let opts = SolveOptions::default();
+    let (astar, cost) = full_matrix_alpha(&sys, 8).unwrap();
+    assert!(astar > 1.0 && cost > 0.0);
+    let unit = RkaSolver::new(2, 8, 1.0).solve(&sys, &opts).iterations;
+    let opt = RkaSolver::new(2, 8, astar).solve(&sys, &opts).iterations;
+    assert!(opt < unit, "alpha*: {opt} vs unit {unit}");
+    // Partial alphas land in the same ballpark (Table 1's observation).
+    let (partials, _) = partial_matrix_alphas(&sys, 8).unwrap();
+    for p in &partials {
+        assert!((p - astar).abs() / astar < 0.2, "partial {p} vs {astar}");
+    }
+}
+
+#[test]
+fn dataset_io_roundtrip_preserves_solution() {
+    let mut sys = DatasetBuilder::new(200, 10).seed(9).inconsistent();
+    attach_least_squares(&mut sys, 1e-12, 5_000).unwrap();
+    let path = std::env::temp_dir().join("kcz_integration_io.bin");
+    io::save(&sys, &path).unwrap();
+    let back = io::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // Solving the loaded system gives the same result.
+    let opts = SolveOptions::default().with_fixed_iterations(2_000);
+    let a = RkSolver::new(1).solve(&sys, &opts);
+    let b = RkSolver::new(1).solve(&back, &opts);
+    assert_eq!(a.x, b.x);
+}
