@@ -17,4 +17,10 @@ fn main() {
         let _ = report.write(&out, id);
         eprintln!("[bench] {id} finished in {:.1} s (scale {factor}, seeds {seeds})", sw.seconds());
     }
+    // All RKAB solves above ran as dispatches on the persistent worker pool:
+    // the resident count is the high-water q - 1, not (solves x q) spawns.
+    eprintln!(
+        "[bench] persistent pool residency: {} workers after all runs",
+        kaczmarz::parallel::pool::global().worker_count()
+    );
 }

@@ -5,11 +5,13 @@
 
 use kaczmarz::data::DatasetBuilder;
 use kaczmarz::linalg::vector::{axpy, dot};
+use kaczmarz::linalg::{gemv_block_into, Matrix};
 use kaczmarz::metrics::Stopwatch;
 use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::report::Table;
 use kaczmarz::rng::{AliasTable, DiscreteDistribution, Mt19937};
-use kaczmarz::solvers::{SolveOptions, Solver};
+use kaczmarz::solvers::rkab::block_sweep;
+use kaczmarz::solvers::{RowSampler, SamplingScheme, SolveOptions, Solver};
 use std::sync::Arc;
 
 fn bench<F: FnMut()>(mut f: F, iters: usize) -> f64 {
@@ -74,6 +76,113 @@ fn main() {
         format!("{:.1}", r.seconds / r.iterations as f64 * 1e9),
         format!("{:.1}", 16_000.0 / (r.seconds / r.iterations as f64) / 1e9),
     ]);
+
+    // RKAB in-block sweep: the real fused kernel (solvers::rkab::block_sweep,
+    // the exact function on the solver hot path) vs the seed's scalar
+    // dot-then-axpy row loop, per block size. Both shapes draw bs fresh rows
+    // per sweep from identically-seeded samplers, so sampling cost cancels;
+    // the fused kernel touches v once per projection instead of twice, so it
+    // must be no slower at every bs and clearly faster once the block stops
+    // fitting in L1/L2.
+    {
+        let n = sys.cols();
+        for bs in [1usize, 8, 32, 128, 512] {
+            let sweeps = (2_000_000 / (bs * n).max(1)).max(10);
+            let alpha = 1.0;
+
+            // Row-loop baseline (the seed's formulation).
+            let mut sampler = RowSampler::new(&sys, SamplingScheme::FullMatrix, 0, 1, 17);
+            let mut idx: Vec<usize> = Vec::with_capacity(bs);
+            let mut v = vec![0.0f64; n];
+            let t_base = bench(
+                || {
+                    idx.clear();
+                    for _ in 0..bs {
+                        idx.push(sampler.sample());
+                    }
+                    for &i in &idx {
+                        let row = sys.a.row(i);
+                        let scale = alpha * (sys.b[i] - dot(row, &v)) / sys.row_norms_sq[i];
+                        axpy(scale, row, &mut v);
+                    }
+                    std::hint::black_box(&mut v);
+                },
+                sweeps,
+            );
+
+            // The solver's fused kernel, measured directly.
+            let mut sampler = RowSampler::new(&sys, SamplingScheme::FullMatrix, 0, 1, 17);
+            let mut idx: Vec<usize> = Vec::with_capacity(bs);
+            let mut v = vec![0.0f64; n];
+            let t_fused = bench(
+                || {
+                    block_sweep(&sys, &mut sampler, bs, alpha, &mut v, &mut idx);
+                    std::hint::black_box(&mut v);
+                },
+                sweeps,
+            );
+
+            let per_row_base = t_base / bs as f64;
+            let per_row_fused = t_fused / bs as f64;
+            t.row(vec![
+                format!("rkab sweep row-loop (bs={bs})"),
+                n.to_string(),
+                format!("{:.1}", per_row_base * 1e9),
+                format!("{:.1}", 32.0 * n as f64 / per_row_base / 1e9),
+            ]);
+            t.row(vec![
+                format!("rkab sweep fused (bs={bs})"),
+                n.to_string(),
+                format!("{:.1}", per_row_fused * 1e9),
+                format!("{:.1}", 32.0 * n as f64 / per_row_fused / 1e9),
+            ]);
+            println!(
+                "[rkab-sweep bs={bs}] fused/base = {:.3} (must be <= ~1.0; < 1 means faster)",
+                per_row_fused / per_row_base
+            );
+        }
+    }
+
+    // Cache-blocked gemv on a wide matrix (x no longer fits L1): panel
+    // kernel vs the straight row-dot loop.
+    {
+        let (m, n) = (512usize, 8192usize);
+        let mut rngw = Mt19937::new(23);
+        let data: Vec<f64> = (0..m * n).map(|_| rngw.next_f64() - 0.5).collect();
+        let a = Matrix::from_vec(m, n, data).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rngw.next_f64() - 0.5).collect();
+        let mut y = vec![0.0f64; m];
+        let iters = 50;
+        let t_naive = bench(
+            || {
+                for (yi, row) in y.iter_mut().zip(a.rows_iter()) {
+                    *yi = dot(row, &x);
+                }
+                std::hint::black_box(&mut y);
+            },
+            iters,
+        );
+        let t_blocked = bench(
+            || {
+                gemv_block_into(&a, &x, &mut y);
+                std::hint::black_box(&mut y);
+            },
+            iters,
+        );
+        let bytes = (m * n + n + m) as f64 * 8.0;
+        t.row(vec![
+            format!("gemv row-dot ({m}x{n})"),
+            n.to_string(),
+            format!("{:.0}", t_naive * 1e9),
+            format!("{:.1}", bytes / t_naive / 1e9),
+        ]);
+        t.row(vec![
+            format!("gemv cache-blocked ({m}x{n})"),
+            n.to_string(),
+            format!("{:.0}", t_blocked * 1e9),
+            format!("{:.1}", bytes / t_blocked / 1e9),
+        ]);
+    }
 
     // Row sampling: alias vs CDF binary search.
     let weights = sys.sampling_weights();

@@ -1,7 +1,8 @@
 //! The `LinearSystem` type shared by all solvers and experiments.
 
-use crate::linalg::{gemv, norm2, sub, Matrix};
+use crate::error::{Error, Result};
 use crate::linalg::vector::dist_sq;
+use crate::linalg::{gemv, norm2, sub, Matrix};
 
 /// A (possibly inconsistent) linear system `Ax = b` plus reference solutions.
 ///
@@ -28,11 +29,51 @@ pub struct LinearSystem {
 
 impl LinearSystem {
     /// Wrap a matrix + rhs, precomputing norms. `x_true`/`x_ls` optional.
+    ///
+    /// Zero-norm rows are *tolerated* here (synthetic workloads like the CT
+    /// example can produce rays that miss the grid): they carry sampling
+    /// weight 0, so the randomized solvers never draw them, and the
+    /// deterministic scanners (CK, AsyRK) skip them explicitly. Use
+    /// [`LinearSystem::try_new`] on untrusted input to reject them up front
+    /// with a typed error instead.
     pub fn new(a: Matrix, b: Vec<f64>, x_true: Option<Vec<f64>>, consistent: bool) -> Self {
         assert_eq!(a.rows(), b.len(), "rhs length must equal row count");
         let row_norms_sq = a.row_norms_sq();
         let frobenius_sq = row_norms_sq.iter().sum();
         LinearSystem { a, b, x_true, x_ls: None, row_norms_sq, frobenius_sq, consistent }
+    }
+
+    /// Strict constructor: like [`LinearSystem::new`] but rejects degenerate
+    /// (zero-norm) rows with [`Error::DegenerateRow`] instead of carrying
+    /// them. A zero row constrains nothing and every Kaczmarz projection
+    /// against it divides by `‖A^(i)‖² = 0` — a NaN that silently poisons
+    /// the whole iterate. This is the entry point for data read from disk
+    /// or built by applications.
+    pub fn try_new(
+        a: Matrix,
+        b: Vec<f64>,
+        x_true: Option<Vec<f64>>,
+        consistent: bool,
+    ) -> Result<Self> {
+        if a.rows() != b.len() {
+            return Err(Error::Dimension(format!(
+                "rhs of len {} does not match {} rows",
+                b.len(),
+                a.rows()
+            )));
+        }
+        let sys = LinearSystem::new(a, b, x_true, consistent);
+        if let Some(row) = sys.degenerate_row() {
+            return Err(Error::DegenerateRow { row });
+        }
+        Ok(sys)
+    }
+
+    /// Index of the first degenerate (zero-norm) row, if any — the single
+    /// predicate behind [`LinearSystem::try_new`] and `data::io::save`'s
+    /// strictness, so the two cannot drift apart.
+    pub fn degenerate_row(&self) -> Option<usize> {
+        self.row_norms_sq.iter().position(|&nrm| nrm <= 0.0)
     }
 
     /// Rows (`m`).
@@ -70,6 +111,10 @@ impl LinearSystem {
     }
 
     /// Row-sampling weights for eq. 4 (`‖A^(i)‖²`; the samplers normalize).
+    ///
+    /// A degenerate (zero-norm) row has weight 0 and is therefore never
+    /// drawn by any eq.-4 sampler — the randomized solvers are NaN-safe
+    /// against such rows by construction.
     pub fn sampling_weights(&self) -> &[f64] {
         &self.row_norms_sq
     }
@@ -134,5 +179,52 @@ mod tests {
     fn rhs_length_checked() {
         let a = Matrix::zeros(3, 2);
         LinearSystem::new(a, vec![0.0; 2], None, true);
+    }
+
+    #[test]
+    fn try_new_rejects_zero_norm_rows() {
+        // Row 1 is all zeros: no constraint, and ‖A^(1)‖² = 0 would NaN any
+        // projection against it.
+        let a = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]).unwrap();
+        let err = LinearSystem::try_new(a, vec![1.0, 0.0, 2.0], None, true)
+            .err()
+            .expect("zero row must be rejected");
+        match err {
+            Error::DegenerateRow { row } => assert_eq!(row, 1),
+            other => panic!("expected DegenerateRow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_new_accepts_full_rank_rows() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let sys = LinearSystem::try_new(a, vec![1.0, 2.0], Some(vec![1.0, 2.0]), true).unwrap();
+        assert_eq!(sys.rows(), 2);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_rhs_with_typed_error() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert!(matches!(
+            LinearSystem::try_new(a, vec![1.0], None, true),
+            Err(Error::Dimension(_))
+        ));
+    }
+
+    #[test]
+    fn zero_norm_row_never_sampled_and_solvers_stay_finite() {
+        // Lenient construction keeps the zero row but gives it weight 0:
+        // RK must converge on the remaining rows without ever producing NaN.
+        use crate::solvers::rk::RkSolver;
+        use crate::solvers::{SolveOptions, Solver};
+        let mut sys = crate::data::DatasetBuilder::new(60, 5).seed(11).consistent();
+        let m = sys.rows();
+        sys.a.row_mut(m / 2).fill(0.0);
+        sys.b[m / 2] = 0.0; // consistent: 0·x = 0
+        let sys = LinearSystem::new(sys.a, sys.b, sys.x_true, true);
+        assert_eq!(sys.sampling_weights()[m / 2], 0.0);
+        let r = RkSolver::new(3).solve(&sys, &SolveOptions::default().with_tolerance(1e-10));
+        assert!(r.converged);
+        assert!(r.x.iter().all(|v| v.is_finite()), "NaN leaked into the iterate");
     }
 }

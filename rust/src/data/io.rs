@@ -40,7 +40,15 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
 }
 
 /// Save a system to `path`.
+///
+/// Degenerate (zero-norm) rows are rejected up front with
+/// [`Error::DegenerateRow`]: `load` refuses them (disk data is untrusted),
+/// so failing fast at write time keeps the save/load roundtrip symmetric —
+/// anything this function persists, `load` will accept.
 pub fn save(sys: &LinearSystem, path: &Path) -> Result<()> {
+    if let Some(row) = sys.degenerate_row() {
+        return Err(Error::DegenerateRow { row });
+    }
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
@@ -82,7 +90,9 @@ pub fn load(path: &Path) -> Result<LinearSystem> {
     let b = read_f64s(&mut r, rows)?;
     let x_true = if has_true { Some(read_f64s(&mut r, cols)?) } else { None };
     let x_ls = if has_ls { Some(read_f64s(&mut r, cols)?) } else { None };
-    let mut sys = LinearSystem::new(a, b, x_true, consistent);
+    // Disk data is untrusted: reject degenerate rows with a typed error
+    // instead of letting a zero norm NaN-poison a later solve.
+    let mut sys = LinearSystem::try_new(a, b, x_true, consistent)?;
     sys.x_ls = x_ls;
     Ok(sys)
 }
@@ -123,5 +133,48 @@ mod tests {
         std::fs::write(&tmp, b"NOTMAGIC________").unwrap();
         assert!(load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn zero_norm_row_rejected_at_save_time() {
+        // Regression: a degenerate row must fail fast when persisting (and
+        // symmetrically at load, below) — never resurface as a NaN later.
+        let mut sys = DatasetBuilder::new(8, 3).seed(2).consistent();
+        sys.a.row_mut(5).fill(0.0);
+        let sys = super::super::dataset::LinearSystem::new(sys.a, sys.b, sys.x_true, true);
+        let tmp = std::env::temp_dir().join("kcz_io_test_zero_row_save.bin");
+        let err = save(&sys, &tmp).err().expect("degenerate row must not persist");
+        std::fs::remove_file(&tmp).ok();
+        assert!(
+            matches!(err, crate::error::Error::DegenerateRow { row: 5 }),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn zero_norm_row_on_disk_is_rejected_typed() {
+        // A file produced by something other than `save` (or an older build)
+        // carrying an all-zero row must be rejected with the typed error.
+        // Hand-write the binary format: 2x2 system whose row 1 is zero.
+        let tmp = std::env::temp_dir().join("kcz_io_test_zero_row_load.bin");
+        {
+            let f = std::fs::File::create(&tmp).unwrap();
+            let mut w = BufWriter::new(f);
+            w.write_all(MAGIC).unwrap();
+            write_u64(&mut w, 2).unwrap(); // rows
+            write_u64(&mut w, 2).unwrap(); // cols
+            write_u64(&mut w, 1).unwrap(); // consistent
+            write_u64(&mut w, 0).unwrap(); // no x_true
+            write_u64(&mut w, 0).unwrap(); // no x_ls
+            write_f64s(&mut w, &[1.0, 2.0, 0.0, 0.0]).unwrap(); // A (row 1 zero)
+            write_f64s(&mut w, &[3.0, 0.0]).unwrap(); // b
+            w.flush().unwrap();
+        }
+        let err = load(&tmp).err().expect("degenerate row must be rejected");
+        std::fs::remove_file(&tmp).ok();
+        assert!(
+            matches!(err, crate::error::Error::DegenerateRow { row: 1 }),
+            "got {err:?}"
+        );
     }
 }

@@ -53,6 +53,13 @@ impl DistRka {
     ) -> DistResult {
         let np = cluster.np;
         let n = system.cols();
+        // Fail on the caller's thread: a rank panicking on an unsampleable
+        // partition would strand its peers in recv.
+        crate::solvers::sampling::assert_partitions_sampleable(
+            system,
+            crate::solvers::SamplingScheme::Partitioned,
+            np,
+        );
         let initial_err = system.error_sq(&vec![0.0; n]);
         let timed = opts.fixed_iterations.is_some();
         // Per-rank working set: its row partition (what an MPI rank stores).

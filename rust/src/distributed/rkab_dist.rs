@@ -17,8 +17,9 @@ use super::cluster::{DistResult, RankStats, SimCluster};
 use super::comm::Communicator;
 use super::rka_dist::RankOutput;
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
+use crate::linalg::vector::scale_in_place;
 use crate::metrics::{History, Stopwatch};
+use crate::solvers::rkab::block_sweep;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
 use crate::solvers::{stop_check, SolveOptions};
 
@@ -48,6 +49,13 @@ impl DistRkab {
     ) -> DistResult {
         let np = cluster.np;
         let n = system.cols();
+        // Fail on the caller's thread: a rank panicking on an unsampleable
+        // partition would strand its peers in recv.
+        crate::solvers::sampling::assert_partitions_sampleable(
+            system,
+            SamplingScheme::Partitioned,
+            np,
+        );
         let initial_err = system.error_sq(&vec![0.0; n]);
         let timed = opts.fixed_iterations.is_some();
         let bytes_per_rank = (system.rows() / np).max(1) * n * 8;
@@ -98,6 +106,7 @@ impl DistRkab {
         let mut sampler =
             RowSampler::new(system, SamplingScheme::Partitioned, rank, np, self.seed);
         let mut x = vec![0.0; n];
+        let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
         let mut history = History::every(if rank == 0 { opts.history_step } else { 0 });
         let mut compute_seconds = 0.0;
         let mut k = 0usize;
@@ -136,21 +145,11 @@ impl DistRkab {
             }
 
             let t0 = Stopwatch::start();
-            // Lines 2-6: bs-1 plain in-block projections on the private x.
-            for _ in 0..self.block_size.saturating_sub(1) {
-                let i = sampler.sample();
-                let row = system.a.row(i);
-                let scale = self.alpha * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-                axpy(scale, row, &mut x);
-            }
-            // Lines 7-10: last projection with the 1/np average folded in.
-            let i = sampler.sample();
-            let row = system.a.row(i);
-            let scale = self.alpha * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-            axpy(scale, row, &mut x);
-            for xi in x.iter_mut() {
-                *xi *= inv_np;
-            }
+            // Lines 2-10: the bs in-block projections on the private x via
+            // the fused sweep shared with the sequential reference, then the
+            // 1/np pre-average of line 10.
+            block_sweep(system, &mut sampler, self.block_size, self.alpha, &mut x, &mut idx);
+            scale_in_place(&mut x, inv_np);
             compute_seconds += t0.seconds();
 
             // Line 11.

@@ -1,37 +1,91 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no derive crates are available
+//! offline); the display strings are part of the crate's contract — tests
+//! and the CLI match on them.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the kaczmarz library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch between operands.
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 
     /// An iterative routine failed to converge within its budget.
-    #[error("no convergence after {iterations} iterations (last residual {residual:.3e})")]
-    NoConvergence { iterations: usize, residual: f64 },
+    NoConvergence {
+        /// Iterations performed before giving up.
+        iterations: usize,
+        /// Residual at the last iteration.
+        residual: f64,
+    },
 
     /// A solver diverged (error grew instead of shrinking).
-    #[error("solver diverged at iteration {iteration} (error {error:.3e})")]
-    Diverged { iteration: usize, error: f64 },
+    Diverged {
+        /// Iteration at which divergence was detected.
+        iteration: usize,
+        /// Error magnitude at detection.
+        error: f64,
+    },
 
     /// Invalid configuration or argument.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
+    /// A row of the system has zero norm: it carries no constraint and every
+    /// Kaczmarz projection against it divides by zero.
+    DegenerateRow {
+        /// Index of the offending row.
+        row: usize,
+    },
+
     /// Missing AOT artifact (run `make artifacts`).
-    #[error("artifact not found: {0} (run `make artifacts`)")]
     ArtifactMissing(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Filesystem / IO failure.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Dimension(msg) => write!(f, "dimension mismatch: {msg}"),
+            Error::NoConvergence { iterations, residual } => write!(
+                f,
+                "no convergence after {iterations} iterations (last residual {residual:.3e})"
+            ),
+            Error::Diverged { iteration, error } => {
+                write!(f, "solver diverged at iteration {iteration} (error {error:.3e})")
+            }
+            Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::DegenerateRow { row } => write!(
+                f,
+                "degenerate system: row {row} has zero norm (cannot be projected against)"
+            ),
+            Error::ArtifactMissing(what) => {
+                write!(f, "artifact not found: {what} (run `make artifacts`)")
+            }
+            Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -62,9 +116,17 @@ mod tests {
     }
 
     #[test]
+    fn error_display_degenerate_row() {
+        let e = Error::DegenerateRow { row: 7 };
+        assert!(e.to_string().contains("row 7"));
+    }
+
+    #[test]
     fn io_error_converts() {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

@@ -17,7 +17,7 @@ pub mod vector;
 
 pub use cholesky::Cholesky;
 pub use eig::{inverse_power_iteration, power_iteration};
-pub use gemv::{gemv, gemv_transpose};
+pub use gemv::{gemv, gemv_block_into, gemv_into, gemv_transpose, gemv_transpose_into};
 pub use matrix::Matrix;
 pub use svd::jacobi_singular_values;
-pub use vector::{axpy, dot, norm2, norm2_sq, scale_in_place, sub};
+pub use vector::{axpy, axpy_dot, dot, norm2, norm2_sq, scale_in_place, sub};

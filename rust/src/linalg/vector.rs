@@ -51,6 +51,41 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Fused projection kernel: `y += alpha * x`, returning `<z, y>` over the
+/// *updated* `y` — one pass over memory instead of an `axpy` pass followed
+/// by a `dot` pass.
+///
+/// This is the RKAB block-sweep workhorse: projection `j` updates `v` along
+/// row `j` while simultaneously computing row `j+1`'s residual dot product
+/// against the new `v`, halving the traffic on `v` (the whole block touches
+/// each `v` cache line once per projection instead of twice). The lane
+/// structure mirrors [`dot`]/[`axpy`] exactly (same 8-wide accumulators,
+/// same tail, same final reduction order), so the result is bit-identical
+/// to `axpy(alpha, x, y); dot(z, y)`.
+#[inline]
+pub fn axpy_dot(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(z.len(), y.len());
+    let mut acc = [0.0f64; 8];
+    let cx = x.chunks_exact(8);
+    let cz = z.chunks_exact(8);
+    let (rx, rz) = (cx.remainder(), cz.remainder());
+    let mut cy = y.chunks_exact_mut(8);
+    for ((xa, za), ya) in cx.zip(cz).zip(&mut cy) {
+        for i in 0..8 {
+            ya[i] += alpha * xa[i];
+            acc[i] += za[i] * ya[i];
+        }
+    }
+    let ry = cy.into_remainder();
+    let mut tail = 0.0;
+    for ((xv, zv), yv) in rx.iter().zip(rz).zip(ry) {
+        *yv += alpha * xv;
+        tail += zv * *yv;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
 /// Squared Euclidean norm `‖v‖²`.
 #[inline]
 pub fn norm2_sq(v: &[f64]) -> f64 {
@@ -124,6 +159,27 @@ mod tests {
     #[test]
     fn dot_empty_is_zero() {
         assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_dot_matches_separate_kernels_bitwise() {
+        // Lengths crossing the 8-lane boundary (tail of 0..7 elements).
+        for n in [1usize, 7, 8, 9, 16, 63, 64, 65, 200] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+            let z: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+            let y0: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+            let alpha = 0.731;
+
+            let mut y_fused = y0.clone();
+            let d_fused = axpy_dot(alpha, &x, &z, &mut y_fused);
+
+            let mut y_ref = y0.clone();
+            axpy(alpha, &x, &mut y_ref);
+            let d_ref = dot(&z, &y_ref);
+
+            assert_eq!(y_fused, y_ref, "n={n}: updated vectors differ");
+            assert_eq!(d_fused.to_bits(), d_ref.to_bits(), "n={n}: dots differ");
+        }
     }
 
     #[test]

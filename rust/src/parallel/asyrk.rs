@@ -30,19 +30,27 @@ pub struct AsyRkSolver {
     /// Step size multiplier (the AsyRK theory requires a conservative step;
     /// 1.0 reproduces plain projections).
     pub step: f64,
+    /// Worker-pool override (`None` = the process-global pool).
+    pool: Option<std::sync::Arc<super::pool::WorkerPool>>,
 }
 
 impl AsyRkSolver {
     /// AsyRK with full projection steps.
     pub fn new(seed: u32, threads: usize) -> Self {
         assert!(threads >= 1);
-        AsyRkSolver { seed, threads, step: 1.0 }
+        AsyRkSolver { seed, threads, step: 1.0, pool: None }
     }
 
     /// Override the step size.
     pub fn with_step(mut self, step: f64) -> Self {
         assert!(step > 0.0 && step <= 1.0);
         self.step = step;
+        self
+    }
+
+    /// Run on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: std::sync::Arc<super::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 }
@@ -58,6 +66,9 @@ impl Solver for AsyRkSolver {
         let x = AtomicF64Vec::zeros(n);
         let stop = AtomicBool::new(false);
         let total_updates = AtomicUsize::new(0);
+        // Workers still in their HOGWILD loop; when this hits zero nothing
+        // can ever update x again, so the monitor must not keep waiting.
+        let live_workers = AtomicUsize::new(q);
         let initial_err = system.error_sq(&vec![0.0; n]);
 
         // Monitor cadence: check convergence every `check_every` global
@@ -65,22 +76,65 @@ impl Solver for AsyRkSolver {
         let check_every = (q * 32).max(64);
         let budget = opts.fixed_iterations.unwrap_or(opts.max_iterations);
 
+        // One pool dispatch with q + 1 participants: participant 0 (the
+        // calling thread) is the monitor, participants 1..=q run the
+        // HOGWILD loop on partition t - 1.
         let sw = Stopwatch::start();
-        let mut history = History::every(opts.history_step);
-        let mut converged = false;
-        let mut diverged = false;
-        std::thread::scope(|scope| {
-            // Worker threads: the HOGWILD loop.
-            for t in 0..q {
-                let x = &x;
-                let stop = &stop;
-                let total_updates = &total_updates;
-                scope.spawn(move || {
-                    let mut rng = Mt19937::new(derive_seed(self.seed, t));
-                    let (lo, hi) = system.row_partition(t, q);
-                    // Sampling without replacement: shuffle own rows, scan,
-                    // reshuffle (the AsyRK recipe).
-                    let mut order: Vec<usize> = (lo..hi).collect();
+        let monitor_out = std::sync::Mutex::new(None);
+        let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
+        pool.run(q + 1, |part| {
+            if part == 0 {
+                // Monitor: stopping test + history, then release the workers.
+                let mut history = History::every(opts.history_step);
+                let mut converged = false;
+                let mut diverged = false;
+                let mut xbuf = vec![0.0; n];
+                let mut last_recorded = usize::MAX;
+                loop {
+                    let done = total_updates.load(Ordering::Relaxed);
+                    x.snapshot_into(&mut xbuf);
+                    let err = system.error_sq(&xbuf);
+                    let tick = if history.step > 0 { done / history.step } else { 0 };
+                    if history.step > 0 && tick != last_recorded {
+                        last_recorded = tick;
+                        history.record(done, err.sqrt(), system.residual_norm(&xbuf));
+                    }
+                    if opts.fixed_iterations.is_none() && err < opts.tolerance {
+                        converged = true;
+                        break;
+                    }
+                    if err > initial_err * opts.divergence_factor && initial_err > 0.0 {
+                        diverged = true;
+                        break;
+                    }
+                    if done >= budget {
+                        converged = opts.fixed_iterations.is_some();
+                        break;
+                    }
+                    if live_workers.load(Ordering::Relaxed) == 0 {
+                        // Every worker exited (all partitions degenerate):
+                        // no update can ever arrive, so stop un-converged
+                        // instead of spinning forever.
+                        break;
+                    }
+                    // Light backoff so the monitor does not saturate a core.
+                    for _ in 0..check_every {
+                        std::hint::spin_loop();
+                    }
+                }
+                stop.store(true, Ordering::SeqCst);
+                *monitor_out.lock().unwrap() = Some((history, converged, diverged));
+            } else {
+                // HOGWILD worker on partition t of q.
+                let t = part - 1;
+                let mut rng = Mt19937::new(derive_seed(self.seed, t));
+                let (lo, hi) = system.row_partition(t, q);
+                // Sampling without replacement: shuffle own rows, scan,
+                // reshuffle (the AsyRK recipe). Degenerate (zero-norm) rows
+                // are dropped up front — projecting on one divides by zero.
+                let mut order: Vec<usize> =
+                    (lo..hi).filter(|&i| system.row_norms_sq[i] > 0.0).collect();
+                if !order.is_empty() {
                     rng.shuffle(&mut order);
                     let mut pos = 0usize;
                     let mut xbuf = vec![0.0; n];
@@ -102,40 +156,15 @@ impl Solver for AsyRkSolver {
                         }
                         total_updates.fetch_add(1, Ordering::Relaxed);
                     }
-                });
+                }
+                // Signal the monitor this worker can no longer make progress
+                // (normal stop, or a partition with nothing but zero rows).
+                live_workers.fetch_sub(1, Ordering::Relaxed);
             }
-            // Monitor thread (this thread): stopping test + history.
-            let mut xbuf = vec![0.0; n];
-            let mut last_recorded = usize::MAX;
-            loop {
-                let done = total_updates.load(Ordering::Relaxed);
-                x.snapshot_into(&mut xbuf);
-                let err = system.error_sq(&xbuf);
-                let tick = if history.step > 0 { done / history.step } else { 0 };
-                if history.step > 0 && tick != last_recorded {
-                    last_recorded = tick;
-                    history.record(done, err.sqrt(), system.residual_norm(&xbuf));
-                }
-                if opts.fixed_iterations.is_none() && err < opts.tolerance {
-                    converged = true;
-                    break;
-                }
-                if err > initial_err * opts.divergence_factor && initial_err > 0.0 {
-                    diverged = true;
-                    break;
-                }
-                if done >= budget {
-                    converged = opts.fixed_iterations.is_some();
-                    break;
-                }
-                // Light backoff so the monitor does not saturate a core.
-                for _ in 0..check_every {
-                    std::hint::spin_loop();
-                }
-            }
-            stop.store(true, Ordering::SeqCst);
         });
         let seconds = sw.seconds();
+        let (history, converged, diverged) =
+            monitor_out.into_inner().unwrap().expect("monitor reports outcome");
         let iterations = total_updates.load(Ordering::SeqCst);
 
         SolveResult {
@@ -170,6 +199,25 @@ mod tests {
         let opts = SolveOptions::default().with_tolerance(1e-6).with_max_iterations(2_000_000);
         let r = AsyRkSolver::new(3, 4).solve(&sys, &opts);
         assert!(r.converged, "async run did not converge in {} updates", r.iterations);
+    }
+
+    #[test]
+    fn all_degenerate_partitions_terminate_unconverged() {
+        // Regression: a system whose every row has zero norm leaves all
+        // workers with nothing to project; the monitor must notice the
+        // workers exiting and stop instead of waiting on the budget forever
+        // (which would also wedge the shared pool dispatch).
+        use crate::linalg::Matrix;
+        let sys = crate::data::LinearSystem::new(
+            Matrix::zeros(8, 4),
+            vec![0.0; 8],
+            Some(vec![1.0; 4]),
+            true,
+        );
+        let opts = SolveOptions::default().with_fixed_iterations(100);
+        let r = AsyRkSolver::new(1, 2).solve(&sys, &opts);
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
     }
 
     #[test]

@@ -27,13 +27,21 @@ pub struct BlockSequentialRk {
     pub threads: usize,
     /// Relaxation parameter.
     pub relaxation: f64,
+    /// Worker-pool override (`None` = the process-global pool).
+    pool: Option<std::sync::Arc<super::pool::WorkerPool>>,
 }
 
 impl BlockSequentialRk {
     /// Block-sequential RK with unit relaxation.
     pub fn new(seed: u32, threads: usize) -> Self {
         assert!(threads >= 1);
-        BlockSequentialRk { seed, threads, relaxation: 1.0 }
+        BlockSequentialRk { seed, threads, relaxation: 1.0, pool: None }
+    }
+
+    /// Run on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: std::sync::Arc<super::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 }
 
@@ -75,24 +83,20 @@ impl Solver for BlockSequentialRk {
         let initial_err = system.error_sq(&vec![0.0; n]);
         let timed = opts.fixed_iterations.is_some();
 
+        // One dispatch on the persistent pool = one parallel region.
         let sw = Stopwatch::start();
-        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(q);
-            for t in 0..q {
-                let region = &region;
-                handles.push(scope.spawn(move || {
-                    self.worker(t, system, opts, region, initial_err, timed)
-                }));
-            }
-            for h in handles {
-                histories.push(h.join().expect("worker panicked"));
+        let report = std::sync::Mutex::new(None);
+        let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
+        pool.run(q, |t| {
+            let out = self.worker(t, system, opts, &region, initial_err, timed);
+            if let Some(out) = out {
+                *report.lock().unwrap() = Some(out);
             }
         });
         let seconds = sw.seconds();
 
         let (history, iterations) =
-            histories.into_iter().flatten().next().expect("thread 0 reports history");
+            report.into_inner().unwrap().expect("participant 0 reports history");
         SolveResult {
             x: region.x.into_vec(),
             iterations,

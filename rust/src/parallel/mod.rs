@@ -2,14 +2,19 @@
 //! `std::thread`.
 //!
 //! Every method here runs the *whole iteration loop inside one parallel
-//! region* (threads are spawned once per solve, exactly like an OpenMP
-//! `parallel` block around the paper's Algorithms 1/3), synchronizing with
-//! barriers and a mutex-backed critical section:
+//! region* (exactly like an OpenMP `parallel` block around the paper's
+//! Algorithms 1/3), synchronizing with barriers and a mutex-backed critical
+//! section. Regions are dispatched onto the persistent [`pool`] — workers
+//! are spawned once per process and reused, so a solve performs zero
+//! `thread::spawn` calls on its hot path:
 //!
+//! - [`pool`] — the persistent worker-pool engine every solver below runs
+//!   on (see its docs for the dispatch/ownership protocol);
 //! - [`rka_shared`] — Algorithm 1 (RKA) with the paper's four gather
 //!   strategies: critical section, atomic entries, reduction, and the
 //!   (q x n) gather matrix of Fig. 3;
-//! - [`rkab_shared`] — Algorithm 3 (RKAB);
+//! - [`rkab_shared`] — Algorithm 3 (RKAB) with a lock-free deterministic
+//!   gather and the fused block-sweep kernel;
 //! - [`block_seq`] — §3.2, the block-sequential attempt that parallelizes
 //!   the dot product and solution update *inside* each RK iteration;
 //! - [`asyrk`] — the HOGWILD!-style lock-free AsyRK baseline (§2.3.3);
@@ -18,12 +23,14 @@
 
 pub mod asyrk;
 pub mod block_seq;
+pub mod pool;
 pub mod rka_shared;
 pub mod rkab_shared;
 pub mod shared;
 
 pub use asyrk::AsyRkSolver;
 pub use block_seq::BlockSequentialRk;
+pub use pool::WorkerPool;
 pub use rka_shared::{AveragingStrategy, ParallelRka};
 pub use rkab_shared::ParallelRkab;
 pub use shared::{SharedSlice, SpinBarrier};

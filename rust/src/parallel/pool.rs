@@ -1,0 +1,461 @@
+//! Persistent worker-pool parallel engine.
+//!
+//! Every shared-memory solver in this crate runs its whole iteration loop
+//! inside one parallel region (an OpenMP `parallel` block in the paper).
+//! The seed implementation opened that region with `std::thread::scope`,
+//! paying a full spawn+join of `q` OS threads *per solve* — which dominates
+//! small-`n` solves and is a non-starter for serving many solve requests
+//! back to back. [`WorkerPool`] spawns workers once and reuses them: a solve
+//! dispatches a closure to `q - 1` parked workers, runs participant 0 on the
+//! calling thread, and parks the workers again afterwards.
+//!
+//! # Dispatch / ownership protocol
+//!
+//! Mirroring the [`super::shared::SharedSlice`] protocol docs, the pool has
+//! an explicit protocol that makes the lifetime-erasure below sound:
+//!
+//! 1. `run(q, f)` publishes a type-erased pointer to `f` together with a new
+//!    epoch number under the pool mutex, wakes all parked workers, and runs
+//!    `f(0)` on the calling thread.
+//! 2. A parked worker with identity `t` joins an epoch iff `t < q`; it runs
+//!    `f(t)` exactly once and decrements the epoch's `active` count.
+//!    Workers with `t >= q` only record the epoch and park again — they
+//!    never touch the job pointer.
+//! 3. `run` returns only after `active == 0`, i.e. after every participant
+//!    has finished executing `f`. The borrow of `f` therefore outlives every
+//!    use of the erased pointer, which is what makes step 1 sound.
+//! 4. Dispatches are serialized by a separate mutex, so two concurrent
+//!    `run` calls on the same pool queue up instead of interleaving epochs.
+//!
+//! Between solves workers block on a condvar (no CPU burned while parked);
+//! *within* a solve, iteration-grained synchronization stays on the solver's
+//! own [`super::shared::SpinBarrier`], which is two orders of magnitude
+//! cheaper per crossing than a futex wake.
+//!
+//! Panics in any participant are caught, counted, and re-raised on the
+//! calling thread after the epoch drains, so a *completed* epoch never
+//! leaves a dangling job pointer behind and a panicked solve does not
+//! poison the dispatch mutex for later solves. One limitation is inherited
+//! from the scoped-thread formulation this replaces: if a participant
+//! panics *out of a barrier-synchronized protocol*, the surviving
+//! participants of that solve can keep waiting at their `SpinBarrier` for
+//! an arrival that never comes — same hang as with `thread::scope`, but on
+//! a shared pool it also blocks later dispatches queued behind the wedged
+//! one. Solver closures therefore must not panic between barrier
+//! crossings; debug assertions in them are protocol bugs, not recoverable
+//! errors. Nested dispatch on the *same* pool from inside a participant is
+//! detected and fails fast with a clear message instead of deadlocking
+//! (use a dedicated [`WorkerPool`] via the solvers' `with_pool` when
+//! composing solvers).
+//!
+//! The process-wide [`global`] pool grows lazily to the largest `q` ever
+//! requested and is shared by [`super::rka_shared::ParallelRka`],
+//! [`super::rkab_shared::ParallelRkab`],
+//! [`super::block_seq::BlockSequentialRk`] and
+//! [`super::asyrk::AsyRkSolver`]: after warm-up, repeated solves perform
+//! zero `thread::spawn` calls.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// Identity (PoolInner address) of the pool whose job this thread is
+    /// currently executing; 0 when not inside a dispatch. Used to fail fast
+    /// on re-entrant dispatch instead of deadlocking on the dispatch mutex.
+    static DISPATCHING_POOL: Cell<usize> = Cell::new(0);
+}
+
+/// Run `body` with this thread marked as executing a job of pool `id`,
+/// restoring the previous mark afterwards. `body` must not unwind — both
+/// call sites pass a `catch_unwind` wrapper, so the restore always runs.
+fn with_dispatch_mark<R>(id: usize, body: impl FnOnce() -> R) -> R {
+    let prev = DISPATCHING_POOL.with(|c| c.replace(id));
+    let out = body();
+    DISPATCHING_POOL.with(|c| c.set(prev));
+    out
+}
+
+/// Type-erased handle to the job closure of the current epoch.
+///
+/// The borrow's lifetime is erased to `'static` at dispatch; the `run`
+/// protocol (see module docs) guarantees the pointee outlives every call
+/// through the handle, which is what makes the erasure sound. `Send`/`Sync`
+/// come for free: a shared reference to a `Sync` closure crosses threads.
+#[derive(Clone, Copy)]
+struct JobPtr(&'static (dyn Fn(usize) + Sync));
+
+/// Mutable pool state, guarded by `PoolInner::state`.
+struct PoolState {
+    /// Bumped once per dispatch; workers join an epoch at most once.
+    epoch: u64,
+    /// Current job, valid for participants of the current epoch only.
+    job: Option<JobPtr>,
+    /// Participant count of the current epoch (caller + workers `1..q`).
+    q: usize,
+    /// Workers still executing the current epoch's job.
+    active: usize,
+    /// Participants of the current epoch that panicked.
+    panicked: usize,
+    /// Set once on drop; workers exit their loop.
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Signaled when a new epoch is published (or on shutdown).
+    work_ready: Condvar,
+    /// Signaled when the last active worker of an epoch finishes.
+    work_done: Condvar,
+}
+
+/// A persistent pool of parked worker threads (see module docs).
+pub struct WorkerPool {
+    inner: std::sync::Arc<PoolInner>,
+    /// Spawned workers (worker `i` has participant identity `i + 1`).
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes dispatches; held for the whole duration of `run`.
+    dispatch: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Empty pool; workers are spawned lazily by [`WorkerPool::run`].
+    pub fn new() -> Self {
+        WorkerPool {
+            inner: std::sync::Arc::new(PoolInner {
+                state: Mutex::new(PoolState {
+                    epoch: 0,
+                    job: None,
+                    q: 0,
+                    active: 0,
+                    panicked: 0,
+                    shutdown: false,
+                }),
+                work_ready: Condvar::new(),
+                work_done: Condvar::new(),
+            }),
+            workers: Mutex::new(Vec::new()),
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// Number of resident worker threads (excluding callers).
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Run `f(t)` for `t in 0..q`: `f(0)` on the calling thread, the rest on
+    /// pool workers. Returns after every participant finished. Re-raises the
+    /// first panic observed among participants.
+    pub fn run<F>(&self, q: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        assert!(q >= 1, "need at least one participant");
+        if q == 1 {
+            // Degenerate region: no dispatch, no erased pointer.
+            f(0);
+            return;
+        }
+        let pool_id = std::sync::Arc::as_ptr(&self.inner) as usize;
+        // Fail fast on re-entrant dispatch: the outer run() holds the
+        // dispatch mutex until its epoch drains, so a nested run() on the
+        // same pool could only deadlock. (Nesting on a *different* pool is
+        // fine and allowed.)
+        assert!(
+            DISPATCHING_POOL.with(|c| c.get()) != pool_id,
+            "nested WorkerPool::run on the same pool from inside a participant would \
+             deadlock; give the inner solver a dedicated pool via with_pool"
+        );
+        // Poison-tolerant acquisition: a previous run that panicked (and was
+        // re-raised below) must not brick the pool for later solves.
+        let dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        self.ensure_workers(q - 1);
+
+        // Erase the closure's lifetime; sound per the module protocol (the
+        // completion wait below outlives every worker's call through it).
+        let erased: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: pure lifetime erasure of a fat reference; `run` blocks
+        // until `active == 0`, i.e. until no worker can touch it again.
+        let job = JobPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                erased,
+            )
+        });
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.job = Some(job);
+            st.q = q;
+            st.active = q - 1;
+            st.panicked = 0;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.inner.work_ready.notify_all();
+        }
+
+        // Participant 0 runs here; catch panics so we always drain workers
+        // before unwinding past `f`'s scope.
+        let caller_result =
+            with_dispatch_mark(pool_id, || catch_unwind(AssertUnwindSafe(|| f(0))));
+
+        let mut st = self.inner.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.inner.work_done.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panics = st.panicked;
+        drop(st);
+        // Release the dispatch lock *before* re-raising so an unwinding run
+        // does not poison it for the next solve on this pool.
+        drop(dispatch);
+
+        match caller_result {
+            Err(payload) => resume_unwind(payload),
+            Ok(()) if worker_panics > 0 => {
+                panic!("{worker_panics} pool worker(s) panicked during solve")
+            }
+            Ok(()) => {}
+        }
+    }
+
+    /// Grow the resident worker set to at least `needed` threads.
+    fn ensure_workers(&self, needed: usize) {
+        let mut workers = self.workers.lock().unwrap();
+        while workers.len() < needed {
+            let t = workers.len() + 1; // participant identity
+            let inner = std::sync::Arc::clone(&self.inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("kaczmarz-pool-{t}"))
+                .spawn(move || worker_loop(&inner, t))
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_ready.notify_all();
+        }
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of a resident worker with participant identity `t`.
+fn worker_loop(inner: &PoolInner, t: usize) {
+    let pool_id = inner as *const PoolInner as usize;
+    let mut seen_epoch = 0u64;
+    loop {
+        // Park until a new epoch appears (or shutdown).
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if t < st.q {
+                        break st.job.expect("epoch published without job");
+                    }
+                    // Not a participant this epoch; keep parking.
+                }
+                st = inner.work_ready.wait(st).unwrap();
+            }
+        };
+
+        // `run` holds the epoch open (active > 0) until we finish, so the
+        // closure behind the erased reference is alive; it is `Sync`, so
+        // concurrent calls from several workers are allowed.
+        let f = job.0;
+        let result = with_dispatch_mark(pool_id, || catch_unwind(AssertUnwindSafe(|| f(t))));
+
+        let mut st = inner.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked += 1;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            inner.work_done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool shared by all parallel solvers.
+///
+/// Grows lazily to the largest `q` ever requested and lives for the process
+/// lifetime (parked workers cost no CPU). Dispatches are serialized, so
+/// concurrent solves queue rather than oversubscribe each other.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(WorkerPool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_participant_exactly_once() {
+        let pool = WorkerPool::new();
+        for q in [1usize, 2, 3, 8] {
+            let hits: Vec<AtomicUsize> = (0..q).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(q, |t| {
+                hits[t].fetch_add(1, Ordering::SeqCst);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "q={q} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn workers_are_reused_across_runs() {
+        let pool = WorkerPool::new();
+        pool.run(4, |_| {});
+        let resident = pool.worker_count();
+        assert_eq!(resident, 3);
+        for _ in 0..50 {
+            pool.run(4, |_| {});
+        }
+        // Re-running at the same q spawns nothing new.
+        assert_eq!(pool.worker_count(), resident);
+    }
+
+    #[test]
+    fn pool_grows_to_largest_q_only() {
+        let pool = WorkerPool::new();
+        pool.run(2, |_| {});
+        assert_eq!(pool.worker_count(), 1);
+        pool.run(6, |_| {});
+        assert_eq!(pool.worker_count(), 5);
+        pool.run(3, |_| {});
+        assert_eq!(pool.worker_count(), 5);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_and_writable() {
+        // Participants write disjoint chunks of caller-owned memory.
+        let pool = WorkerPool::new();
+        let q = 4;
+        let n = 1000;
+        let data = super::super::shared::SharedSlice::zeros(n);
+        pool.run(q, |t| {
+            let (lo, hi) = data.chunk(t, q);
+            // SAFETY: chunks are disjoint.
+            let v = unsafe { data.as_mut_unchecked() };
+            for i in lo..hi {
+                v[i] = t as f64 + 1.0;
+            }
+        });
+        let v = data.into_vec();
+        assert!(v.iter().all(|&x| x >= 1.0), "some chunk never written");
+    }
+
+    #[test]
+    fn barrier_phases_work_on_pool_threads() {
+        // The solver pattern: per-iteration SpinBarrier phases inside one
+        // pool dispatch must synchronize exactly like scoped threads.
+        use super::super::shared::SpinBarrier;
+        let pool = WorkerPool::new();
+        let q = 4;
+        let barrier = SpinBarrier::new(q);
+        let counter = AtomicUsize::new(0);
+        pool.run(q, |_| {
+            for phase in 0..200usize {
+                barrier.wait();
+                assert_eq!(counter.load(Ordering::SeqCst) / q, phase);
+                barrier.wait();
+                counter.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 200 * q);
+    }
+
+    #[test]
+    fn consecutive_runs_do_not_leak_state() {
+        // A worker that skipped an epoch (t >= q) must not fire its stale
+        // job later: run at q=6, then q=2, then q=6 again.
+        let pool = WorkerPool::new();
+        let count = AtomicUsize::new(0);
+        pool.run(6, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.swap(0, Ordering::SeqCst), 6);
+        pool.run(2, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.swap(0, Ordering::SeqCst), 2);
+        pool.run(6, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.swap(0, Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn worker_panic_is_propagated_not_deadlocked() {
+        let pool = WorkerPool::new();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, |t| {
+                if t == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool must still be usable afterwards.
+        let ok = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn nested_dispatch_on_same_pool_fails_fast() {
+        // Same-pool nesting would block on the dispatch mutex forever; the
+        // guard must turn that into an immediate panic...
+        let pool = WorkerPool::new();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, |t| {
+                if t == 0 {
+                    pool.run(2, |_| {});
+                }
+            });
+        }));
+        assert!(result.is_err(), "nested same-pool dispatch must panic, not deadlock");
+        // ...while different-pool nesting (and the pool itself, afterwards)
+        // keeps working.
+        let inner_pool = WorkerPool::new();
+        let ok = AtomicUsize::new(0);
+        pool.run(2, |t| {
+            if t == 0 {
+                inner_pool.run(2, |_| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        global().run(2, |_| {});
+        assert!(global().worker_count() >= 1);
+    }
+}

@@ -57,6 +57,8 @@ pub struct ParallelRka {
     pub scheme: SamplingScheme,
     /// Gather strategy.
     pub strategy: AveragingStrategy,
+    /// Worker-pool override (`None` = the process-global pool).
+    pool: Option<std::sync::Arc<super::pool::WorkerPool>>,
 }
 
 impl ParallelRka {
@@ -69,12 +71,19 @@ impl ParallelRka {
             weights: Weights::Uniform(alpha),
             scheme: SamplingScheme::FullMatrix,
             strategy: AveragingStrategy::Critical,
+            pool: None,
         }
     }
 
     /// Select a gather strategy.
     pub fn with_strategy(mut self, strategy: AveragingStrategy) -> Self {
         self.strategy = strategy;
+        self
+    }
+
+    /// Run on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: std::sync::Arc<super::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -115,6 +124,9 @@ impl Solver for ParallelRka {
     fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
         let n = system.cols();
         let q = self.q;
+        // Fail on the caller's thread, not inside a pool participant (which
+        // would strand its peers at the barrier).
+        crate::solvers::sampling::assert_partitions_sampleable(system, self.scheme, q);
         let gather_len = match self.strategy {
             AveragingStrategy::MatrixGather => q * n,
             _ => n,
@@ -132,28 +144,21 @@ impl Solver for ParallelRka {
         let initial_err = system.error_sq(&vec![0.0; n]);
         let timed = opts.fixed_iterations.is_some();
 
+        // One dispatch on the persistent pool = one parallel region; the
+        // caller is participant 0 (the paper's "master" thread).
         let sw = Stopwatch::start();
-        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(q);
-            for t in 0..q {
-                let region = &region;
-                let weights = &self.weights;
-                handles.push(scope.spawn(move || {
-                    self.worker(t, system, opts, region, weights, initial_err, timed)
-                }));
-            }
-            for h in handles {
-                histories.push(h.join().expect("worker panicked"));
+        let report = Mutex::new(None);
+        let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
+        pool.run(q, |t| {
+            let out = self.worker(t, system, opts, &region, &self.weights, initial_err, timed);
+            if let Some(out) = out {
+                *report.lock().unwrap() = Some(out);
             }
         });
         let seconds = sw.seconds();
 
-        let (history, iterations) = histories
-            .into_iter()
-            .flatten()
-            .next()
-            .expect("thread 0 reports history");
+        let (history, iterations) =
+            report.into_inner().unwrap().expect("participant 0 reports history");
         SolveResult {
             x: region.x.snapshot(),
             iterations,

@@ -1,19 +1,27 @@
-//! Parallel RKAB — the paper's Algorithm 3.
+//! Parallel RKAB — the paper's Algorithm 3 on the persistent worker pool.
 //!
-//! Each thread copies the shared iterate into a *private* estimate `v`,
-//! applies `block_size` sequential Kaczmarz projections to it, subtracts the
-//! shared iterate (so only the difference is gathered), and after a barrier
-//! adds `v/q` to the shared `x` under the critical section. Communication
-//! happens once per block instead of once per row — the point of the method.
+//! Each participant copies the shared iterate into a *private* estimate `v`,
+//! applies `block_size` sequential Kaczmarz projections to it (through the
+//! fused-kernel sweep shared with the sequential reference — see
+//! [`crate::solvers::rkab::block_sweep`]), publishes `v` as row `t` of a
+//! `(q x n)` gather buffer, and after a barrier all participants average
+//! disjoint column chunks back into `x`. Communication happens once per
+//! block instead of once per row — the point of the method (§3.4.2,
+//! Table 2).
 //!
-//! The gather is still the critical section of Algorithm 1, but it now costs
-//! O(q·n) once per `block_size` row updates instead of once per row update,
-//! which is why RKAB parallelizes where RKA does not (§3.4.2, Table 2).
+//! The gather is deliberately *not* Algorithm 1's critical section: summing
+//! gather rows in ascending `t` over disjoint column chunks is lock-free,
+//! parallel, and associates the floating-point sum exactly like the
+//! sequential reference's accumulation loop — so a parallel solve is
+//! **bit-identical** to [`crate::solvers::rkab::RkabSolver`] at equal seeds
+//! (asserted in `tests/parallel_integration.rs`), which is what makes the
+//! pool's no-state-leakage guarantee testable at all.
 
-use super::shared::{AtomicF64Vec, SpinBarrier};
+use super::shared::{SharedSlice, SpinBarrier};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
+use crate::linalg::vector::{axpy, scale_in_place};
 use crate::metrics::{History, Stopwatch};
+use crate::solvers::rkab::block_sweep;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
 use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -31,12 +39,16 @@ pub struct ParallelRkab {
     pub alpha: f64,
     /// Row-sampling scheme.
     pub scheme: SamplingScheme,
+    /// Worker-pool override (`None` = the process-global pool).
+    pool: Option<std::sync::Arc<super::pool::WorkerPool>>,
 }
 
 struct Region {
-    x: AtomicF64Vec,
+    /// Shared iterate; written in disjoint column chunks after barrier (C).
+    x: SharedSlice,
+    /// (q x n) block estimates; row `t` owned by participant `t`.
+    gather: SharedSlice,
     barrier: SpinBarrier,
-    critical: Mutex<()>,
     stop: AtomicBool,
     converged: AtomicBool,
     diverged: AtomicBool,
@@ -46,12 +58,18 @@ impl ParallelRkab {
     /// RKAB with full-matrix sampling.
     pub fn new(seed: u32, q: usize, block_size: usize, alpha: f64) -> Self {
         assert!(q >= 1 && block_size >= 1);
-        ParallelRkab { seed, q, block_size, alpha, scheme: SamplingScheme::FullMatrix }
+        ParallelRkab { seed, q, block_size, alpha, scheme: SamplingScheme::FullMatrix, pool: None }
     }
 
     /// Select a sampling scheme.
     pub fn with_scheme(mut self, scheme: SamplingScheme) -> Self {
         self.scheme = scheme;
+        self
+    }
+
+    /// Run on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: std::sync::Arc<super::pool::WorkerPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 }
@@ -64,10 +82,13 @@ impl Solver for ParallelRkab {
     fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
         let n = system.cols();
         let q = self.q;
+        // Fail on the caller's thread, not inside a pool participant (which
+        // would strand its peers at the barrier).
+        crate::solvers::sampling::assert_partitions_sampleable(system, self.scheme, q);
         let region = Region {
-            x: AtomicF64Vec::zeros(n),
+            x: SharedSlice::zeros(n),
+            gather: SharedSlice::zeros(q * n),
             barrier: SpinBarrier::new(q),
-            critical: Mutex::new(()),
             stop: AtomicBool::new(false),
             converged: AtomicBool::new(false),
             diverged: AtomicBool::new(false),
@@ -75,26 +96,22 @@ impl Solver for ParallelRkab {
         let initial_err = system.error_sq(&vec![0.0; n]);
         let timed = opts.fixed_iterations.is_some();
 
+        // One dispatch on the persistent pool = one parallel region.
         let sw = Stopwatch::start();
-        let mut histories: Vec<Option<(History, usize)>> = Vec::new();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(q);
-            for t in 0..q {
-                let region = &region;
-                handles.push(scope.spawn(move || {
-                    self.worker(t, system, opts, region, initial_err, timed)
-                }));
-            }
-            for h in handles {
-                histories.push(h.join().expect("worker panicked"));
+        let report = Mutex::new(None);
+        let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
+        pool.run(q, |t| {
+            let out = self.worker(t, system, opts, &region, initial_err, timed);
+            if let Some(out) = out {
+                *report.lock().unwrap() = Some(out);
             }
         });
         let seconds = sw.seconds();
 
         let (history, iterations) =
-            histories.into_iter().flatten().next().expect("thread 0 reports history");
+            report.into_inner().unwrap().expect("participant 0 reports history");
         SolveResult {
-            x: region.x.snapshot(),
+            x: region.x.into_vec(),
             iterations,
             converged: region.converged.load(Ordering::SeqCst),
             diverged: region.diverged.load(Ordering::SeqCst),
@@ -120,21 +137,20 @@ impl ParallelRkab {
         let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
         let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
         let mut v = vec![0.0; n]; // private block estimate
-        let mut err_buf = vec![0.0; n];
+        let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
         let mut k = 0usize;
+        let (lo, hi) = region.x.chunk(t, q);
+        let inv_q = 1.0 / q as f64;
 
         loop {
-            // (A) previous gather complete.
+            // (A) previous iteration's chunked writes to x are complete.
             region.barrier.wait();
             if t == 0 {
-                let err = if !timed || history.due(k) {
-                    region.x.snapshot_into(&mut err_buf);
-                    system.error_sq(&err_buf)
-                } else {
-                    f64::NAN
-                };
+                // SAFETY: all writers passed barrier (A); x is stable.
+                let x = unsafe { region.x.as_ref_unchecked() };
+                let err = if !timed || history.due(k) { system.error_sq(x) } else { f64::NAN };
                 if history.due(k) {
-                    history.record(k, err.sqrt(), system.residual_norm(&err_buf));
+                    history.record(k, err.sqrt(), system.residual_norm(x));
                 }
                 let (stop, c, d) = stop_check(opts, k, err, initial_err);
                 region.converged.store(c, Ordering::SeqCst);
@@ -147,30 +163,39 @@ impl ParallelRkab {
                 break;
             }
 
-            // v = x^(k), then block_size sequential projections on v (eq. 8;
-            // Algorithm 3 lines 3-11). x is read-only in this phase.
-            for i in 0..n {
-                v[i] = region.x.get(i);
+            {
+                // v = x^(k), then bs sequential projections on v (eq. 8;
+                // Algorithm 3 lines 3-11) through the shared fused sweep.
+                // SAFETY: x is read-only until every thread passes (C).
+                let x = unsafe { region.x.as_ref_unchecked() };
+                v.copy_from_slice(x);
             }
-            for _ in 0..self.block_size {
-                let i = sampler.sample();
-                let row = system.a.row(i);
-                let scale = self.alpha * (system.b[i] - dot(row, &v)) / system.row_norms_sq[i];
-                axpy(scale, row, &mut v);
+            block_sweep(system, &mut sampler, self.block_size, self.alpha, &mut v, &mut idx);
+            {
+                // Publish v as gather row t.
+                // SAFETY: each thread writes only its own row.
+                let g = unsafe { region.gather.as_mut_unchecked() };
+                g[t * n..(t + 1) * n].copy_from_slice(&v);
             }
-            // v -= x (lines 12-13), so the gather sums only differences.
-            for i in 0..n {
-                v[i] -= region.x.get(i);
-            }
-            // Line 14: nobody may update x while others still read it above.
+            // (C) every block estimate published; nobody reads x anymore.
             region.barrier.wait();
             {
-                // Lines 15-17: x += v/q under the critical section.
-                let _guard = region.critical.lock().unwrap();
-                let inv_q = 1.0 / q as f64;
-                for i in 0..n {
-                    region.x.set(i, region.x.get(i) + v[i] * inv_q);
+                // x^(k+1) = (1/q) Σ_t v_t (eq. 9) over this thread's column
+                // chunk, accumulated with t outermost so the inner loops run
+                // contiguous (vectorizable) instead of striding across
+                // gather rows. Per element the sum still associates in
+                // ascending t with one final inv_q multiply — exactly the
+                // sequential reference's float association.
+                // SAFETY: column chunks are disjoint; gather rows are frozen
+                // until the next iteration's sweep, which every thread only
+                // reaches after barrier (A)+(B) — i.e. after all reads here.
+                let g = unsafe { region.gather.as_ref_unchecked() };
+                let x = unsafe { region.x.as_mut_unchecked() };
+                x[lo..hi].fill(0.0);
+                for r in 0..q {
+                    axpy(1.0, &g[r * n + lo..r * n + hi], &mut x[lo..hi]);
                 }
+                scale_in_place(&mut x[lo..hi], inv_q);
             }
             k += 1;
         }
@@ -199,15 +224,17 @@ mod tests {
     }
 
     #[test]
-    fn matches_sequential_semantics() {
+    fn matches_sequential_bitwise() {
+        // The deterministic gather reproduces the sequential reference's
+        // float association exactly — not just within tolerance.
         let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
         let opts = SolveOptions::default().with_fixed_iterations(50);
         let seq = RkabSolver::new(7, 4, 8, 1.0).solve(&sys, &opts);
         let par = ParallelRkab::new(7, 4, 8, 1.0).solve(&sys, &opts);
-        let drift: f64 =
-            seq.x.iter().zip(&par.x).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
-        let scale = seq.x.iter().map(|x| x.abs()).fold(0.0, f64::max);
-        assert!(drift < 1e-6 * scale.max(1.0), "drift {drift}");
+        assert_eq!(seq.iterations, par.iterations);
+        for (a, b) in seq.x.iter().zip(&par.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
     }
 
     #[test]

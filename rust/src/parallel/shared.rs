@@ -171,6 +171,17 @@ pub struct SpinBarrier {
     total: usize,
 }
 
+/// Pure-spin budget before a waiter starts yielding its timeslice.
+///
+/// Uncontended crossings resolve in well under this many probes, so the
+/// fast path never syscalls. Past the budget the waiter `yield_now`s on
+/// every probe: when `q` exceeds the core count a pure spin barrier
+/// live-locks (the arrivals that would release the barrier cannot be
+/// scheduled while the waiters burn their timeslices), and CI machines are
+/// exactly where that happens — the paper runs 64 threads, this container
+/// may have 2 cores.
+const SPIN_LIMIT: u32 = 64;
+
 impl SpinBarrier {
     /// Barrier for `total` threads.
     pub fn new(total: usize) -> Self {
@@ -178,7 +189,9 @@ impl SpinBarrier {
         SpinBarrier { count: AtomicUsize::new(0), generation: AtomicUsize::new(0), total }
     }
 
-    /// Block (spinning) until all `total` threads arrive.
+    /// Block until all `total` threads arrive: spin up to [`SPIN_LIMIT`]
+    /// probes, then spin-then-yield so oversubscribed runs keep making
+    /// progress.
     pub fn wait(&self) {
         let gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
@@ -188,12 +201,10 @@ impl SpinBarrier {
         } else {
             let mut spins = 0u32;
             while self.generation.load(Ordering::Acquire) == gen {
-                spins += 1;
-                if spins < 64 {
+                if spins < SPIN_LIMIT {
+                    spins += 1;
                     std::hint::spin_loop();
                 } else {
-                    // Be polite under oversubscription (the paper runs 64
-                    // threads; this container may have fewer cores).
                     std::thread::yield_now();
                 }
             }
@@ -266,6 +277,31 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::SeqCst), 50 * q as u64);
+    }
+
+    #[test]
+    fn spin_barrier_survives_oversubscription() {
+        // More waiters than cores: the yield fallback must keep every phase
+        // progressing instead of live-locking the machine (regression for
+        // the pure-spin formulation).
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+        let q = 4 * cores;
+        let barrier = Arc::new(SpinBarrier::new(q));
+        let counter = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..q {
+                let barrier = Arc::clone(&barrier);
+                let counter = Arc::clone(&counter);
+                scope.spawn(move || {
+                    for _ in 0..100u64 {
+                        barrier.wait();
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100 * q as u64);
     }
 
     #[test]

@@ -64,11 +64,17 @@ impl Solver for CkSolver {
             if stop {
                 break;
             }
-            // i = k mod m: one projection per iteration.
+            // i = k mod m: one projection per iteration. Degenerate rows
+            // (zero norm ⇒ zero-division NaN) carry no constraint; the
+            // cyclic sweep steps over them, still counting the iteration so
+            // `i = k mod m` keeps its meaning.
             let i = k % m;
-            let row = system.a.row(i);
-            let scale = self.relaxation * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-            axpy(scale, row, &mut x);
+            if system.row_norms_sq[i] > 0.0 {
+                let row = system.a.row(i);
+                let scale =
+                    self.relaxation * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
+                axpy(scale, row, &mut x);
+            }
             k += 1;
         }
 

@@ -45,6 +45,12 @@ impl Weights {
             Weights::PerWorker(v) => Some(v.len()),
         }
     }
+
+    /// True when there are zero per-worker entries (uniform weights always
+    /// apply to every worker, so they count as non-empty).
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Weights::PerWorker(v) if v.is_empty())
+    }
 }
 
 /// RKA with `q` virtual workers (sequential reference implementation).

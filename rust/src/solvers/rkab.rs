@@ -15,8 +15,50 @@
 use super::sampling::{RowSampler, SamplingScheme};
 use super::{stop_check, SolveOptions, SolveResult, Solver};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
+use crate::linalg::vector::{axpy, axpy_dot, dot};
 use crate::metrics::{History, Stopwatch};
+
+/// One worker's in-block sweep: `block_size` sequential Kaczmarz projections
+/// applied to the private iterate `v` (eq. 8 / Algorithm 3 lines 5-11).
+///
+/// This is the single implementation of the RKAB hot loop, shared by the
+/// sequential reference (below), the shared-memory engine
+/// (`parallel::rkab_shared`) and the simulated cluster
+/// (`distributed::rkab_dist`). The `block_size` row indices are drawn up
+/// front (same sampler stream as drawing them one-by-one), then the sweep
+/// runs on the fused [`axpy_dot`] kernel: projection `j`'s update of `v` and
+/// projection `j+1`'s residual dot product execute in one pass over `v`,
+/// halving the traffic of the scalar dot-then-axpy formulation while
+/// producing bit-identical iterates (see `axpy_dot`'s lane-structure
+/// guarantee). `indices` is caller-owned scratch so the hot path allocates
+/// nothing.
+///
+/// Public so `bench_micro_hotpath` measures this exact function (not a
+/// drifting copy) against the row-loop baseline.
+pub fn block_sweep(
+    system: &LinearSystem,
+    sampler: &mut RowSampler,
+    block_size: usize,
+    alpha: f64,
+    v: &mut [f64],
+    indices: &mut Vec<usize>,
+) {
+    debug_assert!(block_size >= 1);
+    indices.clear();
+    for _ in 0..block_size {
+        indices.push(sampler.sample());
+    }
+    let mut d = dot(system.a.row(indices[0]), v);
+    for j in 0..block_size {
+        let i = indices[j];
+        let scale = alpha * (system.b[i] - d) / system.row_norms_sq[i];
+        if j + 1 < block_size {
+            d = axpy_dot(scale, system.a.row(i), system.a.row(indices[j + 1]), v);
+        } else {
+            axpy(scale, system.a.row(i), v);
+        }
+    }
+}
 
 /// RKAB with `q` virtual workers (sequential reference implementation).
 pub struct RkabSolver {
@@ -57,6 +99,7 @@ impl Solver for RkabSolver {
         let mut x = vec![0.0; n];
         let mut v = vec![0.0; n]; // per-worker private iterate (reused)
         let mut acc = vec![0.0; n]; // Σ_γ v_γ
+        let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
@@ -80,15 +123,10 @@ impl Solver for RkabSolver {
             }
             acc.fill(0.0);
             for sampler in samplers.iter_mut() {
-                // v_γ^(0) = x^(k); then bs sequential projections on v (eq. 8).
+                // v_γ^(0) = x^(k); then bs sequential projections on v (eq. 8),
+                // via the shared fused-kernel sweep.
                 v.copy_from_slice(&x);
-                for _ in 0..self.block_size {
-                    let i = sampler.sample();
-                    let row = system.a.row(i);
-                    let scale =
-                        self.alpha * (system.b[i] - dot(row, &v)) / system.row_norms_sq[i];
-                    axpy(scale, row, &mut v);
-                }
+                block_sweep(system, sampler, self.block_size, self.alpha, &mut v, &mut idx);
                 axpy(1.0, &v, &mut acc);
             }
             // x^(k+1) = (1/q) Σ v_γ (eq. 9).

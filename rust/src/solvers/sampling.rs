@@ -21,6 +21,29 @@ pub enum SamplingScheme {
     Partitioned,
 }
 
+/// Pre-flight check for per-worker samplers: under [`SamplingScheme::Partitioned`]
+/// every worker's row block must contain at least one positive-weight row,
+/// otherwise that worker's `AliasTable` cannot be built (all-degenerate
+/// block, or an empty block when `q` exceeds the row count).
+///
+/// Call this on the *caller's* thread before entering a parallel region:
+/// the same condition failing inside a pool participant or a simulated
+/// rank would strand its peers at a barrier/recv instead of panicking
+/// cleanly.
+pub fn assert_partitions_sampleable(system: &LinearSystem, scheme: SamplingScheme, q: usize) {
+    if scheme != SamplingScheme::Partitioned {
+        return;
+    }
+    for t in 0..q {
+        let (lo, hi) = system.row_partition(t, q);
+        assert!(
+            system.sampling_weights()[lo..hi].iter().any(|&w| w > 0.0),
+            "partitioned sampling: worker {t}'s row block [{lo}, {hi}) has no \
+             positive-weight rows (degenerate or empty partition)"
+        );
+    }
+}
+
 /// A per-worker row sampler: owns the worker's RNG stream and its (possibly
 /// restricted) sampling distribution; yields *global* row indices.
 pub struct RowSampler {
@@ -91,6 +114,29 @@ mod tests {
                 assert!(i >= lo && i < hi, "worker {t} sampled {i} outside [{lo},{hi})");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "no positive-weight rows")]
+    fn partitioned_preflight_rejects_degenerate_partition() {
+        // Worker 0's whole block [0, 4) is zero rows: the pre-flight must
+        // fail cleanly on the caller's thread (a panic inside a parallel
+        // region would strand the other participants at their barrier).
+        let mut sys = DatasetBuilder::new(8, 3).seed(4).consistent();
+        for i in 0..4 {
+            sys.a.row_mut(i).fill(0.0);
+            sys.b[i] = 0.0;
+        }
+        let sys = crate::data::LinearSystem::new(sys.a, sys.b, sys.x_true, true);
+        assert_partitions_sampleable(&sys, SamplingScheme::Partitioned, 2);
+    }
+
+    #[test]
+    fn preflight_accepts_full_matrix_and_healthy_partitions() {
+        let sys = DatasetBuilder::new(50, 4).seed(1).consistent();
+        assert_partitions_sampleable(&sys, SamplingScheme::Partitioned, 4);
+        // FullMatrix never restricts, so even q > m is fine.
+        assert_partitions_sampleable(&sys, SamplingScheme::FullMatrix, 100);
     }
 
     #[test]

@@ -101,6 +101,60 @@ fn asyrk_error_floor_grows_with_threads_on_dense() {
 }
 
 #[test]
+fn pooled_solves_are_bit_deterministic_and_leak_free() {
+    // Two consecutive solves on the same (global) worker pool must produce
+    // bit-identical iterates — any state leaking between dispatches (stale
+    // job, reused buffer, sampler carry-over) would show up here. For RKAB
+    // the deterministic gather additionally pins the parallel result to the
+    // sequential reference exactly.
+    let sys = DatasetBuilder::new(300, 16).seed(31).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(40);
+
+    let seq = RkabSolver::new(5, 4, 8, 1.0).solve(&sys, &opts);
+    let first = ParallelRkab::new(5, 4, 8, 1.0).solve(&sys, &opts);
+    let second = ParallelRkab::new(5, 4, 8, 1.0).solve(&sys, &opts);
+    for ((a, b), s) in first.x.iter().zip(&second.x).zip(&seq.x) {
+        assert_eq!(a.to_bits(), b.to_bits(), "pooled RKAB solves differ between dispatches");
+        assert_eq!(a.to_bits(), s.to_bits(), "pooled RKAB differs from sequential reference");
+    }
+
+    // RKA through the deterministic (Fig. 3) gather: repeatable bit-for-bit
+    // across two dispatches on the same pool.
+    let opts = SolveOptions::default().with_fixed_iterations(150);
+    let first = ParallelRka::new(5, 4, 1.0)
+        .with_strategy(AveragingStrategy::MatrixGather)
+        .solve(&sys, &opts);
+    let second = ParallelRka::new(5, 4, 1.0)
+        .with_strategy(AveragingStrategy::MatrixGather)
+        .solve(&sys, &opts);
+    for (a, b) in first.x.iter().zip(&second.x) {
+        assert_eq!(a.to_bits(), b.to_bits(), "pooled RKA solves differ between dispatches");
+    }
+}
+
+#[test]
+fn pool_spawns_nothing_after_warmup() {
+    // The point of the persistent engine: repeated solves reuse the parked
+    // workers. A dedicated pool (immune to other tests growing the global
+    // one concurrently) must spawn exactly q - 1 workers on the first solve
+    // and zero afterwards.
+    use kaczmarz::parallel::WorkerPool;
+    use std::sync::Arc;
+    let pool = Arc::new(WorkerPool::new());
+    let sys = DatasetBuilder::new(200, 10).seed(33).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(20);
+    let q = 4;
+    assert_eq!(pool.worker_count(), 0);
+    ParallelRkab::new(1, q, 4, 1.0).with_pool(Arc::clone(&pool)).solve(&sys, &opts);
+    assert_eq!(pool.worker_count(), q - 1, "first solve spawns the workers");
+    for seed in 0..10 {
+        ParallelRkab::new(seed, q, 4, 1.0).with_pool(Arc::clone(&pool)).solve(&sys, &opts);
+        ParallelRka::new(seed, q, 1.0).with_pool(Arc::clone(&pool)).solve(&sys, &opts);
+    }
+    assert_eq!(pool.worker_count(), q - 1, "solves at warm q must not spawn workers");
+}
+
+#[test]
 fn oversubscribed_thread_counts_still_correct() {
     // The paper runs 64 threads; this container has fewer cores. The engine
     // must stay correct under oversubscription.
