@@ -1,0 +1,164 @@
+//! Batch-solve serving layer: many solves per pool dispatch.
+//!
+//! The paper's pitch is *throughput* on large dense systems, and the crate's
+//! north star is serving many solve requests back to back. A single solve
+//! already runs on the persistent [`crate::parallel::pool`] (no per-solve
+//! thread spawns); this module adds the other half of the serving story —
+//! amortizing the *per-request* costs when requests share structure:
+//!
+//! - [`BatchSolver`] — many right-hand sides against **one** system. The
+//!   expensive per-system state (the matrix, the squared row norms feeding
+//!   the eq.-4 sampling distribution) is prepared once per worker lane
+//!   instead of once per request, and the per-rhs solves are fanned across
+//!   the pool workers.
+//! - [`SolveQueue`] — many independent `(system, options)` jobs multiplexed
+//!   through a **single** pool dispatch, each producing its own
+//!   [`SolveReport`]. This is the multi-tenant shape: different systems,
+//!   different stopping rules, one engine.
+//!
+//! Both primitives claim jobs with an atomic counter inside one
+//! [`WorkerPool::run`] region (work stealing, so a slow job never blocks the
+//! queue behind a fixed partition) and return reports **in job order**.
+//!
+//! # Determinism guarantee
+//!
+//! A batched solve is *bitwise identical* to running the same jobs one at a
+//! time: each job is solved by the same solver, with the same seed, against
+//! numerically identical system state, and no state is shared between jobs.
+//! Which lane executes which job is scheduling-dependent, but lanes are
+//! exact clones, so the output does not depend on the assignment. The
+//! integration tests assert `to_bits()` equality against independent
+//! sequential solves.
+//!
+//! # Solver choice
+//!
+//! Per-job parallelism and cross-job parallelism compose through *separate*
+//! pools: the batch layer dispatches on one pool, so a per-job solver that
+//! also dispatches (e.g. [`crate::parallel::ParallelRkab`]) must be given a
+//! dedicated pool via its `with_pool` — nesting on the same pool fails fast
+//! by design (see the pool's dispatch protocol). For serving, the sequential
+//! solvers are usually the right per-job choice: throughput scales with the
+//! number of in-flight jobs, not with threads per job.
+//!
+//! # Example
+//!
+//! ```
+//! use kaczmarz::batch::{BatchJob, BatchSolver};
+//! use kaczmarz::data::DatasetBuilder;
+//! use kaczmarz::linalg::gemv;
+//! use kaczmarz::solvers::rk::RkSolver;
+//! use kaczmarz::solvers::SolveOptions;
+//!
+//! // One system, four right-hand sides b_j = A x_j.
+//! let system = DatasetBuilder::new(120, 8).seed(1).consistent();
+//! let jobs: Vec<BatchJob> = (0..4)
+//!     .map(|j| {
+//!         let x = vec![j as f64; 8];
+//!         BatchJob::new(gemv(&system.a, &x).unwrap()).with_reference(x)
+//!     })
+//!     .collect();
+//!
+//! let batch = BatchSolver::new(&system, RkSolver::new(7));
+//! let reports = batch.solve_many(&jobs, &SolveOptions::default()).unwrap();
+//! assert_eq!(reports.len(), 4);
+//! assert!(reports.iter().all(|r| r.result.converged));
+//! ```
+
+pub mod queue;
+pub mod solver;
+
+pub use queue::SolveQueue;
+pub use solver::{BatchJob, BatchSolver};
+
+use crate::parallel::pool::WorkerPool;
+use crate::solvers::SolveResult;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Outcome of one job of a batched solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Index of the job in the submitted batch / queue (reports are returned
+    /// in this order, so `reports[j].job == j`).
+    pub job: usize,
+    /// Name of the solver that produced the result.
+    pub solver: &'static str,
+    /// The per-job solve outcome (iterate, iterations, convergence flags).
+    ///
+    /// Note the crate-wide convention carried by [`SolveResult`]: under
+    /// `fixed_iterations` the `converged` flag is always `true` (the
+    /// budget was spent as requested, nothing was measured). For a serving
+    /// quality signal use [`SolveReport::residual_norm`], which is computed
+    /// against the job's own system regardless of stopping mode.
+    pub result: SolveResult,
+    /// Residual norm `‖A x - b‖` of the returned iterate against *this
+    /// job's* system — the serving-meaningful quality number, available even
+    /// when no reference solution is known.
+    pub residual_norm: f64,
+}
+
+/// Run `jobs` job bodies across `lanes` pool participants inside one
+/// dispatch, claiming jobs with an atomic counter, and collect the results
+/// in job order.
+///
+/// `job_fn(lane, job)` must be safe to call concurrently for distinct jobs;
+/// the lane index tells it which per-lane scratch state it may use.
+pub(crate) fn fan_out<R, F>(pool: &WorkerPool, lanes: usize, jobs: usize, job_fn: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    debug_assert!(lanes >= 1 && jobs >= 1);
+    let slots: Vec<Mutex<Option<R>>> = (0..jobs).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    pool.run(lanes, |lane| loop {
+        let job = next.fetch_add(1, Ordering::Relaxed);
+        if job >= jobs {
+            break;
+        }
+        let out = job_fn(lane, job);
+        *slots[job].lock().unwrap() = Some(out);
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every claimed job stores a result"))
+        .collect()
+}
+
+/// Default lane count: one per hardware thread.
+pub(crate) fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Would these options consult the system's reference solution?
+///
+/// Mirrors [`crate::solvers`]'s `stop_check`/history contract: only a
+/// fixed-iteration run with history recording off never reads the
+/// reference. Shared by [`BatchSolver`] and [`SolveQueue`] validation so
+/// the two cannot drift.
+pub(crate) fn needs_reference(opts: &crate::solvers::SolveOptions) -> bool {
+    opts.fixed_iterations.is_none() || opts.history_step != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_runs_every_job_once_in_order() {
+        let pool = WorkerPool::new();
+        for (lanes, jobs) in [(1usize, 5usize), (3, 8), (4, 2), (2, 1)] {
+            let out = fan_out(&pool, lanes, jobs, |_lane, job| job * 10);
+            let expect: Vec<usize> = (0..jobs).map(|j| j * 10).collect();
+            assert_eq!(out, expect, "lanes={lanes} jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn fan_out_lane_indices_stay_in_range() {
+        let pool = WorkerPool::new();
+        let lanes = 3;
+        let out = fan_out(&pool, lanes, 16, |lane, _job| lane);
+        assert!(out.iter().all(|&l| l < lanes));
+    }
+}

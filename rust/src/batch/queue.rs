@@ -1,0 +1,208 @@
+//! Many independent `(system, options)` jobs per dispatch ([`SolveQueue`]).
+
+use super::{default_workers, fan_out, needs_reference, SolveReport};
+use crate::data::LinearSystem;
+use crate::error::{Error, Result};
+use crate::parallel::pool::WorkerPool;
+use crate::solvers::{SolveOptions, Solver};
+use std::sync::Arc;
+
+/// A queue of independent solve jobs multiplexed through one pool dispatch.
+///
+/// Where [`super::BatchSolver`] amortizes one system across many right-hand
+/// sides, `SolveQueue` is the multi-tenant shape: every job carries its own
+/// [`LinearSystem`] *and* its own [`SolveOptions`] (mixed consistent and
+/// inconsistent systems, mixed stopping rules), and one [`WorkerPool::run`]
+/// region drains them all with work stealing. Reports come back in push
+/// order, one [`SolveReport`] per job, so a diverging or slow job never
+/// hides the outcomes of its neighbours.
+///
+/// # Example
+///
+/// ```
+/// use kaczmarz::batch::SolveQueue;
+/// use kaczmarz::data::DatasetBuilder;
+/// use kaczmarz::solvers::rk::RkSolver;
+/// use kaczmarz::solvers::SolveOptions;
+///
+/// let mut queue = SolveQueue::new();
+/// queue.push(
+///     DatasetBuilder::new(100, 6).seed(2).consistent(),
+///     SolveOptions::default(),
+/// );
+/// queue.push(
+///     DatasetBuilder::new(80, 5).seed(3).inconsistent(),
+///     SolveOptions::default().with_fixed_iterations(200),
+/// );
+/// let reports = queue.run(&RkSolver::new(1)).unwrap();
+/// assert_eq!(reports.len(), 2);
+/// assert!(reports[0].result.converged);
+/// assert!(reports[1].residual_norm > 0.0); // inconsistent: residual floor
+/// ```
+pub struct SolveQueue {
+    jobs: Vec<(LinearSystem, SolveOptions)>,
+    workers: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl SolveQueue {
+    /// Empty queue with one lane per hardware thread.
+    pub fn new() -> Self {
+        SolveQueue { jobs: Vec::new(), workers: default_workers(), pool: None }
+    }
+
+    /// Cap the number of jobs in flight at once.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one lane");
+        self.workers = workers;
+        self
+    }
+
+    /// Dispatch on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Enqueue a job; returns its id (= its index in the report vector).
+    pub fn push(&mut self, system: LinearSystem, opts: SolveOptions) -> usize {
+        self.jobs.push((system, opts));
+        self.jobs.len() - 1
+    }
+
+    /// Number of queued jobs.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True when no jobs are queued.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Run every queued job with `solver` on the pool; the queue itself is
+    /// untouched, so it can be re-run (e.g. with a different solver).
+    ///
+    /// Fails fast on the calling thread if a job's options would consult a
+    /// reference solution its system does not carry (same contract as
+    /// [`super::BatchSolver::solve_many`]). Reference-free jobs currently
+    /// pay one clone of their system per run (the solvers compute the
+    /// initial error unconditionally, so a dummy reference must be patched
+    /// in); jobs that carry a reference are solved in place.
+    pub fn run<S: Solver + Sync>(&self, solver: &S) -> Result<Vec<SolveReport>> {
+        for (j, (system, opts)) in self.jobs.iter().enumerate() {
+            if system.reference_solution().is_none() && needs_reference(opts) {
+                return Err(Error::InvalidArgument(format!(
+                    "job {j}: its system has no reference solution, so error-based \
+                     stopping and history recording are unavailable (use \
+                     fixed_iterations with history_step == 0)"
+                )));
+            }
+        }
+        if self.jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let lane_count = self.workers.min(self.jobs.len()).max(1);
+        let pool = self.pool.as_deref().unwrap_or_else(|| crate::parallel::pool::global());
+        Ok(fan_out(pool, lane_count, self.jobs.len(), |_lane, j| {
+            let (system, opts) = &self.jobs[j];
+            let result = if system.reference_solution().is_some() {
+                solver.solve(system, opts)
+            } else {
+                // Fixed-budget job (validated above): solvers still compute
+                // the initial error unconditionally, so hand them a dummy
+                // zero reference — in fixed-iteration mode with history off
+                // it is never consulted for control flow.
+                let mut patched = system.clone();
+                patched.x_true = Some(vec![0.0; patched.cols()]);
+                solver.solve(&patched, opts)
+            };
+            let residual_norm = system.residual_norm(&result.x);
+            SolveReport { job: j, solver: solver.name(), result, residual_norm }
+        }))
+    }
+}
+
+impl Default for SolveQueue {
+    fn default() -> Self {
+        SolveQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rk::RkSolver;
+
+    #[test]
+    fn reports_come_back_in_push_order() {
+        let mut queue = SolveQueue::new().with_workers(3);
+        for seed in 0..6u32 {
+            let id = queue.push(
+                DatasetBuilder::new(120 + 10 * seed as usize, 6).seed(seed).consistent(),
+                SolveOptions::default(),
+            );
+            assert_eq!(id, seed as usize);
+        }
+        assert_eq!(queue.len(), 6);
+        let reports = queue.run(&RkSolver::new(5)).unwrap();
+        for (j, r) in reports.iter().enumerate() {
+            assert_eq!(r.job, j);
+            assert_eq!(r.solver, "RK");
+            assert!(r.result.converged, "job {j}");
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_ok() {
+        let queue = SolveQueue::new();
+        assert!(queue.is_empty());
+        assert!(queue.run(&RkSolver::new(1)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_referenceless_job_with_tolerance_stopping() {
+        use crate::linalg::Matrix;
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        // No x_true / x_ls: nothing to measure the error against.
+        let system = LinearSystem::new(a, vec![1.0, 2.0], None, true);
+        let mut queue = SolveQueue::new();
+        queue.push(system, SolveOptions::default());
+        let err = queue.run(&RkSolver::new(1)).err().expect("must be rejected");
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+    }
+
+    #[test]
+    fn referenceless_job_runs_under_fixed_budget() {
+        // The path the rejection message advertises: no reference, but a
+        // fixed iteration budget with history off. Must solve, not panic.
+        use crate::linalg::Matrix;
+        let a = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let system = LinearSystem::new(a, vec![1.0, 2.0, 3.0], None, true);
+        let mut queue = SolveQueue::new();
+        queue.push(system, SolveOptions::default().with_fixed_iterations(200));
+        let reports = queue.run(&RkSolver::new(4)).unwrap();
+        assert_eq!(reports[0].result.iterations, 200);
+        // x* = [1, 2] is reachable: the residual must be tiny.
+        assert!(reports[0].residual_norm < 1e-8, "residual {}", reports[0].residual_norm);
+    }
+
+    #[test]
+    fn rerun_is_bit_deterministic() {
+        let mut queue = SolveQueue::new();
+        for seed in 0..3u32 {
+            queue.push(
+                DatasetBuilder::new(100, 6).seed(seed).consistent(),
+                SolveOptions::default().with_fixed_iterations(60),
+            );
+        }
+        let first = queue.run(&RkSolver::new(2)).unwrap();
+        let second = queue.run(&RkSolver::new(2)).unwrap();
+        for (a, b) in first.iter().zip(&second) {
+            for (u, v) in a.result.x.iter().zip(&b.result.x) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Many right-hand sides against one system ([`BatchSolver`]).
+
+use super::{default_workers, fan_out, needs_reference, SolveReport};
+use crate::data::LinearSystem;
+use crate::error::{Error, Result};
+use crate::parallel::pool::WorkerPool;
+use crate::solvers::{SolveOptions, Solver};
+use std::sync::{Arc, Mutex};
+
+/// One right-hand side of a batched solve.
+#[derive(Clone, Debug)]
+pub struct BatchJob {
+    /// Right-hand side `b` (length = rows of the batch system).
+    pub rhs: Vec<f64>,
+    /// Reference solution the error-based stopping test measures against
+    /// (the crate-wide convention: solvers stop on `‖x - x_ref‖²`, paper
+    /// §3.5). `None` means "answer unknown" — such jobs must run under
+    /// `fixed_iterations` with history recording off, which never consults
+    /// the reference; [`BatchSolver::solve_many`] validates this up front.
+    pub x_ref: Option<Vec<f64>>,
+}
+
+impl BatchJob {
+    /// Job with an unknown solution (requires fixed-iteration options).
+    pub fn new(rhs: Vec<f64>) -> Self {
+        BatchJob { rhs, x_ref: None }
+    }
+
+    /// Attach the reference solution for error-based stopping.
+    pub fn with_reference(mut self, x_ref: Vec<f64>) -> Self {
+        self.x_ref = Some(x_ref);
+        self
+    }
+}
+
+/// Solves many right-hand sides against one [`LinearSystem`] by fanning the
+/// per-rhs solves across the persistent worker pool.
+///
+/// The per-system state every Kaczmarz solver needs — the matrix and the
+/// squared row norms behind the eq.-4 sampling distribution — is prepared
+/// once per worker *lane* (at most `workers` clones per call), not once per
+/// right-hand side: a lane swaps the rhs in and reuses everything else, so
+/// request cost stays O(solve), never O(build system). See the
+/// [module docs](crate::batch) for the determinism guarantee and for how to
+/// combine this with per-job parallel solvers.
+pub struct BatchSolver<'s, S> {
+    system: &'s LinearSystem,
+    solver: S,
+    workers: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
+    /// Batch solver over `system`, running `solver` per right-hand side with
+    /// one lane per hardware thread.
+    pub fn new(system: &'s LinearSystem, solver: S) -> Self {
+        BatchSolver { system, solver, workers: default_workers(), pool: None }
+    }
+
+    /// Cap the number of concurrent lanes (and lane clones of the system).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one lane");
+        self.workers = workers;
+        self
+    }
+
+    /// Dispatch on a dedicated pool instead of the process-global one.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Solve every job of the batch; reports come back in job order.
+    ///
+    /// Fails fast (on the calling thread, before any dispatch) on shape
+    /// mismatches and on reference-free jobs whose options would consult the
+    /// missing reference: tolerance-based stopping and history recording
+    /// both measure against `x_ref`, so jobs without one need
+    /// `fixed_iterations` set and `history_step == 0`.
+    pub fn solve_many(
+        &self,
+        jobs: &[BatchJob],
+        opts: &SolveOptions,
+    ) -> Result<Vec<SolveReport>> {
+        let m = self.system.rows();
+        let n = self.system.cols();
+        for (j, job) in jobs.iter().enumerate() {
+            if job.rhs.len() != m {
+                return Err(Error::Dimension(format!(
+                    "job {j}: rhs of len {} does not match {m} rows",
+                    job.rhs.len()
+                )));
+            }
+            match &job.x_ref {
+                Some(x_ref) if x_ref.len() != n => {
+                    return Err(Error::Dimension(format!(
+                        "job {j}: reference of len {} does not match {n} cols",
+                        x_ref.len()
+                    )));
+                }
+                None if needs_reference(opts) => {
+                    return Err(Error::InvalidArgument(format!(
+                        "job {j} has no reference solution: error-based stopping and \
+                         history recording need one (set fixed_iterations with \
+                         history_step == 0, or attach x_ref)"
+                    )));
+                }
+                _ => {}
+            }
+        }
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // One lane (system clone) per concurrently-running job, never more
+        // than one per job. The clone copies the precomputed row norms, so
+        // no lane ever recomputes per-system state.
+        let lane_count = self.workers.min(jobs.len()).max(1);
+        let lanes: Vec<Mutex<LinearSystem>> =
+            (0..lane_count).map(|_| Mutex::new(self.system.clone())).collect();
+        let pool = self.pool.as_deref().unwrap_or_else(|| crate::parallel::pool::global());
+
+        Ok(fan_out(pool, lane_count, jobs.len(), |lane, j| {
+            let mut sys = lanes[lane].lock().unwrap();
+            let job = &jobs[j];
+            // Swap this job's rhs/reference into the lane. Everything a
+            // solver reads is now numerically identical to a freshly built
+            // per-job system, so the result is bitwise equal to an
+            // independent solve (asserted in tests/batch_integration.rs).
+            sys.b.copy_from_slice(&job.rhs);
+            sys.x_true = Some(job.x_ref.clone().unwrap_or_else(|| vec![0.0; n]));
+            sys.x_ls = None;
+            sys.consistent = true;
+            let result = self.solver.solve(&sys, opts);
+            let residual_norm = sys.residual_norm(&result.x);
+            SolveReport { job: j, solver: self.solver.name(), result, residual_norm }
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::linalg::gemv;
+    use crate::solvers::rk::RkSolver;
+
+    fn jobs_for(system: &LinearSystem, count: usize) -> Vec<BatchJob> {
+        (0..count)
+            .map(|j| {
+                let x: Vec<f64> =
+                    (0..system.cols()).map(|i| (i + j) as f64 / 10.0).collect();
+                BatchJob::new(gemv(&system.a, &x).unwrap()).with_reference(x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn solves_every_rhs_in_order() {
+        let system = DatasetBuilder::new(150, 8).seed(1).consistent();
+        let jobs = jobs_for(&system, 5);
+        let batch = BatchSolver::new(&system, RkSolver::new(3)).with_workers(3);
+        let reports = batch.solve_many(&jobs, &SolveOptions::default()).unwrap();
+        assert_eq!(reports.len(), 5);
+        for (j, r) in reports.iter().enumerate() {
+            assert_eq!(r.job, j);
+            assert!(r.result.converged, "job {j}");
+            // err² < 1e-8 at stop and σ_max ~ 1e2 for these row
+            // distributions (μ ∈ [-5,5], σ ∈ [1,20]), so residual ~ 1e-2.
+            assert!(r.residual_norm < 1e-1, "job {j} residual {}", r.residual_norm);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let system = DatasetBuilder::new(60, 5).seed(2).consistent();
+        let batch = BatchSolver::new(&system, RkSolver::new(3));
+        let reports = batch.solve_many(&[], &SolveOptions::default()).unwrap();
+        assert!(reports.is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_rhs_length() {
+        let system = DatasetBuilder::new(60, 5).seed(3).consistent();
+        let batch = BatchSolver::new(&system, RkSolver::new(3));
+        let err = batch
+            .solve_many(&[BatchJob::new(vec![0.0; 7])], &SolveOptions::default())
+            .err()
+            .expect("short rhs must be rejected");
+        assert!(matches!(err, Error::Dimension(_)), "{err:?}");
+    }
+
+    #[test]
+    fn rejects_reference_free_jobs_under_tolerance_stopping() {
+        let system = DatasetBuilder::new(60, 5).seed(4).consistent();
+        let batch = BatchSolver::new(&system, RkSolver::new(3));
+        let jobs = [BatchJob::new(vec![0.0; 60])];
+        let err = batch
+            .solve_many(&jobs, &SolveOptions::default())
+            .err()
+            .expect("tolerance stopping without a reference must be rejected");
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+        // The same job is fine under the fixed-iteration protocol.
+        let opts = SolveOptions::default().with_fixed_iterations(50);
+        let reports = batch.solve_many(&jobs, &opts).unwrap();
+        assert_eq!(reports[0].result.iterations, 50);
+        assert!(reports[0].residual_norm.is_finite());
+    }
+
+    #[test]
+    fn single_lane_equals_multi_lane_bitwise() {
+        // Lane assignment is scheduling-dependent; the results must not be.
+        let system = DatasetBuilder::new(150, 8).seed(5).consistent();
+        let jobs = jobs_for(&system, 6);
+        let opts = SolveOptions::default().with_fixed_iterations(80);
+        let one = BatchSolver::new(&system, RkSolver::new(9))
+            .with_workers(1)
+            .solve_many(&jobs, &opts)
+            .unwrap();
+        let many = BatchSolver::new(&system, RkSolver::new(9))
+            .with_workers(4)
+            .solve_many(&jobs, &opts)
+            .unwrap();
+        for (a, b) in one.iter().zip(&many) {
+            for (u, v) in a.result.x.iter().zip(&b.result.x) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+}

@@ -1,8 +1,18 @@
 //! Simulated cluster runner and result types.
+//!
+//! A [`SimCluster`] runs its ranks as participants of one dispatch on the
+//! persistent [`crate::parallel::pool`] — the same engine the shared-memory
+//! solvers use — so a distributed solve performs zero `thread::spawn` calls
+//! after pool warm-up, exactly like the shared-memory side. Ranks keep
+//! *private* memories and communicate only through their
+//! [`Communicator`] channels, so pool threads still model MPI processes
+//! faithfully.
 
 use super::comm::Communicator;
 use super::network::{NetworkModel, Placement};
 use crate::metrics::History;
+use crate::parallel::pool::WorkerPool;
+use std::sync::{Arc, Mutex};
 
 /// A simulated cluster: `np` ranks under a placement and a network model.
 pub struct SimCluster {
@@ -12,37 +22,68 @@ pub struct SimCluster {
     pub model: NetworkModel,
     /// Process-to-node placement.
     pub placement: Placement,
+    /// Worker-pool override (`None` = the process-global pool).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl SimCluster {
     /// Cluster with the default Navigator-like model.
     pub fn new(np: usize, placement: Placement) -> Self {
         assert!(np >= 1);
-        SimCluster { np, model: NetworkModel::default(), placement }
+        SimCluster { np, model: NetworkModel::default(), placement, pool: None }
     }
 
-    /// Run one closure per rank on its own thread; returns per-rank outputs.
+    /// Run the ranks on a dedicated pool instead of the process-global one
+    /// (useful when composing with solvers that also dispatch — nesting on
+    /// the *same* pool fails fast by design).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Run one closure per rank, each as a participant of a single pool
+    /// dispatch; returns the per-rank outputs in rank order.
+    ///
+    /// Every rank owns its [`Communicator`] for the duration of the run and
+    /// blocks in channel receives while waiting for peers, so the dispatch
+    /// stays deadlock-free even when `np` exceeds the core count (a parked
+    /// receive yields the CPU; same discipline as the scoped-thread
+    /// formulation this replaces, but with zero per-solve thread spawns).
+    ///
+    /// ```
+    /// use kaczmarz::distributed::{Placement, SimCluster};
+    ///
+    /// let cluster = SimCluster::new(3, Placement::two_per_node());
+    /// let sums = cluster.run(|rank, comm| {
+    ///     let mut x = vec![rank as f64];
+    ///     comm.allreduce_sum(&mut x);
+    ///     x[0]
+    /// });
+    /// assert_eq!(sums, vec![3.0, 3.0, 3.0]);
+    /// ```
     pub fn run<T, F>(&self, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize, &mut Communicator) -> T + Sync,
     {
         let comms = Communicator::create_world(self.np, &self.model, self.placement);
-        let mut out: Vec<Option<T>> = (0..self.np).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = comms
-                .into_iter()
-                .enumerate()
-                .map(|(rank, mut c)| {
-                    let f = &f;
-                    scope.spawn(move || f(rank, &mut c))
-                })
-                .collect();
-            for (i, h) in handles.into_iter().enumerate() {
-                out[i] = Some(h.join().expect("rank panicked"));
-            }
+        // Hand each participant its own endpoint and result slot. A rank
+        // panic drops its Communicator, which hangs up the peers' channels
+        // and unwinds the whole world; the pool drains the dispatch and
+        // re-raises on this thread.
+        let endpoints: Vec<Mutex<Option<Communicator>>> =
+            comms.into_iter().map(|c| Mutex::new(Some(c))).collect();
+        let out: Vec<Mutex<Option<T>>> = (0..self.np).map(|_| Mutex::new(None)).collect();
+        let pool = self.pool.as_deref().unwrap_or_else(|| crate::parallel::pool::global());
+        pool.run(self.np, |rank| {
+            let mut comm =
+                endpoints[rank].lock().unwrap().take().expect("rank dispatched once");
+            let result = f(rank, &mut comm);
+            *out[rank].lock().unwrap() = Some(result);
         });
-        out.into_iter().map(Option::unwrap).collect()
+        out.into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("rank produced an output"))
+            .collect()
     }
 
     /// Ranks co-located with `rank` on its node (for contention accounting).

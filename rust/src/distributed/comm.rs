@@ -193,25 +193,15 @@ impl Communicator {
 mod tests {
     use super::*;
 
+    // Worlds run as pool dispatches via SimCluster (default network model,
+    // packed placement), so these tests also exercise the engine the
+    // distributed solvers actually run on.
     fn run_world<F>(np: usize, f: F) -> Vec<Vec<f64>>
     where
         F: Fn(&mut Communicator) -> Vec<f64> + Sync,
     {
-        let comms = Communicator::create_world(np, &NetworkModel::default(), Placement::full_node());
-        let mut out: Vec<Option<Vec<f64>>> = (0..np).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = comms
-                .into_iter()
-                .map(|mut c| {
-                    let f = &f;
-                    scope.spawn(move || f(&mut c))
-                })
-                .collect();
-            for (i, h) in handles.into_iter().enumerate() {
-                out[i] = Some(h.join().unwrap());
-            }
-        });
-        out.into_iter().map(Option::unwrap).collect()
+        super::super::cluster::SimCluster::new(np, Placement::full_node())
+            .run(|_rank, c| f(c))
     }
 
     #[test]

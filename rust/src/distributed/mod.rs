@@ -5,8 +5,9 @@
 //! here, so this module builds the closest substrate that exercises the same
 //! code paths (see DESIGN.md §3):
 //!
-//! - [`comm`] — ranks are OS threads with *private* memory (each owns only
-//!   its row partition, like an MPI process), exchanging messages over
+//! - [`comm`] — ranks are participants of one dispatch on the persistent
+//!   [`crate::parallel::pool`] with *private* memory (each owns only its
+//!   row partition, like an MPI process), exchanging messages over
 //!   channels; `Allreduce` is real recursive doubling, including the
 //!   non-power-of-two pre/post folding (the paper uses np ∈ {12, 24, 48});
 //! - [`network`] — an α-β cost model with distinct intra-/inter-node links

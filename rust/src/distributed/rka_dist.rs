@@ -199,12 +199,19 @@ impl DistRka {
 
 /// What each rank reports back.
 pub(crate) struct RankOutput {
+    /// Final local iterate (replicated after the last Allreduce).
     pub x: Vec<f64>,
+    /// Outer iterations this rank executed.
     pub iterations: usize,
+    /// Tolerance met (rank 0's decision, broadcast to all).
     pub converged: bool,
+    /// Divergence detected.
     pub diverged: bool,
+    /// Error/residual history (recorded by rank 0 only).
     pub history: History,
+    /// Measured compute seconds (iteration work only).
     pub compute_seconds: f64,
+    /// Modeled communication seconds charged by the Communicator.
     pub comm_seconds: f64,
 }
 

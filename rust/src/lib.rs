@@ -12,6 +12,13 @@
 //! - **L2/L1 (python/compile)** — JAX update graphs and Pallas kernels,
 //!   lowered once to HLO text in `artifacts/` by `make artifacts`.
 //!
+//! Every shared-memory solve dispatches onto the persistent
+//! [`parallel::pool`] (workers are spawned once per process), the simulated
+//! cluster ranks of [`distributed::SimCluster`] run on the same pool, and
+//! the [`batch`] layer turns the pool into a serving engine: many
+//! right-hand sides or many independent systems per dispatch. See the
+//! repository `README.md` for the guided tour.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -25,8 +32,15 @@
 //! ```
 //!
 //! See `examples/` for realistic workloads (CT reconstruction, camera
-//! calibration) and `rust/src/coordinator` for the paper's experiments.
+//! calibration, batch serving) and `rust/src/coordinator` for the paper's
+//! experiments.
 
+// Documentation is part of this crate's contract: the CI `docs` job builds
+// rustdoc with `-D warnings`, so an undocumented public item fails the
+// build there rather than rotting silently.
+#![warn(missing_docs)]
+
+pub mod batch;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -51,9 +51,22 @@
 //! The process-wide [`global`] pool grows lazily to the largest `q` ever
 //! requested and is shared by [`super::rka_shared::ParallelRka`],
 //! [`super::rkab_shared::ParallelRkab`],
-//! [`super::block_seq::BlockSequentialRk`] and
-//! [`super::asyrk::AsyRkSolver`]: after warm-up, repeated solves perform
-//! zero `thread::spawn` calls.
+//! [`super::block_seq::BlockSequentialRk`],
+//! [`super::asyrk::AsyRkSolver`], the simulated-MPI ranks of
+//! [`crate::distributed::SimCluster`], and the [`crate::batch`] serving
+//! layer: after warm-up, repeated solves perform zero `thread::spawn`
+//! calls anywhere in the crate.
+//!
+//! # Determinism
+//!
+//! A dispatch hands every participant exactly one call of the current job
+//! and nothing else — no stale job pointers, no buffer reuse between
+//! epochs — so consecutive solves on one pool are bitwise repeatable
+//! whenever the solver itself is deterministic. The crate leans on this:
+//! parallel RKAB through its deterministic gather is *bit-identical* to the
+//! sequential reference (see [`super::rkab_shared`]), and
+//! `tests/parallel_integration.rs` asserts `to_bits()` equality across
+//! consecutive dispatches.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -148,6 +161,23 @@ impl WorkerPool {
     /// Run `f(t)` for `t in 0..q`: `f(0)` on the calling thread, the rest on
     /// pool workers. Returns after every participant finished. Re-raises the
     /// first panic observed among participants.
+    ///
+    /// The closure only needs `Fn(usize) + Sync` — participants borrow the
+    /// caller's state directly, exactly like a scoped-thread region:
+    ///
+    /// ```
+    /// use kaczmarz::parallel::WorkerPool;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = WorkerPool::new();
+    /// let hits = AtomicUsize::new(0);
+    /// pool.run(4, |_t| {
+    ///     hits.fetch_add(1, Ordering::SeqCst);
+    /// });
+    /// assert_eq!(hits.load(Ordering::SeqCst), 4);
+    /// // The workers are parked, not joined: a second dispatch reuses them.
+    /// assert_eq!(pool.worker_count(), 3);
+    /// ```
     pub fn run<F>(&self, q: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -297,6 +327,12 @@ fn worker_loop(inner: &PoolInner, t: usize) {
 /// Grows lazily to the largest `q` ever requested and lives for the process
 /// lifetime (parked workers cost no CPU). Dispatches are serialized, so
 /// concurrent solves queue rather than oversubscribe each other.
+///
+/// ```
+/// let before = kaczmarz::parallel::pool::global().worker_count();
+/// kaczmarz::parallel::pool::global().run(2, |_| {});
+/// assert!(kaczmarz::parallel::pool::global().worker_count() >= before.max(1));
+/// ```
 pub fn global() -> &'static WorkerPool {
     static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
     GLOBAL.get_or_init(WorkerPool::new)

@@ -215,8 +215,8 @@ impl SpinBarrier {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::pool::WorkerPool;
     use std::sync::atomic::AtomicU64;
-    use std::sync::Arc;
 
     #[test]
     fn shared_slice_chunks_partition() {
@@ -232,22 +232,17 @@ mod tests {
 
     #[test]
     fn shared_slice_disjoint_parallel_writes() {
-        let s = Arc::new(SharedSlice::zeros(1000));
+        let s = SharedSlice::zeros(1000);
         let q = 4;
-        std::thread::scope(|scope| {
-            for t in 0..q {
-                let s = Arc::clone(&s);
-                scope.spawn(move || {
-                    let (lo, hi) = s.chunk(t, q);
-                    // SAFETY: chunks are disjoint.
-                    let v = unsafe { s.as_mut_unchecked() };
-                    for i in lo..hi {
-                        v[i] = t as f64;
-                    }
-                });
+        WorkerPool::new().run(q, |t| {
+            let (lo, hi) = s.chunk(t, q);
+            // SAFETY: chunks are disjoint.
+            let v = unsafe { s.as_mut_unchecked() };
+            for i in lo..hi {
+                v[i] = t as f64;
             }
         });
-        let v = Arc::try_unwrap(s).ok().unwrap().into_vec();
+        let v = s.into_vec();
         for t in 0..q {
             let lo = t * 1000 / q;
             assert_eq!(v[lo], t as f64);
@@ -259,21 +254,15 @@ mod tests {
         // Each thread increments a phase counter only after the barrier; if
         // the barrier leaked, some thread would observe a stale phase.
         let q = 4;
-        let barrier = Arc::new(SpinBarrier::new(q));
-        let counter = Arc::new(AtomicU64::new(0));
-        std::thread::scope(|scope| {
-            for _ in 0..q {
-                let barrier = Arc::clone(&barrier);
-                let counter = Arc::clone(&counter);
-                scope.spawn(move || {
-                    for phase in 0..50u64 {
-                        barrier.wait();
-                        // All threads agree the counter equals q*phase here.
-                        assert_eq!(counter.load(Ordering::SeqCst) / q as u64, phase);
-                        barrier.wait();
-                        counter.fetch_add(1, Ordering::SeqCst);
-                    }
-                });
+        let barrier = SpinBarrier::new(q);
+        let counter = AtomicU64::new(0);
+        WorkerPool::new().run(q, |_| {
+            for phase in 0..50u64 {
+                barrier.wait();
+                // All threads agree the counter equals q*phase here.
+                assert_eq!(counter.load(Ordering::SeqCst) / q as u64, phase);
+                barrier.wait();
+                counter.fetch_add(1, Ordering::SeqCst);
             }
         });
         assert_eq!(counter.load(Ordering::SeqCst), 50 * q as u64);
@@ -286,19 +275,13 @@ mod tests {
         // the pure-spin formulation).
         let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
         let q = 4 * cores;
-        let barrier = Arc::new(SpinBarrier::new(q));
-        let counter = Arc::new(AtomicU64::new(0));
-        std::thread::scope(|scope| {
-            for _ in 0..q {
-                let barrier = Arc::clone(&barrier);
-                let counter = Arc::clone(&counter);
-                scope.spawn(move || {
-                    for _ in 0..100u64 {
-                        barrier.wait();
-                        counter.fetch_add(1, Ordering::SeqCst);
-                        barrier.wait();
-                    }
-                });
+        let barrier = SpinBarrier::new(q);
+        let counter = AtomicU64::new(0);
+        WorkerPool::new().run(q, |_| {
+            for _ in 0..100u64 {
+                barrier.wait();
+                counter.fetch_add(1, Ordering::SeqCst);
+                barrier.wait();
             }
         });
         assert_eq!(counter.load(Ordering::SeqCst), 100 * q as u64);
@@ -323,19 +306,14 @@ mod tests {
 
     #[test]
     fn atomic_adds_do_not_lose_updates() {
-        let v = Arc::new(AtomicF64Vec::zeros(4));
+        let v = AtomicF64Vec::zeros(4);
         let q = 8;
         let per_thread = 10_000;
-        std::thread::scope(|scope| {
-            for _ in 0..q {
-                let v = Arc::clone(&v);
-                scope.spawn(move || {
-                    for _ in 0..per_thread {
-                        for i in 0..4 {
-                            v.add(i, 1.0);
-                        }
-                    }
-                });
+        WorkerPool::new().run(q, |_| {
+            for _ in 0..per_thread {
+                for i in 0..4 {
+                    v.add(i, 1.0);
+                }
             }
         });
         for i in 0..4 {

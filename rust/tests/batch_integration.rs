@@ -1,0 +1,172 @@
+//! Integration of the batch-solve serving layer: batched results must be
+//! bitwise-equal to independent single solves, the queue must report per-job
+//! outcomes for heterogeneous workloads, and both must ride the persistent
+//! pool without spawning per-solve threads.
+
+use kaczmarz::batch::{BatchJob, BatchSolver, SolveQueue};
+use kaczmarz::data::{DatasetBuilder, LinearSystem};
+use kaczmarz::linalg::gemv;
+use kaczmarz::parallel::WorkerPool;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+use std::sync::Arc;
+
+/// `count` right-hand sides `b_j = A x_j` with known solutions.
+fn make_jobs(system: &LinearSystem, count: usize, seed: u32) -> Vec<BatchJob> {
+    use kaczmarz::rng::Mt19937;
+    let mut rng = Mt19937::new(seed);
+    (0..count)
+        .map(|_| {
+            let x: Vec<f64> =
+                (0..system.cols()).map(|_| rng.next_f64() - 0.5).collect();
+            BatchJob::new(gemv(&system.a, &x).unwrap()).with_reference(x)
+        })
+        .collect()
+}
+
+#[test]
+fn batched_16_rhs_equals_16_independent_solves_bitwise() {
+    // The acceptance bar of the serving layer: fanning 16 rhs across pool
+    // workers changes *when* each job runs, never *what* it computes.
+    let system = DatasetBuilder::new(300, 12).seed(1).consistent();
+    let jobs = make_jobs(&system, 16, 17);
+    let opts = SolveOptions::default().with_fixed_iterations(120);
+
+    let reports = BatchSolver::new(&system, RkSolver::new(7))
+        .with_workers(4)
+        .solve_many(&jobs, &opts)
+        .unwrap();
+    assert_eq!(reports.len(), 16);
+
+    for (j, (report, job)) in reports.iter().zip(&jobs).enumerate() {
+        let independent = LinearSystem::new(
+            system.a.clone(),
+            job.rhs.clone(),
+            job.x_ref.clone(),
+            true,
+        );
+        let solo = RkSolver::new(7).solve(&independent, &opts);
+        assert_eq!(report.job, j);
+        assert_eq!(report.result.iterations, solo.iterations, "job {j}");
+        for (a, b) in report.result.x.iter().zip(&solo.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "job {j}: batched {a} vs solo {b}");
+        }
+    }
+}
+
+#[test]
+fn batched_rkab_matches_independent_solves_bitwise_too() {
+    // Same guarantee through a block solver (the paper's RKAB), whose
+    // in-block float association is the delicate part.
+    let system = DatasetBuilder::new(240, 10).seed(2).consistent();
+    let jobs = make_jobs(&system, 6, 23);
+    let opts = SolveOptions::default().with_fixed_iterations(40);
+
+    let reports = BatchSolver::new(&system, RkabSolver::new(5, 4, 8, 1.0))
+        .with_workers(3)
+        .solve_many(&jobs, &opts)
+        .unwrap();
+    for (report, job) in reports.iter().zip(&jobs) {
+        let independent = LinearSystem::new(
+            system.a.clone(),
+            job.rhs.clone(),
+            job.x_ref.clone(),
+            true,
+        );
+        let solo = RkabSolver::new(5, 4, 8, 1.0).solve(&independent, &opts);
+        for (a, b) in report.result.x.iter().zip(&solo.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn queue_mixed_consistent_inconsistent_jobs_report_individually() {
+    // Multi-tenant shape: different systems, different stopping rules, one
+    // dispatch. Consistent jobs must converge to tolerance; inconsistent
+    // jobs run their fixed budget and report the residual floor honestly.
+    let mut queue = SolveQueue::new().with_workers(3);
+    let consistent_ids: Vec<usize> = (0..3u32)
+        .map(|s| {
+            queue.push(
+                DatasetBuilder::new(200 + 20 * s as usize, 8).seed(s).consistent(),
+                SolveOptions::default(),
+            )
+        })
+        .collect();
+    let inconsistent_ids: Vec<usize> = (0..2u32)
+        .map(|s| {
+            queue.push(
+                DatasetBuilder::new(150, 6).seed(40 + s).inconsistent(),
+                SolveOptions::default().with_fixed_iterations(300),
+            )
+        })
+        .collect();
+
+    let reports = queue.run(&RkSolver::new(3)).unwrap();
+    assert_eq!(reports.len(), 5);
+    for &id in &consistent_ids {
+        assert_eq!(reports[id].job, id);
+        assert!(reports[id].result.converged, "job {id}");
+        // err² < 1e-8 at stop with σ_max ~ 1e2 row scales => residual ~ 1e-2.
+        assert!(reports[id].residual_norm < 1e-1, "job {id}");
+    }
+    for &id in &inconsistent_ids {
+        assert_eq!(reports[id].job, id);
+        assert_eq!(reports[id].result.iterations, 300, "job {id}");
+        // Inconsistent by construction: no iterate zeroes the residual.
+        assert!(reports[id].residual_norm > 1e-4, "job {id}");
+    }
+}
+
+#[test]
+fn batch_layer_reuses_pool_workers_across_calls() {
+    // The serving property: request N+1 spawns no threads. A dedicated pool
+    // (immune to other tests growing the global one) must hold exactly
+    // lanes-1 workers after warm-up, across both batch primitives.
+    let pool = Arc::new(WorkerPool::new());
+    let system = DatasetBuilder::new(150, 8).seed(5).consistent();
+    let jobs = make_jobs(&system, 8, 31);
+    let opts = SolveOptions::default().with_fixed_iterations(30);
+
+    let batch = BatchSolver::new(&system, RkSolver::new(1))
+        .with_workers(4)
+        .with_pool(Arc::clone(&pool));
+    batch.solve_many(&jobs, &opts).unwrap();
+    assert_eq!(pool.worker_count(), 3, "first call spawns the lanes");
+    for _ in 0..5 {
+        batch.solve_many(&jobs, &opts).unwrap();
+    }
+    assert_eq!(pool.worker_count(), 3, "later calls reuse parked workers");
+
+    let mut queue = SolveQueue::new().with_workers(4).with_pool(Arc::clone(&pool));
+    for s in 0..6u32 {
+        queue.push(
+            DatasetBuilder::new(100, 6).seed(s).consistent(),
+            SolveOptions::default().with_fixed_iterations(30),
+        );
+    }
+    queue.run(&RkSolver::new(1)).unwrap();
+    assert_eq!(pool.worker_count(), 3, "queue shares the same parked workers");
+}
+
+#[test]
+fn reference_free_jobs_run_the_fixed_budget() {
+    // Serving an unknown rhs: no reference exists, so the job runs the
+    // fixed-iteration protocol and the report's residual is the quality
+    // signal. (b = A·x for hidden x, so the residual must shrink.)
+    let system = DatasetBuilder::new(200, 8).seed(9).consistent();
+    let hidden: Vec<f64> = (0..system.cols()).map(|i| 1.0 + i as f64).collect();
+    let jobs = [BatchJob::new(gemv(&system.a, &hidden).unwrap())];
+    let opts = SolveOptions::default().with_fixed_iterations(4000);
+    let reports = BatchSolver::new(&system, RkSolver::new(3))
+        .solve_many(&jobs, &opts)
+        .unwrap();
+    let b_norm = kaczmarz::linalg::norm2(&jobs[0].rhs);
+    assert!(
+        reports[0].residual_norm < 1e-3 * b_norm,
+        "residual {} vs ‖b‖ {b_norm}",
+        reports[0].residual_norm
+    );
+}

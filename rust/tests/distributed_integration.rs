@@ -95,6 +95,37 @@ fn contention_penalizes_packed_nodes_for_large_working_sets() {
 }
 
 #[test]
+fn simcluster_pooled_solves_are_bit_deterministic_and_reuse_workers() {
+    // Mirror of the shared-memory pool determinism test: the SimCluster
+    // ranks now run as participants of one pool dispatch, so two solves on
+    // the same pool must (a) spawn workers once, on warm-up only, and
+    // (b) produce bit-identical iterates — any channel reordering into the
+    // deterministic Allreduce, stale job, or rank-state leak would show up
+    // here.
+    use kaczmarz::parallel::WorkerPool;
+    use std::sync::Arc;
+    let sys = DatasetBuilder::new(240, 12).seed(21).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(60);
+    let np = 4;
+    let pool = Arc::new(WorkerPool::new());
+    let cluster = SimCluster::new(np, Placement::two_per_node()).with_pool(Arc::clone(&pool));
+
+    let first = DistRkab::new(5, 6, 1.0).solve(&sys, &opts, &cluster);
+    assert_eq!(pool.worker_count(), np - 1, "first solve spawns the rank threads");
+    let second = DistRkab::new(5, 6, 1.0).solve(&sys, &opts, &cluster);
+    assert_eq!(pool.worker_count(), np - 1, "second solve reuses parked workers");
+    assert_eq!(first.iterations, second.iterations);
+    for (a, b) in first.x.iter().zip(&second.x) {
+        assert_eq!(a.to_bits(), b.to_bits(), "pooled SimCluster solves differ: {a} vs {b}");
+    }
+
+    // DistRka on the same (already warm) pool: still no spawns.
+    let r = DistRka::new(3, 1.0).solve(&sys, &opts, &cluster);
+    assert_eq!(r.iterations, 60);
+    assert_eq!(pool.worker_count(), np - 1, "solver switch must not spawn workers");
+}
+
+#[test]
 fn dist_results_replicated_across_ranks() {
     // After the final Allreduce every rank holds the same x; the collected
     // result must be consistent with solving on any rank.
