@@ -332,6 +332,48 @@ fn main() {
         );
     }
 
+    // Stopping-test overhead on a serving-sized (2048 x 512) system. The
+    // reference-error test is O(n) per iteration; the residual test is a
+    // full O(m·n) gemv per *check*, so `check_every` is the amortization
+    // lever. Every run executes exactly the same 512 iterations (tolerance
+    // 0 is unsatisfiable, the cap stops the run) with the stopping
+    // machinery live; the fixed-budget row is the no-stopping floor.
+    {
+        let (m, n) = (2048usize, 512usize);
+        let sys = DatasetBuilder::new(m, n).seed(47).consistent();
+        let iters = 512usize;
+        let mut run = |label: String, opts: SolveOptions| -> f64 {
+            let r = RkSolver::new(5).solve(&sys, &opts);
+            assert_eq!(r.iterations, iters, "{label}: must run the full cap");
+            assert!(!r.converged, "{label}: tolerance 0 is unsatisfiable");
+            let per_iter = r.seconds / iters as f64;
+            t.row(vec![label, n.to_string(), format!("{:.0}", per_iter * 1e9), "-".into()]);
+            per_iter
+        };
+        let t_off = run(
+            format!("stopping off, fixed budget ({m}x{n})"),
+            SolveOptions::default().with_fixed_iterations(iters),
+        );
+        let t_ref = run(
+            format!("stop ref-error every iter ({m}x{n})"),
+            SolveOptions::default().with_tolerance(0.0).with_max_iterations(iters),
+        );
+        for ce in [1usize, 32, 256] {
+            let t_res = run(
+                format!("stop residual ce={ce} ({m}x{n})"),
+                SolveOptions::default()
+                    .with_residual_stopping(0.0, ce)
+                    .with_max_iterations(iters),
+            );
+            println!(
+                "[stop-check ce={ce}] residual/ref-error = {:.2}, residual/off = {:.2} \
+                 (amortizes toward 1 as ce grows)",
+                t_res / t_ref,
+                t_res / t_off
+            );
+        }
+    }
+
     println!("{}", t.to_markdown());
     println!("{}", t.to_text());
 }

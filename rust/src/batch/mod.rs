@@ -9,8 +9,12 @@
 //! - [`BatchSolver`] — many right-hand sides against **one** system. The
 //!   expensive per-system state (the matrix, the squared row norms feeding
 //!   the eq.-4 sampling distribution) is prepared once per worker lane
-//!   instead of once per request, and the per-rhs solves are fanned across
-//!   the pool workers.
+//!   instead of once per request — and the matrix itself is not even
+//!   per-lane: `Matrix` storage is `Arc`-backed copy-on-write, so every
+//!   lane's `LinearSystem` clone *shares one resident `A`*
+//!   (`Matrix::shares_storage`), and a 16-lane batch over a multi-GiB
+//!   system costs one matrix, not sixteen. The per-rhs solves are fanned
+//!   across the pool workers.
 //! - [`SolveQueue`] — many independent `(system, options)` jobs multiplexed
 //!   through a **single** pool dispatch, each producing its own
 //!   [`SolveReport`]. This is the multi-tenant shape: different systems,
@@ -19,6 +23,28 @@
 //! Both primitives claim jobs with an atomic counter inside one
 //! [`WorkerPool::run`] region (work stealing, so a slow job never blocks the
 //! queue behind a fixed partition) and return reports **in job order**.
+//!
+//! # Stopping in a serving context
+//!
+//! The paper's stopping rule measures `‖x - x*‖²` against a *known
+//! reference solution* — which a serving system, by definition, does not
+//! have (the reference is the answer being computed). Serving jobs
+//! therefore run in one of two reference-free modes:
+//!
+//! - **Residual stopping**
+//!   ([`SolveOptions::with_residual_stopping`](crate::solvers::SolveOptions::with_residual_stopping)):
+//!   stop when `‖Ax - b‖² < tol`. This makes the report's `converged` flag
+//!   a *real quality signal* — `true` means the returned iterate provably
+//!   fits the data to the requested residual, no reference needed.
+//! - **Fixed budget** (`with_fixed_iterations`): spend exactly `k`
+//!   iterations. Nothing is measured, so `converged` is always `false`;
+//!   judge quality by [`SolveReport::residual_norm`].
+//!
+//! Either way the solvers never touch the (absent) reference — the initial
+//! error is computed lazily, only by runs that actually stop on it — so
+//! reference-free jobs run on their systems *in place*: no dummy-reference
+//! patching, no per-job system clone (`tests/stopping_properties.rs` pins
+//! this down).
 //!
 //! # Determinism guarantee
 //!
@@ -85,11 +111,14 @@ pub struct SolveReport {
     pub solver: &'static str,
     /// The per-job solve outcome (iterate, iterations, convergence flags).
     ///
-    /// Note the crate-wide convention carried by [`SolveResult`]: under
-    /// `fixed_iterations` the `converged` flag is always `true` (the
-    /// budget was spent as requested, nothing was measured). For a serving
-    /// quality signal use [`SolveReport::residual_norm`], which is computed
-    /// against the job's own system regardless of stopping mode.
+    /// `result.converged` means the job's stopping criterion was met. Under
+    /// `fixed_iterations` nothing is measured, so it is always `false` —
+    /// fixed-budget runs answer "how fast", not "how good". For a serving
+    /// quality signal, stop on the residual
+    /// ([`SolveOptions`](crate::solvers::SolveOptions)`::with_residual_stopping`),
+    /// where `converged = true` certifies `‖Ax - b‖² < tol`, or read
+    /// [`SolveReport::residual_norm`], which is computed against the job's
+    /// own system regardless of stopping mode.
     pub result: SolveResult,
     /// Residual norm `‖A x - b‖` of the returned iterate against *this
     /// job's* system — the serving-meaningful quality number, available even
@@ -128,16 +157,6 @@ where
 /// Default lane count: one per hardware thread.
 pub(crate) fn default_workers() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-}
-
-/// Would these options consult the system's reference solution?
-///
-/// Mirrors [`crate::solvers`]'s `stop_check`/history contract: only a
-/// fixed-iteration run with history recording off never reads the
-/// reference. Shared by [`BatchSolver`] and [`SolveQueue`] validation so
-/// the two cannot drift.
-pub(crate) fn needs_reference(opts: &crate::solvers::SolveOptions) -> bool {
-    opts.fixed_iterations.is_none() || opts.history_step != 0
 }
 
 #[cfg(test)]

@@ -1,6 +1,6 @@
 //! Many independent `(system, options)` jobs per dispatch ([`SolveQueue`]).
 
-use super::{default_workers, fan_out, needs_reference, SolveReport};
+use super::{default_workers, fan_out, SolveReport};
 use crate::data::LinearSystem;
 use crate::error::{Error, Result};
 use crate::parallel::pool::WorkerPool;
@@ -21,23 +21,35 @@ use std::sync::Arc;
 ///
 /// ```
 /// use kaczmarz::batch::SolveQueue;
-/// use kaczmarz::data::DatasetBuilder;
+/// use kaczmarz::data::{DatasetBuilder, LinearSystem};
+/// use kaczmarz::linalg::Matrix;
 /// use kaczmarz::solvers::rk::RkSolver;
 /// use kaczmarz::solvers::SolveOptions;
 ///
 /// let mut queue = SolveQueue::new();
+/// // Reproduction-style job: known x*, paper stopping rule.
 /// queue.push(
 ///     DatasetBuilder::new(100, 6).seed(2).consistent(),
 ///     SolveOptions::default(),
 /// );
+/// // Timing-style job: fixed budget, nothing measured.
 /// queue.push(
 ///     DatasetBuilder::new(80, 5).seed(3).inconsistent(),
 ///     SolveOptions::default().with_fixed_iterations(200),
 /// );
+/// // Serving-style job: no reference solution exists — stop on the
+/// // residual, which needs none, and solve the system in place.
+/// let a = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+/// queue.push(
+///     LinearSystem::new(a, vec![1.0, 2.0, 3.0], None, true),
+///     SolveOptions::default().with_residual_stopping(1e-12, 16),
+/// );
 /// let reports = queue.run(&RkSolver::new(1)).unwrap();
-/// assert_eq!(reports.len(), 2);
+/// assert_eq!(reports.len(), 3);
 /// assert!(reports[0].result.converged);
+/// assert!(!reports[1].result.converged); // budget spent, nothing measured
 /// assert!(reports[1].residual_norm > 0.0); // inconsistent: residual floor
+/// assert!(reports[2].result.converged); // certified: ‖Ax - b‖² < 1e-12
 /// ```
 pub struct SolveQueue {
     jobs: Vec<(LinearSystem, SolveOptions)>,
@@ -84,18 +96,20 @@ impl SolveQueue {
     /// untouched, so it can be re-run (e.g. with a different solver).
     ///
     /// Fails fast on the calling thread if a job's options would consult a
-    /// reference solution its system does not carry (same contract as
-    /// [`super::BatchSolver::solve_many`]). Reference-free jobs currently
-    /// pay one clone of their system per run (the solvers compute the
-    /// initial error unconditionally, so a dummy reference must be patched
-    /// in); jobs that carry a reference are solved in place.
+    /// reference solution its system does not carry
+    /// ([`SolveOptions::consults_reference`], the same contract as
+    /// [`super::BatchSolver::solve_many`]). Every job — with or without a
+    /// reference — is solved *in place*, zero clones: solvers evaluate
+    /// their stopping metric lazily, so a reference-free job under residual
+    /// stopping or a fixed budget simply never looks for one.
     pub fn run<S: Solver + Sync>(&self, solver: &S) -> Result<Vec<SolveReport>> {
         for (j, (system, opts)) in self.jobs.iter().enumerate() {
-            if system.reference_solution().is_none() && needs_reference(opts) {
+            if system.reference_solution().is_none() && opts.consults_reference() {
                 return Err(Error::InvalidArgument(format!(
-                    "job {j}: its system has no reference solution, so error-based \
-                     stopping and history recording are unavailable (use \
-                     fixed_iterations with history_step == 0)"
+                    "job {j}: its system has no reference solution, so \
+                     reference-error stopping and history recording are \
+                     unavailable (stop on the residual or use fixed_iterations, \
+                     with history_step == 0)"
                 )));
             }
         }
@@ -106,17 +120,7 @@ impl SolveQueue {
         let pool = self.pool.as_deref().unwrap_or_else(|| crate::parallel::pool::global());
         Ok(fan_out(pool, lane_count, self.jobs.len(), |_lane, j| {
             let (system, opts) = &self.jobs[j];
-            let result = if system.reference_solution().is_some() {
-                solver.solve(system, opts)
-            } else {
-                // Fixed-budget job (validated above): solvers still compute
-                // the initial error unconditionally, so hand them a dummy
-                // zero reference — in fixed-iteration mode with history off
-                // it is never consulted for control flow.
-                let mut patched = system.clone();
-                patched.x_true = Some(vec![0.0; patched.cols()]);
-                solver.solve(&patched, opts)
-            };
+            let result = solver.solve(system, opts);
             let residual_norm = system.residual_norm(&result.x);
             SolveReport { job: j, solver: solver.name(), result, residual_norm }
         }))

@@ -1,6 +1,6 @@
 //! Many right-hand sides against one system ([`BatchSolver`]).
 
-use super::{default_workers, fan_out, needs_reference, SolveReport};
+use super::{default_workers, fan_out, SolveReport};
 use crate::data::LinearSystem;
 use crate::error::{Error, Result};
 use crate::parallel::pool::WorkerPool;
@@ -13,15 +13,18 @@ pub struct BatchJob {
     /// Right-hand side `b` (length = rows of the batch system).
     pub rhs: Vec<f64>,
     /// Reference solution the error-based stopping test measures against
-    /// (the crate-wide convention: solvers stop on `‖x - x_ref‖²`, paper
-    /// §3.5). `None` means "answer unknown" — such jobs must run under
-    /// `fixed_iterations` with history recording off, which never consults
-    /// the reference; [`BatchSolver::solve_many`] validates this up front.
+    /// (the paper's convention: stop on `‖x - x_ref‖²`, §3.5). `None`
+    /// means "answer unknown" — the normal serving case — and such jobs
+    /// must run under options that never consult the reference: residual
+    /// stopping, or a fixed iteration budget, in both cases with history
+    /// recording off ([`SolveOptions::consults_reference`]);
+    /// [`BatchSolver::solve_many`] validates this up front.
     pub x_ref: Option<Vec<f64>>,
 }
 
 impl BatchJob {
-    /// Job with an unknown solution (requires fixed-iteration options).
+    /// Job with an unknown solution (requires reference-free options:
+    /// residual stopping or a fixed iteration budget).
     pub fn new(rhs: Vec<f64>) -> Self {
         BatchJob { rhs, x_ref: None }
     }
@@ -38,10 +41,14 @@ impl BatchJob {
 ///
 /// The per-system state every Kaczmarz solver needs — the matrix and the
 /// squared row norms behind the eq.-4 sampling distribution — is prepared
-/// once per worker *lane* (at most `workers` clones per call), not once per
-/// right-hand side: a lane swaps the rhs in and reuses everything else, so
-/// request cost stays O(solve), never O(build system). See the
-/// [module docs](crate::batch) for the determinism guarantee and for how to
+/// once per worker *lane* (at most `workers` `LinearSystem` clones per
+/// call), not once per right-hand side: a lane swaps the rhs in and reuses
+/// everything else, so request cost stays O(solve), never O(build system).
+/// And a lane clone is cheap even for huge systems: `Matrix` storage is
+/// `Arc`-backed, so every lane reads *the same resident `A`*
+/// (`Matrix::shares_storage` holds across all lanes; only the O(m) rhs and
+/// row-norm vectors are duplicated). See the [module docs](crate::batch)
+/// for the determinism guarantee, the serving stopping modes, and how to
 /// combine this with per-job parallel solvers.
 pub struct BatchSolver<'s, S> {
     system: &'s LinearSystem,
@@ -73,10 +80,11 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
     /// Solve every job of the batch; reports come back in job order.
     ///
     /// Fails fast (on the calling thread, before any dispatch) on shape
-    /// mismatches and on reference-free jobs whose options would consult the
-    /// missing reference: tolerance-based stopping and history recording
-    /// both measure against `x_ref`, so jobs without one need
-    /// `fixed_iterations` set and `history_step == 0`.
+    /// mismatches and on reference-free jobs whose options *would* consult
+    /// the missing reference ([`SolveOptions::consults_reference`]):
+    /// reference-error stopping and history recording both measure against
+    /// `x_ref`, so jobs without one need residual stopping or
+    /// `fixed_iterations`, with `history_step == 0`.
     pub fn solve_many(
         &self,
         jobs: &[BatchJob],
@@ -98,11 +106,11 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
                         x_ref.len()
                     )));
                 }
-                None if needs_reference(opts) => {
+                None if opts.consults_reference() => {
                     return Err(Error::InvalidArgument(format!(
-                        "job {j} has no reference solution: error-based stopping and \
-                         history recording need one (set fixed_iterations with \
-                         history_step == 0, or attach x_ref)"
+                        "job {j} has no reference solution: reference-error stopping \
+                         and history recording need one (stop on the residual or set \
+                         fixed_iterations, with history_step == 0 — or attach x_ref)"
                     )));
                 }
                 _ => {}
@@ -113,8 +121,10 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
         }
 
         // One lane (system clone) per concurrently-running job, never more
-        // than one per job. The clone copies the precomputed row norms, so
-        // no lane ever recomputes per-system state.
+        // than one per job. The clone shares the resident matrix (Arc
+        // storage; nothing mutates `a`, so copy-on-write never fires) and
+        // copies the precomputed row norms, so no lane ever recomputes —
+        // or re-materializes — per-system state.
         let lane_count = self.workers.min(jobs.len()).max(1);
         let lanes: Vec<Mutex<LinearSystem>> =
             (0..lane_count).map(|_| Mutex::new(self.system.clone())).collect();
@@ -127,8 +137,10 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
             // solver reads is now numerically identical to a freshly built
             // per-job system, so the result is bitwise equal to an
             // independent solve (asserted in tests/batch_integration.rs).
+            // Reference-free jobs leave x_true = None — validated above to
+            // run under options that never consult it.
             sys.b.copy_from_slice(&job.rhs);
-            sys.x_true = Some(job.x_ref.clone().unwrap_or_else(|| vec![0.0; n]));
+            sys.x_true = job.x_ref.clone();
             sys.x_ls = None;
             sys.consistent = true;
             let result = self.solver.solve(&sys, opts);

@@ -98,7 +98,13 @@ impl LinearSystem {
 
     /// Squared error `‖x - x_ref‖²` against the reference solution.
     ///
-    /// Panics if no reference solution is known (generator always sets one).
+    /// Panics if no reference solution is known (the generator always sets
+    /// one). Solvers consult this lazily and only under reference-error
+    /// stopping or history recording: fixed-iteration history-free runs and
+    /// residual-stopped runs never call it, so systems *without* a
+    /// reference are solvable under those protocols — the contract
+    /// `SolveOptions::consults_reference` encodes and
+    /// `tests/stopping_properties.rs` pins down.
     pub fn error_sq(&self, x: &[f64]) -> f64 {
         let r = self.reference_solution().expect("no reference solution");
         dist_sq(x, r)

@@ -111,7 +111,8 @@ pub struct DistResult {
     pub x: Vec<f64>,
     /// Outer iterations executed.
     pub iterations: usize,
-    /// Tolerance met.
+    /// Stopping criterion met (always false for fixed-iteration runs,
+    /// which measure nothing).
     pub converged: bool,
     /// Divergence detected.
     pub diverged: bool,

@@ -22,7 +22,7 @@ use crate::linalg::vector::{axpy, dot};
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::rka::Weights;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
-use crate::solvers::{stop_check, SolveOptions};
+use crate::solvers::{SolveOptions, StopCheck};
 
 /// Distributed-memory RKA (Algorithm 2).
 pub struct DistRka {
@@ -60,21 +60,16 @@ impl DistRka {
             crate::solvers::SamplingScheme::Partitioned,
             np,
         );
-        let initial_err = system.error_sq(&vec![0.0; n]);
-        let timed = opts.fixed_iterations.is_some();
         // Per-rank working set: its row partition (what an MPI rank stores).
         let bytes_per_rank = (system.rows() / np).max(1) * n * 8;
 
         let sw = Stopwatch::start();
-        let outputs = cluster.run(|rank, comm| {
-            self.rank_loop(rank, comm, system, opts, np, initial_err, timed)
-        });
+        let outputs = cluster.run(|rank, comm| self.rank_loop(rank, comm, system, opts, np));
         let wall_seconds = sw.seconds();
 
         self.collect(outputs, cluster, bytes_per_rank, wall_seconds, np)
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn rank_loop(
         &self,
         rank: usize,
@@ -82,16 +77,17 @@ impl DistRka {
         system: &LinearSystem,
         opts: &SolveOptions,
         np: usize,
-        initial_err: f64,
-        timed: bool,
     ) -> RankOutput {
         let n = system.cols();
+        let timed = opts.fixed_iterations.is_some();
         // Matrix is distributed: each rank samples only its own partition
         // (this *is* the Distributed Approach of §3.3.1).
         let mut sampler =
             RowSampler::new(system, SamplingScheme::Partitioned, rank, np, self.seed);
         let mut x = vec![0.0; n];
         let mut history = History::every(if rank == 0 { opts.history_step } else { 0 });
+        // Stopping state lives with the rank that decides (rank 0).
+        let mut stopper = (rank == 0).then(|| StopCheck::new(system, opts));
         let mut compute_seconds = 0.0;
         let mut k = 0usize;
         let alpha = self.weights.get(rank);
@@ -102,15 +98,16 @@ impl DistRka {
             // Stop decision: rank 0 evaluates, everyone follows. In timed
             // runs the iteration budget is known to all ranks, so no
             // communication is needed (matching the paper's protocol of
-            // excluding the stopping test from timings). In tolerance runs
-            // rank 0 broadcasts the decision.
+            // excluding the stopping test from timings) and no metric is
+            // ever evaluated — such runs report converged = false. In
+            // criterion runs rank 0 broadcasts the decision.
             let mut flag = 0.0f64;
             if rank == 0 {
-                let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
                 if history.due(k) {
-                    history.record(k, err.sqrt(), system.residual_norm(&x));
+                    history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
                 }
-                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                let stopper = stopper.as_mut().expect("rank 0 owns the stopper");
+                let (stop, c, d) = stopper.check(k, &x);
                 flag = if stop {
                     if c {
                         1.0
@@ -125,10 +122,9 @@ impl DistRka {
             }
             if !timed {
                 comm.broadcast_flag(&mut flag);
-            } else if rank == 0 && k >= opts.fixed_iterations.unwrap() {
-                flag = 1.0;
-            } else if rank != 0 && k >= opts.fixed_iterations.unwrap() {
-                flag = 1.0;
+            } else if k >= opts.fixed_iterations.unwrap() {
+                // Budget spent, nothing measured: stop, not converged.
+                flag = 3.0;
             }
             if flag != 0.0 {
                 converged = flag == 1.0;
@@ -203,7 +199,8 @@ pub(crate) struct RankOutput {
     pub x: Vec<f64>,
     /// Outer iterations this rank executed.
     pub iterations: usize,
-    /// Tolerance met (rank 0's decision, broadcast to all).
+    /// Stopping criterion met (rank 0's decision, broadcast to all; always
+    /// false for fixed-iteration runs, which measure nothing).
     pub converged: bool,
     /// Divergence detected.
     pub diverged: bool,

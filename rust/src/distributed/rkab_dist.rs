@@ -21,7 +21,7 @@ use crate::linalg::vector::scale_in_place;
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::rkab::block_sweep;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
-use crate::solvers::{stop_check, SolveOptions};
+use crate::solvers::{SolveOptions, StopCheck};
 
 /// Distributed-memory RKAB (Algorithm 4).
 pub struct DistRkab {
@@ -56,14 +56,10 @@ impl DistRkab {
             SamplingScheme::Partitioned,
             np,
         );
-        let initial_err = system.error_sq(&vec![0.0; n]);
-        let timed = opts.fixed_iterations.is_some();
         let bytes_per_rank = (system.rows() / np).max(1) * n * 8;
 
         let sw = Stopwatch::start();
-        let outputs = cluster.run(|rank, comm| {
-            self.rank_loop(rank, comm, system, opts, np, initial_err, timed)
-        });
+        let outputs = cluster.run(|rank, comm| self.rank_loop(rank, comm, system, opts, np));
         let wall_seconds = sw.seconds();
 
         let rank_stats: Vec<RankStats> = outputs
@@ -91,7 +87,6 @@ impl DistRkab {
         }
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn rank_loop(
         &self,
         rank: usize,
@@ -99,15 +94,16 @@ impl DistRkab {
         system: &LinearSystem,
         opts: &SolveOptions,
         np: usize,
-        initial_err: f64,
-        timed: bool,
     ) -> RankOutput {
         let n = system.cols();
+        let timed = opts.fixed_iterations.is_some();
         let mut sampler =
             RowSampler::new(system, SamplingScheme::Partitioned, rank, np, self.seed);
         let mut x = vec![0.0; n];
         let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
         let mut history = History::every(if rank == 0 { opts.history_step } else { 0 });
+        // Stopping state lives with the rank that decides (rank 0).
+        let mut stopper = (rank == 0).then(|| StopCheck::new(system, opts));
         let mut compute_seconds = 0.0;
         let mut k = 0usize;
         let inv_np = 1.0 / np as f64;
@@ -116,11 +112,11 @@ impl DistRkab {
         loop {
             let mut flag = 0.0f64;
             if rank == 0 {
-                let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
                 if history.due(k) {
-                    history.record(k, err.sqrt(), system.residual_norm(&x));
+                    history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
                 }
-                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                let stopper = stopper.as_mut().expect("rank 0 owns the stopper");
+                let (stop, c, d) = stopper.check(k, &x);
                 flag = if stop {
                     if c {
                         1.0
@@ -136,7 +132,8 @@ impl DistRkab {
             if !timed {
                 comm.broadcast_flag(&mut flag);
             } else if k >= opts.fixed_iterations.unwrap() {
-                flag = 1.0;
+                // Budget spent, nothing measured: stop, not converged.
+                flag = 3.0;
             }
             if flag != 0.0 {
                 converged = flag == 1.0;

@@ -3,13 +3,24 @@
 //! Row-major layout is deliberate: every Kaczmarz variant touches whole rows
 //! (`<A^(i), x>` then `x += scale * A^(i)`), so a row must be a contiguous
 //! slice. This is the same choice the paper's C++ implementation makes.
+//!
+//! Storage sits behind an [`Arc`] with copy-on-write semantics: `clone()` is
+//! a reference-count bump, and the clone only pays for its own buffer if it
+//! is *mutated* afterwards. This is what lets the batch-serving layer keep
+//! one resident `A` shared across every solver lane — a 16-lane
+//! `BatchSolver` over a multi-GiB system holds one matrix, not sixteen —
+//! while code that builds and then fills a fresh matrix (the generator, IO,
+//! `crop`) mutates its sole reference in place, copy-free. Reads go through
+//! one extra pointer indirection, which is noise next to the `O(n)` row
+//! kernels behind every access.
 
 use crate::error::{Error, Result};
+use std::sync::Arc;
 
-/// Dense row-major matrix of `f64`.
+/// Dense row-major matrix of `f64` (cheaply clonable, copy-on-write).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
-    data: Vec<f64>,
+    data: Arc<Vec<f64>>,
     rows: usize,
     cols: usize,
 }
@@ -17,7 +28,7 @@ pub struct Matrix {
 impl Matrix {
     /// Zero matrix of shape `rows x cols`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { data: vec![0.0; rows * cols], rows, cols }
+        Matrix { data: Arc::new(vec![0.0; rows * cols]), rows, cols }
     }
 
     /// Build from a flat row-major buffer.
@@ -32,7 +43,24 @@ impl Matrix {
                 cols
             )));
         }
-        Ok(Matrix { data, rows, cols })
+        Ok(Matrix { data: Arc::new(data), rows, cols })
+    }
+
+    /// Copy-on-write access to the storage: clones the buffer first if (and
+    /// only if) it is shared with another `Matrix`. Single mutation
+    /// gateway — every `&mut` accessor funnels through here.
+    #[inline]
+    fn data_mut(&mut self) -> &mut Vec<f64> {
+        Arc::make_mut(&mut self.data)
+    }
+
+    /// Do `self` and `other` share one storage buffer (`Arc::ptr_eq`)?
+    ///
+    /// True after a `clone()` until either side is mutated. The batch
+    /// integration tests use this to assert that serving lanes really hold
+    /// *one* resident matrix.
+    pub fn shares_storage(&self, other: &Matrix) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Identity matrix of order `n`.
@@ -63,11 +91,12 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Mutable view of row `i`.
+    /// Mutable view of row `i` (copy-on-write if the storage is shared).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         debug_assert!(i < self.rows);
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.data_mut()[i * cols..(i + 1) * cols]
     }
 
     /// Iterator over rows as slices.
@@ -81,10 +110,10 @@ impl Matrix {
         &self.data
     }
 
-    /// Flat mutable row-major buffer.
+    /// Flat mutable row-major buffer (copy-on-write if shared).
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
-        &mut self.data
+        self.data_mut()
     }
 
     /// Squared Euclidean norm of every row: `‖A^(i)‖²`.
@@ -128,7 +157,7 @@ impl Matrix {
             )));
         }
         Ok(Matrix {
-            data: self.data[start * self.cols..end * self.cols].to_vec(),
+            data: Arc::new(self.data[start * self.cols..end * self.cols].to_vec()),
             rows: end - start,
             cols: self.cols,
         })
@@ -211,7 +240,8 @@ impl std::ops::Index<(usize, usize)> for Matrix {
 impl std::ops::IndexMut<(usize, usize)> for Matrix {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
-        &mut self.data[i * self.cols + j]
+        let idx = i * self.cols + j;
+        &mut self.data_mut()[idx]
     }
 }
 
@@ -303,5 +333,33 @@ mod tests {
     fn transpose_involution() {
         let m = sample();
         assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn clone_shares_storage_until_mutation() {
+        let m = sample();
+        let mut c = m.clone();
+        assert!(c.shares_storage(&m), "clone is a refcount bump");
+        assert_eq!(c, m);
+        c.row_mut(0)[0] = 99.0; // copy-on-write detaches the clone
+        assert!(!c.shares_storage(&m));
+        assert_eq!(m[(0, 0)], 1.0, "original must be untouched");
+        assert_eq!(c[(0, 0)], 99.0);
+        assert_ne!(c, m);
+    }
+
+    #[test]
+    fn sole_owner_mutates_in_place() {
+        let mut m = sample();
+        let p = m.as_slice().as_ptr();
+        m.row_mut(1)[0] = -4.0;
+        m[(0, 1)] = 7.0;
+        m.as_mut_slice()[2] = 0.5;
+        assert_eq!(m.as_slice().as_ptr(), p, "unshared storage never reallocates");
+    }
+
+    #[test]
+    fn distinct_constructions_do_not_share() {
+        assert!(!sample().shares_storage(&sample()));
     }
 }

@@ -5,8 +5,11 @@
 //!   experiment <id> [--scale f] [--seeds k] [--out dir]
 //!                                run one experiment (fig1..fig14, table1/2)
 //!   all [--scale f] [--out dir]  run the full evaluation suite
-//!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n] ...
-//!                                one-off solve on a generated system
+//!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n]
+//!         [--residual [--check-every k]] ...
+//!                                one-off solve on a generated system;
+//!                                --residual stops on ‖Ax-b‖² instead of
+//!                                the reference error
 //!   info                         version, core count, artifact status
 
 use kaczmarz::cli::Args;
@@ -105,9 +108,18 @@ fn cmd_solve(args: &Args) {
             .expect("CGLS failed");
     }
 
-    let opts = SolveOptions::default()
+    // --residual stops on ‖Ax - b‖² (the reference-free serving criterion,
+    // checked every --check-every iterations); default is the paper's
+    // reference-error rule.
+    let mut opts = SolveOptions::default()
         .with_tolerance(args.get_parse("tolerance", 1e-8))
         .with_max_iterations(args.get_parse("max-iterations", 100_000_000));
+    if args.has("residual") {
+        opts = opts.with_residual_stopping(
+            args.get_parse("tolerance", 1e-8),
+            args.get_parse("check-every", 32usize),
+        );
+    }
 
     let r = match method.as_str() {
         "ck" => CkSolver::new().solve(&sys, &opts),

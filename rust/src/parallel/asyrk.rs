@@ -18,7 +18,7 @@ use super::shared::AtomicF64Vec;
 use crate::data::LinearSystem;
 use crate::metrics::{History, Stopwatch};
 use crate::rng::{derive_seed, Mt19937};
-use crate::solvers::{SolveOptions, SolveResult, Solver};
+use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Lock-free asynchronous RK (HOGWILD! scheme).
@@ -69,12 +69,14 @@ impl Solver for AsyRkSolver {
         // Workers still in their HOGWILD loop; when this hits zero nothing
         // can ever update x again, so the monitor must not keep waiting.
         let live_workers = AtomicUsize::new(q);
-        let initial_err = system.error_sq(&vec![0.0; n]);
 
-        // Monitor cadence: check convergence every `check_every` global
-        // updates (the async loop has no natural iteration boundary).
-        let check_every = (q * 32).max(64);
+        // Monitor cadence: poll for convergence every `poll_every` global
+        // updates (the async loop has no natural iteration boundary, so the
+        // criterion's own `check_every` does not apply — the monitor's
+        // polling backoff plays that role here).
+        let poll_every = (q * 32).max(64);
         let budget = opts.fixed_iterations.unwrap_or(opts.max_iterations);
+        let timed = opts.fixed_iterations.is_some();
 
         // One pool dispatch with q + 1 participants: participant 0 (the
         // calling thread) is the monitor, participants 1..=q run the
@@ -86,29 +88,50 @@ impl Solver for AsyRkSolver {
             if part == 0 {
                 // Monitor: stopping test + history, then release the workers.
                 let mut history = History::every(opts.history_step);
+                let mut stopper = StopCheck::new(system, opts);
                 let mut converged = false;
                 let mut diverged = false;
                 let mut xbuf = vec![0.0; n];
+                if !timed {
+                    // Pin the divergence baseline at the true x^(0) = 0
+                    // (xbuf is still zeroed — deliberately NOT a snapshot:
+                    // the HOGWILD workers are already mutating x, and a racy
+                    // first snapshot would make the baseline, and thus the
+                    // divergence threshold, scheduling-dependent).
+                    let (c, d) = stopper.check_now(&xbuf);
+                    converged = c;
+                    diverged = d;
+                }
                 let mut last_recorded = usize::MAX;
-                loop {
+                while !converged && !diverged {
                     let done = total_updates.load(Ordering::Relaxed);
-                    x.snapshot_into(&mut xbuf);
-                    let err = system.error_sq(&xbuf);
                     let tick = if history.step > 0 { done / history.step } else { 0 };
-                    if history.step > 0 && tick != last_recorded {
+                    let record = history.step > 0 && tick != last_recorded;
+                    // Timed runs without history never materialize the
+                    // iterate (nor any metric): the budget is the only stop.
+                    if !timed || record {
+                        x.snapshot_into(&mut xbuf);
+                    }
+                    if record {
                         last_recorded = tick;
-                        history.record(done, err.sqrt(), system.residual_norm(&xbuf));
+                        history.record(
+                            done,
+                            system.error_sq(&xbuf).sqrt(),
+                            system.residual_norm(&xbuf),
+                        );
                     }
-                    if opts.fixed_iterations.is_none() && err < opts.tolerance {
-                        converged = true;
-                        break;
-                    }
-                    if err > initial_err * opts.divergence_factor && initial_err > 0.0 {
-                        diverged = true;
-                        break;
+                    if !timed {
+                        let (c, d) = stopper.check_now(&xbuf);
+                        if c || d {
+                            converged = c;
+                            diverged = d;
+                            break;
+                        }
                     }
                     if done >= budget {
-                        converged = opts.fixed_iterations.is_some();
+                        // Budget exhausted: nothing was measured in timed
+                        // runs, the tolerance was missed in criterion runs —
+                        // either way, not converged.
                         break;
                     }
                     if live_workers.load(Ordering::Relaxed) == 0 {
@@ -118,7 +141,7 @@ impl Solver for AsyRkSolver {
                         break;
                     }
                     // Light backoff so the monitor does not saturate a core.
-                    for _ in 0..check_every {
+                    for _ in 0..poll_every {
                         std::hint::spin_loop();
                     }
                 }

@@ -16,7 +16,7 @@ use crate::data::LinearSystem;
 use crate::linalg::vector::dot;
 use crate::metrics::{History, Stopwatch};
 use crate::rng::{AliasTable, Mt19937};
-use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
+use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// Block-sequential RK (every iteration's dot/update parallelized).
@@ -80,15 +80,12 @@ impl Solver for BlockSequentialRk {
             converged: AtomicBool::new(false),
             diverged: AtomicBool::new(false),
         };
-        let initial_err = system.error_sq(&vec![0.0; n]);
-        let timed = opts.fixed_iterations.is_some();
-
         // One dispatch on the persistent pool = one parallel region.
         let sw = Stopwatch::start();
         let report = std::sync::Mutex::new(None);
         let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
         pool.run(q, |t| {
-            let out = self.worker(t, system, opts, &region, initial_err, timed);
+            let out = self.worker(t, system, opts, &region);
             if let Some(out) = out {
                 *report.lock().unwrap() = Some(out);
             }
@@ -116,14 +113,14 @@ impl BlockSequentialRk {
         system: &LinearSystem,
         opts: &SolveOptions,
         region: &Region,
-        initial_err: f64,
-        timed: bool,
     ) -> Option<(History, usize)> {
         let q = self.threads;
         // Row sampling is *shared* (one RK chain): thread 0 draws, publishes.
         let mut rng = Mt19937::new(self.seed);
         let dist = if t == 0 { Some(AliasTable::new(system.sampling_weights())) } else { None };
         let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
+        // Stopping state lives with the thread that decides (thread 0).
+        let mut stopper = (t == 0).then(|| StopCheck::new(system, opts));
         let mut k = 0usize;
         let (lo, hi) = region.x.chunk(t, q);
 
@@ -132,11 +129,11 @@ impl BlockSequentialRk {
             if t == 0 {
                 // SAFETY: all writers passed barrier (A); x is stable.
                 let x = unsafe { region.x.as_ref_unchecked() };
-                let err = if !timed || history.due(k) { system.error_sq(x) } else { f64::NAN };
+                let stopper = stopper.as_mut().expect("thread 0 owns the stopper");
                 if history.due(k) {
-                    history.record(k, err.sqrt(), system.residual_norm(x));
+                    history.record(k, system.error_sq(x).sqrt(), system.residual_norm(x));
                 }
-                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                let (stop, c, d) = stopper.check(k, x);
                 region.converged.store(c, Ordering::SeqCst);
                 region.diverged.store(d, Ordering::SeqCst);
                 region.stop.store(stop, Ordering::SeqCst);

@@ -28,7 +28,7 @@ use crate::linalg::vector::dot;
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::rka::Weights;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
-use crate::solvers::{stop_check, SolveOptions, SolveResult, Solver};
+use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
@@ -141,16 +141,13 @@ impl Solver for ParallelRka {
             converged: AtomicBool::new(false),
             diverged: AtomicBool::new(false),
         };
-        let initial_err = system.error_sq(&vec![0.0; n]);
-        let timed = opts.fixed_iterations.is_some();
-
         // One dispatch on the persistent pool = one parallel region; the
         // caller is participant 0 (the paper's "master" thread).
         let sw = Stopwatch::start();
         let report = Mutex::new(None);
         let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
         pool.run(q, |t| {
-            let out = self.worker(t, system, opts, &region, &self.weights, initial_err, timed);
+            let out = self.worker(t, system, opts, &region, &self.weights);
             if let Some(out) = out {
                 *report.lock().unwrap() = Some(out);
             }
@@ -174,7 +171,6 @@ impl Solver for ParallelRka {
 impl ParallelRka {
     /// Body run by every thread of the parallel region. Thread 0 returns the
     /// recorded history and iteration count.
-    #[allow(clippy::too_many_arguments)]
     fn worker(
         &self,
         t: usize,
@@ -182,13 +178,13 @@ impl ParallelRka {
         opts: &SolveOptions,
         region: &Region,
         weights: &Weights,
-        initial_err: f64,
-        timed: bool,
     ) -> Option<(History, usize)> {
         let n = system.cols();
         let q = self.q;
         let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
         let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
+        // Stopping state lives with the thread that decides (thread 0).
+        let mut stopper = (t == 0).then(|| StopCheck::new(system, opts));
         // Private buffers (allocated once, reused every iteration).
         let mut local = vec![0.0; n];
         let mut err_buf = vec![0.0; n];
@@ -198,17 +194,22 @@ impl ParallelRka {
             // (A) previous iteration's gather is complete.
             region.barrier.wait();
             if t == 0 {
-                // Stopping test + history, off the clock in timed runs.
-                let err = if !timed || history.due(k) {
+                // Stopping test + history; the iterate is only snapshotted
+                // on iterations where something will actually read it (off
+                // the clock in timed runs, off the hot path between
+                // residual checkpoints).
+                let stopper = stopper.as_mut().expect("thread 0 owns the stopper");
+                if stopper.evaluates_at(k) || history.due(k) {
                     region.x.snapshot_into(&mut err_buf);
-                    system.error_sq(&err_buf)
-                } else {
-                    f64::NAN
-                };
-                if history.due(k) {
-                    history.record(k, err.sqrt(), system.residual_norm(&err_buf));
                 }
-                let (stop, c, d) = stop_check(opts, k, err, initial_err);
+                if history.due(k) {
+                    history.record(
+                        k,
+                        system.error_sq(&err_buf).sqrt(),
+                        system.residual_norm(&err_buf),
+                    );
+                }
+                let (stop, c, d) = stopper.check(k, &err_buf);
                 region.converged.store(c, Ordering::SeqCst);
                 region.diverged.store(d, Ordering::SeqCst);
                 region.stop.store(stop, Ordering::SeqCst);

@@ -17,7 +17,7 @@ use crate::data::LinearSystem;
 use crate::error::Result;
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
-use crate::solvers::{stop_check, SolveOptions, SolveResult};
+use crate::solvers::{SolveOptions, SolveResult, StopCheck};
 use std::cell::RefCell;
 use std::path::Path;
 
@@ -79,8 +79,7 @@ impl PjrtRkabSolver {
             .map(|t| RowSampler::new(system, SamplingScheme::FullMatrix, t, q, self.seed))
             .collect();
         let mut history = History::every(opts.history_step);
-        let initial_err = system.error_sq(&x);
-        let timed = opts.fixed_iterations.is_some();
+        let mut stopper = StopCheck::new(system, opts);
         let mut engine = self.engine.borrow_mut();
 
         // Gather buffers (reused across iterations).
@@ -93,11 +92,10 @@ impl PjrtRkabSolver {
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
             if history.due(k) {
-                history.record(k, err.sqrt(), system.residual_norm(&x));
+                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
             }
-            let (stop, c, d) = stop_check(opts, k, err, initial_err);
+            let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
             if stop {

@@ -23,30 +23,83 @@ pub mod sampling;
 pub use sampling::{RowSampler, SamplingScheme};
 
 use crate::data::LinearSystem;
+use crate::linalg::gemv_block_into;
+use crate::linalg::vector::dist_sq;
 use crate::metrics::History;
+
+/// What quantity the convergence test measures, and against what bound.
+///
+/// The paper stops on `‖x^(k) - x*‖² < ε`, which needs a *reference
+/// solution* — fine for reproduction experiments (the generator always
+/// knows `x*`), useless for serving, where the answer is exactly what is
+/// being computed. Moorman et al. (arXiv:2002.04126) analyze RKA through
+/// the residual for this reason, and Liu–Wright–Sridhar (arXiv:1401.4780)
+/// stop their asynchronous solver on residual-style criteria; the
+/// [`StoppingCriterion::Residual`] variant brings that here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StoppingCriterion {
+    /// Stop when `‖x^(k) - x_ref‖² < tolerance` (paper §3.5, ε = 1e-8).
+    /// Requires the system to carry a reference solution
+    /// ([`LinearSystem::reference_solution`]); evaluated every iteration.
+    ReferenceError {
+        /// Squared-error bound `ε`.
+        tolerance: f64,
+    },
+    /// Stop when `‖A x^(k) - b‖² < tolerance` — computable for any system,
+    /// no reference needed. The test costs a full `O(m·n)` mat-vec (run
+    /// through [`gemv_block_into`]), so it is evaluated only every
+    /// `check_every` iterations to stay off the hot path; on a consistent
+    /// system any positive tolerance is achievable, on an inconsistent one
+    /// only tolerances above the least-squares floor `‖A x_LS - b‖²` are.
+    Residual {
+        /// Squared-residual bound.
+        tolerance: f64,
+        /// Evaluate the (expensive) residual test every this many
+        /// iterations; 1 = every iteration. Must be >= 1.
+        check_every: usize,
+    },
+}
+
+impl StoppingCriterion {
+    /// The tolerance bound, whichever quantity it applies to.
+    #[inline]
+    pub fn tolerance(&self) -> f64 {
+        match *self {
+            StoppingCriterion::ReferenceError { tolerance } => tolerance,
+            StoppingCriterion::Residual { tolerance, .. } => tolerance,
+        }
+    }
+}
 
 /// Convergence / iteration-budget options shared by every solver.
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
-    /// Stop when `‖x^(k) - x_ref‖² < tolerance` (paper: ε = 1e-8).
-    pub tolerance: f64,
+    /// Convergence test: reference error (paper default) or residual.
+    pub stopping: StoppingCriterion,
     /// Hard iteration cap.
     pub max_iterations: usize,
-    /// When `Some(k)`, ignore the tolerance and run exactly `k` iterations —
-    /// the paper's timing protocol (calibrate iterations first, then time a
-    /// fixed-iteration run so the stopping test is off the clock).
+    /// When `Some(k)`, ignore the stopping criterion and run exactly `k`
+    /// iterations — the paper's timing protocol (calibrate iterations
+    /// first, then time a fixed-iteration run so the stopping test is off
+    /// the clock). Such runs evaluate *no* convergence metric at all (the
+    /// initial error is lazy), so they work on systems without a reference
+    /// solution — and they report `converged = false`, because nothing was
+    /// measured.
     pub fixed_iterations: Option<usize>,
     /// Record error/residual every `history_step` iterations (0 = off).
+    /// Recording measures against the reference solution, so it requires
+    /// one even under residual stopping.
     pub history_step: usize,
-    /// Declare divergence when the error exceeds `divergence_factor` x the
-    /// initial error (used by the Fig. 10 α sweep, where RKAB can diverge).
+    /// Declare divergence when the stopping metric exceeds
+    /// `divergence_factor` x its initial value (used by the Fig. 10 α
+    /// sweep, where RKAB can diverge).
     pub divergence_factor: f64,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
         SolveOptions {
-            tolerance: 1e-8,
+            stopping: StoppingCriterion::ReferenceError { tolerance: 1e-8 },
             max_iterations: 10_000_000,
             fixed_iterations: None,
             history_step: 0,
@@ -56,10 +109,30 @@ impl Default for SolveOptions {
 }
 
 impl SolveOptions {
-    /// Set the squared-error tolerance.
+    /// Set the stopping tolerance, keeping the current criterion kind.
     pub fn with_tolerance(mut self, tol: f64) -> Self {
-        self.tolerance = tol;
+        self.stopping = match self.stopping {
+            StoppingCriterion::ReferenceError { .. } => {
+                StoppingCriterion::ReferenceError { tolerance: tol }
+            }
+            StoppingCriterion::Residual { check_every, .. } => {
+                StoppingCriterion::Residual { tolerance: tol, check_every }
+            }
+        };
         self
+    }
+
+    /// Stop on the squared residual `‖Ax - b‖² < tol`, evaluated every
+    /// `check_every` iterations (the reference-free serving criterion).
+    pub fn with_residual_stopping(mut self, tol: f64, check_every: usize) -> Self {
+        assert!(check_every >= 1, "check_every must be >= 1");
+        self.stopping = StoppingCriterion::Residual { tolerance: tol, check_every };
+        self
+    }
+
+    /// The stopping tolerance (whichever criterion is active).
+    pub fn tolerance(&self) -> f64 {
+        self.stopping.tolerance()
     }
 
     /// Set the iteration cap.
@@ -79,6 +152,22 @@ impl SolveOptions {
         self.history_step = step;
         self
     }
+
+    /// Would a solve under these options consult the system's reference
+    /// solution? True when the convergence test measures against it
+    /// (reference-error stopping outside the fixed-iteration protocol) or
+    /// when history recording is on (histories store `‖x - x_ref‖`).
+    /// Residual-stopped, history-free runs — and *all* fixed-iteration,
+    /// history-free runs — never touch the reference, so they are valid on
+    /// systems that do not carry one. The batch layer validates jobs
+    /// against this predicate so the two can never drift.
+    pub fn consults_reference(&self) -> bool {
+        if self.history_step != 0 {
+            return true;
+        }
+        self.fixed_iterations.is_none()
+            && matches!(self.stopping, StoppingCriterion::ReferenceError { .. })
+    }
 }
 
 /// Outcome of a solve.
@@ -88,8 +177,11 @@ pub struct SolveResult {
     pub x: Vec<f64>,
     /// Iterations executed.
     pub iterations: usize,
-    /// Whether the tolerance was met (always true for fixed-iteration runs
-    /// that were calibrated to converge).
+    /// Whether the stopping criterion was met. Fixed-iteration runs never
+    /// evaluate the criterion, so they always report `false` — the budget
+    /// was spent as requested, nothing was measured. For a quality signal
+    /// on such runs use residual stopping, or inspect the residual of the
+    /// returned iterate.
     pub converged: bool,
     /// Whether divergence was detected.
     pub diverged: bool,
@@ -110,56 +202,220 @@ pub trait Solver {
     fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult;
 }
 
-/// Shared inner-loop helper: should we stop at iteration `k` with squared
-/// error `err_sq`? Returns `(stop, converged, diverged)`.
-#[inline]
-pub(crate) fn stop_check(
-    opts: &SolveOptions,
-    k: usize,
-    err_sq: f64,
-    initial_err_sq: f64,
-) -> (bool, bool, bool) {
-    if let Some(fixed) = opts.fixed_iterations {
-        return (k >= fixed, true, false);
+/// Shared stopping-test state for every solver inner loop.
+///
+/// One `StopCheck` lives per solve (per rank 0 / participant 0 in the
+/// parallel and distributed engines) and owns everything the convergence
+/// decision needs:
+///
+/// - the **lazy initial metric** — the divergence test compares against the
+///   metric's value at `x^(0)`, but that value is only computed on the
+///   *first evaluation*, so fixed-iteration runs (which never evaluate)
+///   never touch the reference solution at all. This is what lets the batch
+///   layer run reference-free jobs without patching in a dummy `x_ref`;
+/// - the **residual scratch** — residual stopping needs `A x` (length `m`),
+///   computed through [`gemv_block_into`] into a buffer allocated once per
+///   solve, never per check.
+///
+/// Under [`StoppingCriterion::ReferenceError`] the decision sequence —
+/// metric every iteration, tolerance then divergence then budget — is
+/// exactly the pre-`StopCheck` behavior, bit for bit.
+pub(crate) struct StopCheck<'a> {
+    system: &'a LinearSystem,
+    opts: &'a SolveOptions,
+    /// Metric value at the first evaluation (the `x = 0` state), lazily
+    /// filled; the divergence reference.
+    initial: Option<f64>,
+    /// `A x` scratch for the residual criterion (empty under
+    /// reference-error stopping).
+    ax: Vec<f64>,
+}
+
+impl<'a> StopCheck<'a> {
+    pub(crate) fn new(system: &'a LinearSystem, opts: &'a SolveOptions) -> Self {
+        let ax = match opts.stopping {
+            StoppingCriterion::Residual { .. } if opts.fixed_iterations.is_none() => {
+                vec![0.0; system.rows()]
+            }
+            _ => Vec::new(),
+        };
+        StopCheck { system, opts, initial: None, ax }
     }
-    if err_sq < opts.tolerance {
-        return (true, true, false);
+
+    /// Will [`StopCheck::check`] at iteration `k` evaluate the convergence
+    /// metric (and therefore read the iterate)? False for every `k` in
+    /// fixed-iteration runs; false between residual checkpoints. Callers
+    /// that must *materialize* the iterate before checking (the shared-
+    /// memory engines snapshot atomics into a buffer) use this to skip the
+    /// snapshot on iterations where `check` would not look at it.
+    #[inline]
+    pub(crate) fn evaluates_at(&self, k: usize) -> bool {
+        if self.opts.fixed_iterations.is_some() {
+            return false;
+        }
+        match self.opts.stopping {
+            StoppingCriterion::ReferenceError { .. } => true,
+            StoppingCriterion::Residual { check_every, .. } => k % check_every == 0,
+        }
     }
-    if err_sq > initial_err_sq * opts.divergence_factor && initial_err_sq > 0.0 {
-        return (true, false, true);
+
+    /// The squared stopping metric for iterate `x`.
+    fn metric(&mut self, x: &[f64]) -> f64 {
+        match self.opts.stopping {
+            StoppingCriterion::ReferenceError { .. } => self.system.error_sq(x),
+            StoppingCriterion::Residual { .. } => {
+                gemv_block_into(&self.system.a, x, &mut self.ax);
+                dist_sq(&self.ax, &self.system.b)
+            }
+        }
     }
-    (k >= opts.max_iterations, false, false)
+
+    /// Full stopping decision at iteration `k`: `(stop, converged,
+    /// diverged)`. `x` is only read when [`StopCheck::evaluates_at`]`(k)`
+    /// is true, so callers may pass a stale buffer on other iterations.
+    pub(crate) fn check(&mut self, k: usize, x: &[f64]) -> (bool, bool, bool) {
+        if let Some(fixed) = self.opts.fixed_iterations {
+            return (k >= fixed, false, false);
+        }
+        if self.evaluates_at(k) {
+            let (converged, diverged) = self.check_now(x);
+            if converged || diverged {
+                return (true, converged, diverged);
+            }
+        }
+        (k >= self.opts.max_iterations, false, false)
+    }
+
+    /// Cadence-free convergence/divergence test: `(converged, diverged)`.
+    /// The single copy of the decision sequence — tolerance, then
+    /// divergence — that [`StopCheck::check`] runs on its cadence and the
+    /// AsyRK monitor (which has no iteration boundary to hang `check_every`
+    /// off of, and handles the budget itself) runs per poll.
+    pub(crate) fn check_now(&mut self, x: &[f64]) -> (bool, bool) {
+        let m = self.metric(x);
+        let initial = *self.initial.get_or_insert(m);
+        if m < self.opts.tolerance() {
+            return (true, false);
+        }
+        // A non-finite metric is divergence: between residual checkpoints
+        // the iterate can blow straight past inf into NaN, and NaN compares
+        // false against every threshold — without this test such a run
+        // would spin out its whole iteration budget unflagged.
+        if !m.is_finite() || (m > initial * self.opts.divergence_factor && initial > 0.0) {
+            return (false, true);
+        }
+        (false, false)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
+
+    /// 2x2 identity system with `x* = [3, 4]`: error_sq(x) and
+    /// residual_sq(x) are both `‖x - [3,4]‖²`, which makes the two
+    /// criteria directly comparable in these unit tests.
+    fn identity_system() -> LinearSystem {
+        let a = Matrix::identity(2);
+        LinearSystem::new(a, vec![3.0, 4.0], Some(vec![3.0, 4.0]), true)
+    }
 
     #[test]
-    fn stop_check_fixed_iterations_overrides_tolerance() {
+    fn fixed_iterations_stop_at_budget_without_converging() {
+        let sys = identity_system();
         let opts = SolveOptions::default().with_fixed_iterations(10);
-        // not done yet even though error tiny
-        assert_eq!(stop_check(&opts, 5, 0.0, 1.0), (false, true, false));
-        assert_eq!(stop_check(&opts, 10, 1e9, 1.0), (true, true, false));
+        let mut sc = StopCheck::new(&sys, &opts);
+        // Not done yet, even at the exact solution (nothing is measured).
+        assert_eq!(sc.check(5, &[3.0, 4.0]), (false, false, false));
+        // At budget: stop, but converged stays false — nothing was measured.
+        assert_eq!(sc.check(10, &[0.0, 0.0]), (true, false, false));
+        // The metric (and thus the reference) was never touched.
+        assert!(sc.initial.is_none());
     }
 
     #[test]
-    fn stop_check_tolerance() {
+    fn reference_error_tolerance_decision() {
+        let sys = identity_system();
         let opts = SolveOptions::default().with_tolerance(1e-4);
-        assert_eq!(stop_check(&opts, 3, 1e-5, 1.0), (true, true, false));
-        assert_eq!(stop_check(&opts, 3, 1e-3, 1.0), (false, false, false));
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert!(sc.evaluates_at(0) && sc.evaluates_at(1));
+        assert_eq!(sc.check(3, &[0.0, 0.0]), (false, false, false));
+        assert_eq!(sc.check(4, &[3.0, 4.000001]), (true, true, false));
     }
 
     #[test]
-    fn stop_check_divergence() {
+    fn residual_tolerance_respects_check_every() {
+        let sys = identity_system();
+        let opts = SolveOptions::default().with_residual_stopping(1e-4, 8);
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert!(sc.evaluates_at(0));
+        assert!(!sc.evaluates_at(3));
+        assert!(sc.evaluates_at(16));
+        // Prime the initial metric at x = 0.
+        assert_eq!(sc.check(0, &[0.0, 0.0]), (false, false, false));
+        // Off-cadence: converged iterate is NOT noticed.
+        assert_eq!(sc.check(3, &[3.0, 4.0]), (false, false, false));
+        // On-cadence: it is.
+        assert_eq!(sc.check(8, &[3.0, 4.0]), (true, true, false));
+    }
+
+    #[test]
+    fn divergence_measured_against_lazy_initial_metric() {
+        let sys = identity_system();
         let opts = SolveOptions { divergence_factor: 10.0, ..Default::default() };
-        let (stop, conv, div) = stop_check(&opts, 3, 100.0, 1.0);
+        let mut sc = StopCheck::new(&sys, &opts);
+        // First evaluation pins the initial metric: ‖0 - [3,4]‖² = 25.
+        assert_eq!(sc.check(0, &[0.0, 0.0]), (false, false, false));
+        assert_eq!(sc.initial, Some(25.0));
+        // 10x the initial error => diverged.
+        let far = [3.0 + 100.0, 4.0];
+        let (stop, conv, div) = sc.check(3, &far);
         assert!(stop && !conv && div);
     }
 
     #[test]
-    fn stop_check_budget() {
+    fn iteration_cap_stops_unconverged() {
+        let sys = identity_system();
         let opts = SolveOptions::default().with_max_iterations(100);
-        assert_eq!(stop_check(&opts, 100, 1.0, 1.0), (true, false, false));
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert_eq!(sc.check(100, &[0.0, 0.0]), (true, false, false));
+    }
+
+    #[test]
+    fn residual_and_reference_agree_on_identity_system() {
+        // On the identity system the two metrics coincide, so the two
+        // criteria must make identical decisions at equal tolerances.
+        let sys = identity_system();
+        let ref_opts = SolveOptions::default().with_tolerance(1e-4);
+        let res_opts = SolveOptions::default().with_residual_stopping(1e-4, 1);
+        for x in [[0.0, 0.0], [3.0, 4.01], [3.0, 4.0]] {
+            let mut a = StopCheck::new(&sys, &ref_opts);
+            let mut b = StopCheck::new(&sys, &res_opts);
+            assert_eq!(a.check(1, &x), b.check(1, &x), "at {x:?}");
+        }
+    }
+
+    #[test]
+    fn consults_reference_predicate() {
+        let reference = SolveOptions::default();
+        assert!(reference.consults_reference());
+        let fixed = SolveOptions::default().with_fixed_iterations(10);
+        assert!(!fixed.consults_reference());
+        let fixed_history = SolveOptions::default().with_fixed_iterations(10).with_history_step(2);
+        assert!(fixed_history.consults_reference());
+        let residual = SolveOptions::default().with_residual_stopping(1e-8, 32);
+        assert!(!residual.consults_reference());
+        let residual_history = residual.with_history_step(5);
+        assert!(residual_history.consults_reference());
+    }
+
+    #[test]
+    fn with_tolerance_keeps_criterion_kind() {
+        let o = SolveOptions::default().with_residual_stopping(1e-2, 16).with_tolerance(1e-6);
+        assert_eq!(o.stopping, StoppingCriterion::Residual { tolerance: 1e-6, check_every: 16 });
+        assert_eq!(o.tolerance(), 1e-6);
+        let o = SolveOptions::default().with_tolerance(1e-3);
+        assert_eq!(o.stopping, StoppingCriterion::ReferenceError { tolerance: 1e-3 });
     }
 }

@@ -14,7 +14,7 @@
 //! With `q = 1` this is exactly RK.
 
 use super::sampling::{RowSampler, SamplingScheme};
-use super::{stop_check, SolveOptions, SolveResult, Solver};
+use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::{axpy, dot};
 use crate::metrics::{History, Stopwatch};
@@ -102,18 +102,16 @@ impl Solver for RkaSolver {
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
         let mut history = History::every(opts.history_step);
-        let initial_err = system.error_sq(&x);
-        let timed = opts.fixed_iterations.is_some();
+        let mut stopper = StopCheck::new(system, opts);
 
         let sw = Stopwatch::start();
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            let err = if !timed || history.due(k) { system.error_sq(&x) } else { f64::NAN };
             if history.due(k) {
-                history.record(k, err.sqrt(), system.residual_norm(&x));
+                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
             }
-            let (stop, c, d) = stop_check(opts, k, err, initial_err);
+            let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
             if stop {

@@ -5,11 +5,13 @@
 
 use kaczmarz::batch::{BatchJob, BatchSolver, SolveQueue};
 use kaczmarz::data::{DatasetBuilder, LinearSystem};
-use kaczmarz::linalg::gemv;
+use kaczmarz::linalg::{gemv, Matrix};
+use kaczmarz::metrics::History;
 use kaczmarz::parallel::WorkerPool;
 use kaczmarz::solvers::rk::RkSolver;
 use kaczmarz::solvers::rkab::RkabSolver;
-use kaczmarz::solvers::{SolveOptions, Solver};
+use kaczmarz::solvers::{SolveOptions, SolveResult, Solver};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// `count` right-hand sides `b_j = A x_j` with known solutions.
@@ -149,6 +151,70 @@ fn batch_layer_reuses_pool_workers_across_calls() {
     }
     queue.run(&RkSolver::new(1)).unwrap();
     assert_eq!(pool.worker_count(), 3, "queue shares the same parked workers");
+}
+
+/// A `Solver` that counts how many of the systems handed to it hold
+/// pointer-identical matrix storage with a designated original
+/// (`Matrix::shares_storage`, i.e. `Arc::ptr_eq` on the row buffer).
+struct StorageProbe {
+    original: Matrix,
+    shared: Arc<AtomicUsize>,
+    solves: Arc<AtomicUsize>,
+}
+
+impl Solver for StorageProbe {
+    fn name(&self) -> &'static str {
+        "storage-probe"
+    }
+    fn solve(&self, system: &LinearSystem, _opts: &SolveOptions) -> SolveResult {
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        if system.a.shares_storage(&self.original) {
+            self.shared.fetch_add(1, Ordering::Relaxed);
+        }
+        SolveResult {
+            x: vec![0.0; system.cols()],
+            iterations: 0,
+            converged: false,
+            diverged: false,
+            seconds: 0.0,
+            rows_used: 0,
+            history: History::default(),
+        }
+    }
+}
+
+#[test]
+fn sixteen_lanes_share_one_resident_matrix() {
+    // The memory bar of the serving layer: a 16-lane batch over a resident
+    // system holds ONE matrix buffer, not sixteen. Every lane's
+    // `LinearSystem` clone must observe pointer-equal row storage with the
+    // resident original — lanes only duplicate the O(m) rhs/row-norm
+    // vectors, so resident-matrix memory is O(m·n), independent of lanes.
+    let system = DatasetBuilder::new(200, 10).seed(11).consistent();
+    assert!(
+        system.clone().a.shares_storage(&system.a),
+        "cloning a system must not duplicate matrix storage"
+    );
+
+    let shared = Arc::new(AtomicUsize::new(0));
+    let solves = Arc::new(AtomicUsize::new(0));
+    let probe = StorageProbe {
+        original: system.a.clone(), // Arc bump, same buffer
+        shared: Arc::clone(&shared),
+        solves: Arc::clone(&solves),
+    };
+    let jobs = make_jobs(&system, 16, 43);
+    let opts = SolveOptions::default().with_fixed_iterations(1);
+    BatchSolver::new(&system, probe)
+        .with_workers(16)
+        .solve_many(&jobs, &opts)
+        .unwrap();
+    assert_eq!(solves.load(Ordering::Relaxed), 16);
+    assert_eq!(
+        shared.load(Ordering::Relaxed),
+        16,
+        "every lane must read the one resident matrix"
+    );
 }
 
 #[test]
