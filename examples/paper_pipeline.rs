@@ -134,19 +134,23 @@ fn main() {
     // ---- 6. Headline metric: the Table-2 comparison. ----
     println!("[6/7] headline: RKAB vs RKA vs alpha* cost (modeled times)...");
     let model = CostModel::calibrate(&sys);
-    let rk_cal = calibrate_iterations(RkSolver::new, &sys, &opts, 3);
+    let rk_cal = calibrate_iterations(RkSolver::new, &sys, &opts, 3)
+        .expect("RK converges on consistent systems");
     let rk_time = rk_cal.mean_iterations * model.rk_iteration();
     let mut t = Table::new(
         format!("Headline (q = 8, bs = n; sequential RK = {})", fmt_seconds(rk_time)),
         &["method", "iterations", "modeled time", "+ alpha* cost"],
     );
     let q = 8usize;
-    let rkab_cal = calibrate_iterations(|s| RkabSolver::new(s, q, n, 1.0), &sys, &opts, 3);
+    let rkab_cal = calibrate_iterations(|s| RkabSolver::new(s, q, n, 1.0), &sys, &opts, 3)
+        .expect("RKAB(a=1) converges on consistent systems");
     let rkab_time = rkab_cal.mean_iterations * model.rkab_iteration(q, n);
-    let rka1_cal = calibrate_iterations(|s| RkaSolver::new(s, q, 1.0), &sys, &opts, 3);
+    let rka1_cal = calibrate_iterations(|s| RkaSolver::new(s, q, 1.0), &sys, &opts, 3)
+        .expect("RKA(a=1) converges on consistent systems");
     let rka1_time = rka1_cal.mean_iterations * model.rka_iteration(q, AveragingStrategy::Critical);
     let (astar, astar_cost) = full_matrix_alpha(&sys, q).expect("alpha*");
-    let rkao_cal = calibrate_iterations(|s| RkaSolver::new(s, q, astar), &sys, &opts, 3);
+    let rkao_cal = calibrate_iterations(|s| RkaSolver::new(s, q, astar), &sys, &opts, 3)
+        .expect("RKA(a*) converges on consistent systems");
     let rkao_time = rkao_cal.mean_iterations * model.rka_iteration(q, AveragingStrategy::Critical);
     t.row(vec![
         "RKAB (a=1)".into(),

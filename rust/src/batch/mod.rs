@@ -46,6 +46,11 @@
 //! patching, no per-job system clone (`tests/stopping_properties.rs` pins
 //! this down).
 //!
+//! Reference-free jobs may also request **convergence curves**: histories
+//! are dual-channel ([`crate::metrics::History`]), and on a system without
+//! a reference only the residual channel `‖Ax - b‖` is recorded — see
+//! [`SolveReport::residual_history`].
+//!
 //! # Determinism guarantee
 //!
 //! A batched solve is *bitwise identical* to running the same jobs one at a
@@ -124,6 +129,20 @@ pub struct SolveReport {
     /// job's* system — the serving-meaningful quality number, available even
     /// when no reference solution is known.
     pub residual_norm: f64,
+}
+
+impl SolveReport {
+    /// The job's recorded residual convergence curve: `‖A x^(k) - b‖` every
+    /// `history_step` iterations (empty unless the job's
+    /// [`SolveOptions`](crate::solvers::SolveOptions) requested a history).
+    /// Histories are dual-channel and reference-optional, so this is
+    /// populated for reference-free serving jobs too; the matching
+    /// iteration numbers are in `result.history.iterations`, and the
+    /// reference-error channel (when the job carried one) in
+    /// `result.history.errors`.
+    pub fn residual_history(&self) -> &[f64] {
+        &self.result.history.residuals
+    }
 }
 
 /// Run `jobs` job bodies across `lanes` pool participants inside one

@@ -98,18 +98,20 @@ impl SolveQueue {
     /// Fails fast on the calling thread if a job's options would consult a
     /// reference solution its system does not carry
     /// ([`SolveOptions::consults_reference`], the same contract as
-    /// [`super::BatchSolver::solve_many`]). Every job — with or without a
-    /// reference — is solved *in place*, zero clones: solvers evaluate
-    /// their stopping metric lazily, so a reference-free job under residual
-    /// stopping or a fixed budget simply never looks for one.
+    /// [`super::BatchSolver::solve_many`]): only reference-error *stopping*
+    /// needs one. Every job — with or without a reference — is solved *in
+    /// place*, zero clones: solvers evaluate their stopping metric lazily,
+    /// so a reference-free job under residual stopping or a fixed budget
+    /// simply never looks for one — and such a job may still request a
+    /// (residual-channel) history via `history_step`.
     pub fn run<S: Solver + Sync>(&self, solver: &S) -> Result<Vec<SolveReport>> {
         for (j, (system, opts)) in self.jobs.iter().enumerate() {
             if system.reference_solution().is_none() && opts.consults_reference() {
                 return Err(Error::InvalidArgument(format!(
                     "job {j}: its system has no reference solution, so \
-                     reference-error stopping and history recording are \
-                     unavailable (stop on the residual or use fixed_iterations, \
-                     with history_step == 0)"
+                     reference-error stopping is unavailable (stop on the \
+                     residual or use fixed_iterations; histories work either \
+                     way — they degrade to the residual channel)"
                 )));
             }
         }

@@ -16,9 +16,10 @@ pub struct BatchJob {
     /// (the paper's convention: stop on `‖x - x_ref‖²`, §3.5). `None`
     /// means "answer unknown" — the normal serving case — and such jobs
     /// must run under options that never consult the reference: residual
-    /// stopping, or a fixed iteration budget, in both cases with history
-    /// recording off ([`SolveOptions::consults_reference`]);
-    /// [`BatchSolver::solve_many`] validates this up front.
+    /// stopping, or a fixed iteration budget
+    /// ([`SolveOptions::consults_reference`]); history recording is fine
+    /// either way (reference-free histories record the residual channel
+    /// only). [`BatchSolver::solve_many`] validates this up front.
     pub x_ref: Option<Vec<f64>>,
 }
 
@@ -81,10 +82,11 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
     ///
     /// Fails fast (on the calling thread, before any dispatch) on shape
     /// mismatches and on reference-free jobs whose options *would* consult
-    /// the missing reference ([`SolveOptions::consults_reference`]):
-    /// reference-error stopping and history recording both measure against
-    /// `x_ref`, so jobs without one need residual stopping or
-    /// `fixed_iterations`, with `history_step == 0`.
+    /// the missing reference ([`SolveOptions::consults_reference`]): only
+    /// reference-error *stopping* measures against `x_ref`, so jobs
+    /// without one need residual stopping or `fixed_iterations` —
+    /// `history_step` is allowed in both cases (the history simply records
+    /// its residual channel only).
     pub fn solve_many(
         &self,
         jobs: &[BatchJob],
@@ -109,8 +111,8 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
                 None if opts.consults_reference() => {
                     return Err(Error::InvalidArgument(format!(
                         "job {j} has no reference solution: reference-error stopping \
-                         and history recording need one (stop on the residual or set \
-                         fixed_iterations, with history_step == 0 — or attach x_ref)"
+                         needs one (stop on the residual, set fixed_iterations, or \
+                         attach x_ref; histories degrade to the residual channel)"
                     )));
                 }
                 _ => {}

@@ -5,12 +5,30 @@
 //! runtime using that previously calculated value as the maximum number of
 //! iterations." Runs are repeated over seeds (the paper uses 10; enough for
 //! ~1% time deviation) and iteration counts averaged.
+//!
+//! Two calibration modes:
+//!
+//! - **reference-stopped** (the paper's): pass options carrying
+//!   [`StoppingCriterion::ReferenceError`](crate::solvers::StoppingCriterion) —
+//!   requires the system to know its solution;
+//! - **residual-stopped** ([`calibrate_iterations_residual`]): calibrate
+//!   against `‖Ax - b‖² < tol`, which needs no reference — so the
+//!   calibrate-then-time protocol runs on systems with *unknown* solutions,
+//!   the serving case.
+//!
+//! A configuration where **every** seed fails to converge (e.g. the Fig. 10
+//! divergence corner) yields [`Error::CalibrationFailed`] instead of the
+//! former silent `mean_iterations = 0.0` — which turned into a zero
+//! fixed-iteration budget downstream and timed nothing at all.
 
 use crate::data::LinearSystem;
+use crate::error::{Error, Result};
 use crate::metrics::mean_std;
 use crate::solvers::{SolveOptions, SolveResult, Solver};
 
-/// Result of an iteration-count calibration.
+/// Result of an iteration-count calibration. Only produced when at least
+/// one seed converged ([`calibrate_iterations`] errors otherwise), so
+/// `mean_iterations` is always a real average.
 #[derive(Clone, Debug)]
 pub struct Calibration {
     /// Mean iterations to reach the tolerance.
@@ -25,57 +43,96 @@ pub struct Calibration {
 
 impl Calibration {
     /// Mean iterations rounded for use as a fixed budget.
+    ///
+    /// Saturating and finite-checked: a NaN or negative mean yields 0, a
+    /// mean beyond `usize::MAX` yields `usize::MAX` — never the undefined
+    /// behavior-adjacent garbage of a bare `as usize` on a non-finite
+    /// float. (With [`calibrate_iterations`] returning an error on
+    /// all-divergent configurations, a well-formed `Calibration` should
+    /// never hit these guards; they protect hand-built values.)
     pub fn iterations(&self) -> usize {
-        self.mean_iterations.round() as usize
+        let rounded = self.mean_iterations.round();
+        if !rounded.is_finite() || rounded <= 0.0 {
+            0
+        } else if rounded >= usize::MAX as f64 {
+            usize::MAX
+        } else {
+            rounded as usize
+        }
     }
 }
 
 /// Run `make_solver(seed)` for `seeds` seeds to the `opts` tolerance and
-/// average the iteration counts.
+/// average the iteration counts of the seeds that converged.
+///
+/// Returns [`Error::CalibrationFailed`] when *no* seed converges — there is
+/// no budget to average, and the old behavior (averaging an empty vector
+/// into `mean_iterations = 0.0`) handed downstream timing runs a zero
+/// fixed-iteration budget.
 pub fn calibrate_iterations<S: Solver>(
     make_solver: impl Fn(u32) -> S,
     system: &LinearSystem,
     opts: &SolveOptions,
     seeds: u32,
-) -> Calibration {
+) -> Result<Calibration> {
     assert!(seeds >= 1);
     let mut iters = Vec::with_capacity(seeds as usize);
     let mut rows = Vec::with_capacity(seeds as usize);
     let mut converged = 0u32;
+    let mut diverged = 0u32;
     for seed in 0..seeds {
         let r: SolveResult = make_solver(seed).solve(system, opts);
         if r.converged {
             converged += 1;
             iters.push(r.iterations as f64);
             rows.push(r.rows_used as f64);
+        } else if r.diverged {
+            diverged += 1;
         }
+    }
+    if converged == 0 {
+        return Err(Error::CalibrationFailed { seeds, diverged });
     }
     let (mean_iterations, std_iterations) = mean_std(&iters);
     let (mean_rows_used, _) = mean_std(&rows);
-    Calibration {
+    Ok(Calibration {
         mean_iterations,
         std_iterations,
         converged_fraction: converged as f64 / seeds as f64,
         mean_rows_used,
-    }
+    })
+}
+
+/// Residual-stopped calibration: like [`calibrate_iterations`] but against
+/// `‖Ax - b‖² < tolerance` (checked every `check_every` iterations), which
+/// needs **no reference solution** — the §3.1 calibrate-then-time protocol
+/// for systems whose answer is unknown. Everything else in `opts`
+/// (iteration cap, divergence factor, history step) is honored as given.
+pub fn calibrate_iterations_residual<S: Solver>(
+    make_solver: impl Fn(u32) -> S,
+    system: &LinearSystem,
+    opts: &SolveOptions,
+    tolerance: f64,
+    check_every: usize,
+    seeds: u32,
+) -> Result<Calibration> {
+    let opts = opts.clone().with_residual_stopping(tolerance, check_every);
+    calibrate_iterations(make_solver, system, &opts, seeds)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::DatasetBuilder;
+    use crate::linalg::Matrix;
     use crate::solvers::rk::RkSolver;
     use crate::solvers::rkab::RkabSolver;
 
     #[test]
     fn calibration_averages_over_seeds() {
         let sys = DatasetBuilder::new(300, 15).seed(1).consistent();
-        let c = calibrate_iterations(
-            RkSolver::new,
-            &sys,
-            &SolveOptions::default(),
-            4,
-        );
+        let c = calibrate_iterations(RkSolver::new, &sys, &SolveOptions::default(), 4)
+            .expect("consistent system converges");
         assert_eq!(c.converged_fraction, 1.0);
         assert!(c.mean_iterations > 100.0);
         assert!(c.iterations() > 0);
@@ -84,7 +141,7 @@ mod tests {
     }
 
     #[test]
-    fn divergers_excluded() {
+    fn all_divergent_configuration_is_an_error_not_a_zero_budget() {
         let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
         let opts = SolveOptions {
             divergence_factor: 1e4,
@@ -92,8 +149,76 @@ mod tests {
             ..Default::default()
         };
         // alpha=3.9 with large blocks diverges (Fig. 10b behaviour).
-        let c = calibrate_iterations(|s| RkabSolver::new(s, 4, 100, 3.9), &sys, &opts, 3);
-        assert_eq!(c.converged_fraction, 0.0);
-        assert_eq!(c.mean_iterations, 0.0);
+        let err = calibrate_iterations(|s| RkabSolver::new(s, 4, 100, 3.9), &sys, &opts, 3)
+            .err()
+            .expect("all seeds diverge: must be an error, not iterations() == 0");
+        match err {
+            Error::CalibrationFailed { seeds, diverged } => {
+                assert_eq!(seeds, 3);
+                assert_eq!(diverged, 3);
+            }
+            other => panic!("expected CalibrationFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn residual_mode_calibrates_without_a_reference() {
+        // The serving case: the system has no known solution at all; the
+        // paper's reference-stopped mode cannot run (error_sq would panic),
+        // the residual mode must.
+        let built = DatasetBuilder::new(300, 15).seed(3).consistent();
+        let sys = LinearSystem::new(built.a.clone(), built.b.clone(), None, true);
+        let c = calibrate_iterations_residual(
+            RkSolver::new,
+            &sys,
+            &SolveOptions::default(),
+            1e-6,
+            8,
+            4,
+        )
+        .expect("reference-free residual calibration");
+        assert_eq!(c.converged_fraction, 1.0);
+        assert!(c.iterations() > 0);
+    }
+
+    #[test]
+    fn residual_and_reference_calibration_agree_exactly_on_identity() {
+        // On the identity system the two stopping metrics coincide bit for
+        // bit (‖x - x*‖² = ‖Ix - b‖² with b = x*), so at check_every = 1
+        // the two calibrations must produce identical iteration counts.
+        let n = 24;
+        let x_star: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let sys = LinearSystem::new(Matrix::identity(n), x_star.clone(), Some(x_star), true);
+        let by_ref =
+            calibrate_iterations(RkSolver::new, &sys, &SolveOptions::default(), 3).unwrap();
+        let by_res = calibrate_iterations_residual(
+            RkSolver::new,
+            &sys,
+            &SolveOptions::default(),
+            SolveOptions::default().tolerance(),
+            1,
+            3,
+        )
+        .unwrap();
+        assert_eq!(by_ref.mean_iterations, by_res.mean_iterations);
+        assert_eq!(by_ref.std_iterations, by_res.std_iterations);
+    }
+
+    #[test]
+    fn iterations_rounding_is_saturating_and_finite_checked() {
+        let base = Calibration {
+            mean_iterations: 0.0,
+            std_iterations: 0.0,
+            converged_fraction: 0.0,
+            mean_rows_used: 0.0,
+        };
+        let with = |m: f64| Calibration { mean_iterations: m, ..base.clone() };
+        assert_eq!(with(1234.4).iterations(), 1234);
+        assert_eq!(with(0.6).iterations(), 1);
+        assert_eq!(with(f64::NAN).iterations(), 0);
+        assert_eq!(with(f64::NEG_INFINITY).iterations(), 0);
+        assert_eq!(with(-3.0).iterations(), 0);
+        assert_eq!(with(f64::INFINITY).iterations(), usize::MAX);
+        assert_eq!(with(1e30).iterations(), usize::MAX);
     }
 }

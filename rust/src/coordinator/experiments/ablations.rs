@@ -170,7 +170,8 @@ impl Experiment for AblationAutotune {
         let mut t = Table::new("Full solve to eps = 1e-8", &["bs", "iterations", "modeled time"]);
         for bs in [best, n] {
             let cal =
-                calibrate_iterations(|s| RkabSolver::new(s, q, bs, 1.0), &sys, &opts, scale.seeds);
+                calibrate_iterations(|s| RkabSolver::new(s, q, bs, 1.0), &sys, &opts, scale.seeds)
+                    .expect("RKAB(a=1) converges on consistent systems");
             t.row(vec![
                 format!("{bs}{}", if bs == best { " (tuned)" } else { " (= n)" }),
                 cal.iterations().to_string(),

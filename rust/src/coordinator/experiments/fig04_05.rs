@@ -46,7 +46,8 @@ fn run_panel(scale: Scale, optimal: bool) -> Report {
     for &m in &ms {
         let sys = DatasetBuilder::new(m, n).seed(7).consistent();
         let model = CostModel::calibrate(&sys);
-        let rk_cal = calibrate_iterations(RkSolver::new, &sys, &opts, scale.seeds);
+        let rk_cal = calibrate_iterations(RkSolver::new, &sys, &opts, scale.seeds)
+            .expect("RK converges on consistent systems");
         let rk_time = rk_cal.mean_iterations * model.rk_iteration();
 
         let mut iter_cells = vec![m.to_string(), rk_cal.iterations().to_string()];
@@ -58,7 +59,8 @@ fn run_panel(scale: Scale, optimal: bool) -> Report {
                 &sys,
                 &opts,
                 scale.seeds,
-            );
+            )
+            .expect("RKA at alpha <= alpha* converges on consistent systems");
             let time = cal.mean_iterations * model.rka_iteration(q, AveragingStrategy::Critical);
             iter_cells.push(cal.iterations().to_string());
             speed_cells.push(fmt_speedup(rk_time / time));

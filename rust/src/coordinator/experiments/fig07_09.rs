@@ -77,7 +77,8 @@ impl Experiment for Fig07 {
                     &sys,
                     &opts,
                     scale.seeds,
-                );
+                )
+                .expect("RKAB(a=1) converges on consistent systems");
                 ic.push(cal.iterations().to_string());
                 rc.push(format!("{:.0}", cal.mean_rows_used));
                 tc.push(fmt_seconds(cal.mean_iterations * model.rkab_iteration(q, bs)));
@@ -124,7 +125,8 @@ impl Experiment for Fig08 {
             let sys = DatasetBuilder::new(m, n).seed(33).consistent();
             let model = CostModel::calibrate(&sys);
             let opts = SolveOptions::default();
-            let rk = calibrate_iterations(RkSolver::new, &sys, &opts, seeds);
+            let rk = calibrate_iterations(RkSolver::new, &sys, &opts, seeds)
+                .expect("RK converges on consistent systems");
             let rk_time = rk.mean_iterations * model.rk_iteration();
 
             let headers: Vec<String> = std::iter::once("bs".to_string())
@@ -144,7 +146,8 @@ impl Experiment for Fig08 {
                         &sys,
                         &opts,
                         seeds,
-                    );
+                    )
+                    .expect("RKAB(a=1) converges on consistent systems");
                     tc.push(fmt_seconds(cal.mean_iterations * model.rkab_iteration(q, bs)));
                 }
                 t.row(tc);
@@ -193,13 +196,15 @@ impl Experiment for Fig09 {
                 &sys,
                 &opts,
                 scale.seeds,
-            );
+            )
+            .expect("RKAB(a=1) converges on consistent systems");
             let dist = calibrate_iterations(
                 |s| RkabSolver::new(s, q, bs, 1.0).with_scheme(SamplingScheme::Partitioned),
                 &sys,
                 &opts,
                 scale.seeds,
-            );
+            )
+            .expect("RKAB(a=1) converges on consistent systems");
             t.row(vec![
                 bs.to_string(),
                 full.iterations().to_string(),

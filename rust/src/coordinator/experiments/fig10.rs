@@ -54,17 +54,19 @@ impl Experiment for Fig10 {
             for &alpha in &alphas {
                 let mut cells = vec![format!("{alpha:.3}")];
                 for &bs in &block_sizes {
-                    let cal = calibrate_iterations(
+                    // The divergence corner is the point of this figure: an
+                    // all-divergent calibration is a "div" cell, not a
+                    // crash (and no longer a silent zero-iteration budget).
+                    let cell = match calibrate_iterations(
                         |s| RkabSolver::new(s, q, bs, alpha),
                         &sys,
                         &opts,
                         scale.seeds,
-                    );
-                    cells.push(if cal.converged_fraction == 0.0 {
-                        "div".to_string()
-                    } else {
-                        cal.iterations().to_string()
-                    });
+                    ) {
+                        Ok(cal) => cal.iterations().to_string(),
+                        Err(_) => "div".to_string(),
+                    };
+                    cells.push(cell);
                 }
                 t.row(cells);
             }

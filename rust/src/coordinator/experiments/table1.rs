@@ -58,6 +58,7 @@ impl Experiment for Table1 {
                     &opts,
                     scale.seeds,
                 )
+                .expect("RKA at alpha* converges on consistent systems")
                 .iterations() as i64
             };
             let base = cell(Weights::Uniform(alpha_full), SamplingScheme::FullMatrix);

@@ -19,7 +19,7 @@ pub mod experiments;
 pub mod timing;
 
 pub use autotune::{autotune_block_size, AutotuneConfig};
-pub use calibrate::{calibrate_iterations, Calibration};
+pub use calibrate::{calibrate_iterations, calibrate_iterations_residual, Calibration};
 pub use timing::CostModel;
 
 use crate::report::Report;

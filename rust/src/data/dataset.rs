@@ -100,11 +100,13 @@ impl LinearSystem {
     ///
     /// Panics if no reference solution is known (the generator always sets
     /// one). Solvers consult this lazily and only under reference-error
-    /// stopping or history recording: fixed-iteration history-free runs and
-    /// residual-stopped runs never call it, so systems *without* a
-    /// reference are solvable under those protocols — the contract
-    /// `SolveOptions::consults_reference` encodes and
-    /// `tests/stopping_properties.rs` pins down.
+    /// stopping: fixed-iteration and residual-stopped runs never call it —
+    /// history recording included, which degrades to its residual channel
+    /// when no reference exists — so systems *without* a reference are
+    /// solvable (and observable) under those protocols. This is the
+    /// contract `SolveOptions::consults_reference` encodes and
+    /// `tests/stopping_properties.rs` / `tests/observability_properties.rs`
+    /// pin down.
     pub fn error_sq(&self, x: &[f64]) -> f64 {
         let r = self.reference_solution().expect("no reference solution");
         dist_sq(x, r)

@@ -85,8 +85,8 @@ impl DistRka {
         let mut sampler =
             RowSampler::new(system, SamplingScheme::Partitioned, rank, np, self.seed);
         let mut x = vec![0.0; n];
-        let mut history = History::every(if rank == 0 { opts.history_step } else { 0 });
-        // Stopping state lives with the rank that decides (rank 0).
+        // Stopping state and history recording live with the rank that
+        // decides (rank 0).
         let mut stopper = (rank == 0).then(|| StopCheck::new(system, opts));
         let mut compute_seconds = 0.0;
         let mut k = 0usize;
@@ -103,9 +103,6 @@ impl DistRka {
             // criterion runs rank 0 broadcasts the decision.
             let mut flag = 0.0f64;
             if rank == 0 {
-                if history.due(k) {
-                    history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-                }
                 let stopper = stopper.as_mut().expect("rank 0 owns the stopper");
                 let (stop, c, d) = stopper.check(k, &x);
                 flag = if stop {
@@ -153,7 +150,7 @@ impl DistRka {
             iterations: k,
             converged,
             diverged,
-            history,
+            history: stopper.map(StopCheck::into_history).unwrap_or_default(),
             compute_seconds,
             comm_seconds: comm.comm_seconds,
         }

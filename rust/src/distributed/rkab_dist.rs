@@ -18,7 +18,7 @@ use super::comm::Communicator;
 use super::rka_dist::RankOutput;
 use crate::data::LinearSystem;
 use crate::linalg::vector::scale_in_place;
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 use crate::solvers::rkab::block_sweep;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
 use crate::solvers::{SolveOptions, StopCheck};
@@ -101,8 +101,8 @@ impl DistRkab {
             RowSampler::new(system, SamplingScheme::Partitioned, rank, np, self.seed);
         let mut x = vec![0.0; n];
         let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
-        let mut history = History::every(if rank == 0 { opts.history_step } else { 0 });
-        // Stopping state lives with the rank that decides (rank 0).
+        // Stopping state and history recording live with the rank that
+        // decides (rank 0).
         let mut stopper = (rank == 0).then(|| StopCheck::new(system, opts));
         let mut compute_seconds = 0.0;
         let mut k = 0usize;
@@ -112,9 +112,6 @@ impl DistRkab {
         loop {
             let mut flag = 0.0f64;
             if rank == 0 {
-                if history.due(k) {
-                    history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-                }
                 let stopper = stopper.as_mut().expect("rank 0 owns the stopper");
                 let (stop, c, d) = stopper.check(k, &x);
                 flag = if stop {
@@ -159,7 +156,7 @@ impl DistRkab {
             iterations: k,
             converged,
             diverged,
-            history,
+            history: stopper.map(StopCheck::into_history).unwrap_or_default(),
             compute_seconds,
             comm_seconds: comm.comm_seconds,
         }

@@ -31,6 +31,18 @@ pub enum Error {
     /// Invalid configuration or argument.
     InvalidArgument(String),
 
+    /// Iteration-count calibration (§3.1 protocol) failed: no seed reached
+    /// the stopping tolerance, so there is no iteration budget to average —
+    /// previously this silently produced `mean_iterations = 0.0` and a
+    /// zero fixed-iteration budget downstream.
+    CalibrationFailed {
+        /// Seeds attempted.
+        seeds: u32,
+        /// How many of them were flagged as diverged (the rest exhausted
+        /// their iteration cap unconverged).
+        diverged: u32,
+    },
+
     /// A row of the system has zero norm: it carries no constraint and every
     /// Kaczmarz projection against it divides by zero.
     DegenerateRow {
@@ -60,6 +72,12 @@ impl fmt::Display for Error {
                 write!(f, "solver diverged at iteration {iteration} (error {error:.3e})")
             }
             Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::CalibrationFailed { seeds, diverged } => write!(
+                f,
+                "calibration failed: 0 of {seeds} seeds converged \
+                 ({diverged} diverged, {} hit the iteration cap)",
+                seeds.saturating_sub(*diverged)
+            ),
             Error::DegenerateRow { row } => write!(
                 f,
                 "degenerate system: row {row} has zero norm (cannot be projected against)"
@@ -119,6 +137,15 @@ mod tests {
     fn error_display_degenerate_row() {
         let e = Error::DegenerateRow { row: 7 };
         assert!(e.to_string().contains("row 7"));
+    }
+
+    #[test]
+    fn error_display_calibration_failed() {
+        let e = Error::CalibrationFailed { seeds: 5, diverged: 3 };
+        let s = e.to_string();
+        assert!(s.contains("0 of 5"));
+        assert!(s.contains("3 diverged"));
+        assert!(s.contains("2 hit the iteration cap"));
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //!                                run one experiment (fig1..fig14, table1/2)
 //!   all [--scale f] [--out dir]  run the full evaluation suite
 //!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n]
-//!         [--residual [--check-every k]] ...
+//!         [--residual [--check-every k]] [--history step] ...
 //!                                one-off solve on a generated system;
 //!                                --residual stops on ‖Ax-b‖² instead of
-//!                                the reference error
+//!                                the reference error; --history records
+//!                                the convergence curve every `step`
+//!                                iterations and prints it (error and
+//!                                residual channels)
 //!   info                         version, core count, artifact status
 
 use kaczmarz::cli::Args;
@@ -88,6 +91,27 @@ fn print_result(name: &str, sys_err: f64, r: &SolveResult) {
         "{name}: iterations={} rows_used={} converged={} diverged={} time={:.3}s err^2={:.3e}",
         r.iterations, r.rows_used, r.converged, r.diverged, r.seconds, sys_err
     );
+    if !r.history.is_empty() {
+        // Dual-channel curve: the residual column is always there; the
+        // error column only when the system carried a reference solution.
+        if r.history.has_reference_channel() {
+            println!("{:>12} {:>14} {:>14}", "iteration", "||x - x_ref||", "||Ax - b||");
+            for i in 0..r.history.len() {
+                println!(
+                    "{:>12} {:>14.6e} {:>14.6e}",
+                    r.history.iterations[i], r.history.errors[i], r.history.residuals[i]
+                );
+            }
+        } else {
+            println!("{:>12} {:>14}", "iteration", "||Ax - b||");
+            for i in 0..r.history.len() {
+                println!(
+                    "{:>12} {:>14.6e}",
+                    r.history.iterations[i], r.history.residuals[i]
+                );
+            }
+        }
+    }
 }
 
 fn cmd_solve(args: &Args) {
@@ -110,10 +134,12 @@ fn cmd_solve(args: &Args) {
 
     // --residual stops on ‖Ax - b‖² (the reference-free serving criterion,
     // checked every --check-every iterations); default is the paper's
-    // reference-error rule.
+    // reference-error rule. --history records the dual-channel convergence
+    // curve every `step` iterations (works with either criterion).
     let mut opts = SolveOptions::default()
         .with_tolerance(args.get_parse("tolerance", 1e-8))
-        .with_max_iterations(args.get_parse("max-iterations", 100_000_000));
+        .with_max_iterations(args.get_parse("max-iterations", 100_000_000))
+        .with_history_step(args.get_parse("history", 0usize));
     if args.has("residual") {
         opts = opts.with_residual_stopping(
             args.get_parse("tolerance", 1e-8),

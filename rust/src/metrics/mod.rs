@@ -24,18 +24,47 @@ impl Stopwatch {
     }
 }
 
-/// Step-sampled history of (iteration, error, residual), mirroring the
-/// paper's §3.5 protocol ("stored the error and residual every `step`
-/// iterations").
+/// Which measurement channel of a [`History`] to read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channel {
+    /// `‖x^(k) - x_ref‖` against the known reference solution — the paper's
+    /// §3.5 reproduction protocol. Only available when the system carries a
+    /// reference ([`History::has_reference_channel`]).
+    ReferenceError,
+    /// `‖A x^(k) - b‖` — computable for *any* system, reference or not.
+    /// This is the serving-side convergence curve and the quantity Moorman
+    /// et al. (arXiv:2002.04126) and Liu–Wright (arXiv:1401.4780) state
+    /// their guarantees in.
+    Residual,
+}
+
+/// Step-sampled convergence history, mirroring the paper's §3.5 protocol
+/// ("stored the error and residual every `step` iterations") — made
+/// **dual-channel and reference-optional**:
+///
+/// - the **residual channel** (`‖Ax - b‖`) is recorded for *every* sample —
+///   it needs nothing but the system itself;
+/// - the **reference-error channel** (`‖x - x_ref‖`) is recorded only when
+///   the system actually carries a reference solution. On reference-free
+///   (serving) systems it stays empty instead of panicking.
+///
+/// [`History::min_error`] and [`History::tail_error`] read the
+/// reference-error channel when it is populated and fall back to the
+/// residual channel otherwise ([`History::primary_channel`]); use
+/// [`History::min_in`] / [`History::tail_in`] to address a channel
+/// explicitly.
 #[derive(Clone, Debug, Default)]
 pub struct History {
     /// Sampling period; 0 disables recording.
     pub step: usize,
     /// Recorded iteration numbers.
     pub iterations: Vec<usize>,
-    /// `‖x^(k) - x_ref‖` at each recorded iteration.
+    /// Reference-error channel `‖x^(k) - x_ref‖` — one entry per recorded
+    /// iteration when a reference exists, **empty** on reference-free
+    /// systems.
     pub errors: Vec<f64>,
-    /// `‖A x^(k) - b‖` at each recorded iteration.
+    /// Residual channel `‖A x^(k) - b‖` — one entry per recorded iteration,
+    /// always populated.
     pub residuals: Vec<f64>,
 }
 
@@ -51,10 +80,20 @@ impl History {
         self.step != 0 && k % self.step == 0
     }
 
-    /// Record one sample.
-    pub fn record(&mut self, k: usize, error: f64, residual: f64) {
+    /// Record one sample. `error` is `None` on reference-free systems; a
+    /// history must be recorded consistently — either every sample carries
+    /// the reference channel or none does (the per-solve recorder in
+    /// `StopCheck` guarantees this by deciding once per solve).
+    pub fn record(&mut self, k: usize, error: Option<f64>, residual: f64) {
+        if let Some(e) = error {
+            debug_assert_eq!(
+                self.errors.len(),
+                self.iterations.len(),
+                "reference channel must be all-or-nothing across samples"
+            );
+            self.errors.push(e);
+        }
         self.iterations.push(k);
-        self.errors.push(error);
         self.residuals.push(residual);
     }
 
@@ -68,25 +107,71 @@ impl History {
         self.iterations.is_empty()
     }
 
-    /// Minimum recorded error (the convergence-horizon estimate).
-    pub fn min_error(&self) -> Option<f64> {
-        self.errors.iter().copied().fold(None, |m, e| match m {
-            None => Some(e),
-            Some(v) => Some(v.min(e)),
-        })
+    /// True when the reference-error channel was recorded (the system
+    /// carried a reference solution at solve time).
+    pub fn has_reference_channel(&self) -> bool {
+        !self.errors.is_empty()
     }
 
-    /// Mean of the last `k` recorded errors (the stabilized horizon).
-    pub fn tail_error(&self, k: usize) -> Option<f64> {
-        if self.errors.is_empty() {
+    /// The samples of one channel. [`Channel::ReferenceError`] may be empty
+    /// (reference-free solve); [`Channel::Residual`] has one entry per
+    /// recorded iteration.
+    pub fn channel(&self, c: Channel) -> &[f64] {
+        match c {
+            Channel::ReferenceError => &self.errors,
+            Channel::Residual => &self.residuals,
+        }
+    }
+
+    /// The channel [`History::min_error`] / [`History::tail_error`] read:
+    /// the reference-error channel when populated, the residual channel
+    /// otherwise — so convergence-curve consumers work unchanged on
+    /// reference-free systems.
+    pub fn primary_channel(&self) -> Channel {
+        if self.has_reference_channel() {
+            Channel::ReferenceError
+        } else {
+            Channel::Residual
+        }
+    }
+
+    /// Minimum recorded value of one channel (`None` when the channel is
+    /// empty). NaN-safe: ordered by [`f64::total_cmp`].
+    pub fn min_in(&self, c: Channel) -> Option<f64> {
+        self.channel(c).iter().copied().min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Mean of the last `k` recorded values of one channel (`None` when the
+    /// channel is empty or `k` is 0 — an empty tail has no mean).
+    pub fn tail_in(&self, c: Channel, k: usize) -> Option<f64> {
+        let ch = self.channel(c);
+        if ch.is_empty() || k == 0 {
             return None;
         }
-        let tail = &self.errors[self.errors.len().saturating_sub(k)..];
+        let tail = &ch[ch.len().saturating_sub(k)..];
         Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Minimum recorded value of the [primary channel](History::primary_channel)
+    /// (the convergence-horizon estimate).
+    pub fn min_error(&self) -> Option<f64> {
+        self.min_in(self.primary_channel())
+    }
+
+    /// Mean of the last `k` recorded values of the
+    /// [primary channel](History::primary_channel) (the stabilized horizon).
+    pub fn tail_error(&self, k: usize) -> Option<f64> {
+        self.tail_in(self.primary_channel(), k)
     }
 }
 
 /// Mean and (population) standard deviation.
+///
+/// An empty slice yields `(0.0, 0.0)` — callers that must distinguish
+/// "no data" from "zero mean" (e.g. the calibration protocol) have to check
+/// emptiness themselves *before* averaging; `coordinator::calibrate` does
+/// exactly that and returns [`crate::error::Error::CalibrationFailed`]
+/// instead of a silent zero.
 pub fn mean_std(values: &[f64]) -> (f64, f64) {
     if values.is_empty() {
         return (0.0, 0.0);
@@ -97,12 +182,17 @@ pub fn mean_std(values: &[f64]) -> (f64, f64) {
 }
 
 /// Median of a sample (copies + sorts; fine for experiment-sized data).
+///
+/// An empty slice yields `0.0` (same sentinel convention as [`mean_std`]).
+/// NaN inputs are tolerated: ordering uses [`f64::total_cmp`], which sorts
+/// NaNs to the ends instead of panicking mid-sort the way
+/// `partial_cmp(..).unwrap()` did.
 pub fn median(values: &[f64]) -> f64 {
     if values.is_empty() {
         return 0.0;
     }
     let mut v = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let mid = v.len() / 2;
     if v.len() % 2 == 0 {
         (v[mid - 1] + v[mid]) / 2.0
@@ -128,10 +218,13 @@ mod tests {
         assert!(h.due(0));
         assert!(!h.due(5));
         assert!(h.due(20));
-        h.record(0, 1.0, 2.0);
-        h.record(10, 0.5, 1.0);
+        h.record(0, Some(1.0), 2.0);
+        h.record(10, Some(0.5), 1.0);
         assert_eq!(h.len(), 2);
         assert_eq!(h.min_error(), Some(0.5));
+        assert!(h.has_reference_channel());
+        assert_eq!(h.primary_channel(), Channel::ReferenceError);
+        assert_eq!(h.min_in(Channel::Residual), Some(1.0));
     }
 
     #[test]
@@ -143,10 +236,28 @@ mod tests {
     }
 
     #[test]
+    fn reference_free_history_reads_residual_channel() {
+        // No reference at solve time: the error channel stays empty and the
+        // min/tail accessors transparently read the residual channel.
+        let mut h = History::every(1);
+        h.record(0, None, 4.0);
+        h.record(1, None, 2.0);
+        h.record(2, None, 1.0);
+        assert!(!h.has_reference_channel());
+        assert!(h.errors.is_empty());
+        assert_eq!(h.residuals.len(), 3);
+        assert_eq!(h.primary_channel(), Channel::Residual);
+        assert_eq!(h.min_error(), Some(1.0));
+        assert_eq!(h.tail_error(2), Some(1.5));
+        assert_eq!(h.min_in(Channel::ReferenceError), None);
+        assert_eq!(h.tail_in(Channel::ReferenceError, 5), None);
+    }
+
+    #[test]
     fn tail_error_averages_last_k() {
         let mut h = History::every(1);
         for (i, e) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
-            h.record(i, *e, 0.0);
+            h.record(i, Some(*e), 0.0);
         }
         assert_eq!(h.tail_error(2), Some(1.5));
         assert_eq!(h.tail_error(100), Some(2.5));
@@ -159,5 +270,25 @@ mod tests {
         assert_eq!(s, 2.0);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_survives_nan_and_empty() {
+        // partial_cmp().unwrap() used to panic here; total_cmp sorts NaN to
+        // the high end and the finite median survives.
+        let v = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(median(&v), 3.0); // sorted: 1, 2, 3, NaN, NaN -> mid = 3
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn min_in_is_nan_safe() {
+        let mut h = History::every(1);
+        h.record(0, Some(f64::NAN), 5.0);
+        h.record(1, Some(2.0), f64::NAN);
+        // total_cmp orders NaN above every finite value: the finite min wins.
+        assert_eq!(h.min_in(Channel::ReferenceError), Some(2.0));
+        assert_eq!(h.min_in(Channel::Residual), Some(5.0));
     }
 }

@@ -16,7 +16,7 @@
 
 use super::shared::AtomicF64Vec;
 use crate::data::LinearSystem;
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 use crate::rng::{derive_seed, Mt19937};
 use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -86,8 +86,11 @@ impl Solver for AsyRkSolver {
         let pool = self.pool.as_deref().unwrap_or_else(|| super::pool::global());
         pool.run(q + 1, |part| {
             if part == 0 {
-                // Monitor: stopping test + history, then release the workers.
-                let mut history = History::every(opts.history_step);
+                // Monitor: stopping test + history, then release the
+                // workers. The async loop has no iteration boundary, so the
+                // monitor drives StopCheck's recorder directly on its own
+                // polling cadence (update counts, not iteration numbers).
+                let step = opts.history_step;
                 let mut stopper = StopCheck::new(system, opts);
                 let mut converged = false;
                 let mut diverged = false;
@@ -105,23 +108,23 @@ impl Solver for AsyRkSolver {
                 let mut last_recorded = usize::MAX;
                 while !converged && !diverged {
                     let done = total_updates.load(Ordering::Relaxed);
-                    let tick = if history.step > 0 { done / history.step } else { 0 };
-                    let record = history.step > 0 && tick != last_recorded;
+                    let tick = if step > 0 { done / step } else { 0 };
+                    let record = step > 0 && tick != last_recorded;
                     // Timed runs without history never materialize the
                     // iterate (nor any metric): the budget is the only stop.
                     if !timed || record {
                         x.snapshot_into(&mut xbuf);
                     }
-                    if record {
+                    let recorded_residual_sq = if record {
                         last_recorded = tick;
-                        history.record(
-                            done,
-                            system.error_sq(&xbuf).sqrt(),
-                            system.residual_norm(&xbuf),
-                        );
-                    }
+                        Some(stopper.record_sample(done, &xbuf))
+                    } else {
+                        None
+                    };
                     if !timed {
-                        let (c, d) = stopper.check_now(&xbuf);
+                        // Reuse the recorder's residual when it is also the
+                        // stopping metric (xbuf has not moved since).
+                        let (c, d) = stopper.check_now_reusing(&xbuf, recorded_residual_sq);
                         if c || d {
                             converged = c;
                             diverged = d;
@@ -146,7 +149,8 @@ impl Solver for AsyRkSolver {
                     }
                 }
                 stop.store(true, Ordering::SeqCst);
-                *monitor_out.lock().unwrap() = Some((history, converged, diverged));
+                *monitor_out.lock().unwrap() =
+                    Some((stopper.into_history(), converged, diverged));
             } else {
                 // HOGWILD worker on partition t of q.
                 let t = part - 1;

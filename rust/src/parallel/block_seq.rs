@@ -118,8 +118,8 @@ impl BlockSequentialRk {
         // Row sampling is *shared* (one RK chain): thread 0 draws, publishes.
         let mut rng = Mt19937::new(self.seed);
         let dist = if t == 0 { Some(AliasTable::new(system.sampling_weights())) } else { None };
-        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
-        // Stopping state lives with the thread that decides (thread 0).
+        // Stopping state and history recording live with the thread that
+        // decides (thread 0).
         let mut stopper = (t == 0).then(|| StopCheck::new(system, opts));
         let mut k = 0usize;
         let (lo, hi) = region.x.chunk(t, q);
@@ -130,9 +130,6 @@ impl BlockSequentialRk {
                 // SAFETY: all writers passed barrier (A); x is stable.
                 let x = unsafe { region.x.as_ref_unchecked() };
                 let stopper = stopper.as_mut().expect("thread 0 owns the stopper");
-                if history.due(k) {
-                    history.record(k, system.error_sq(x).sqrt(), system.residual_norm(x));
-                }
                 let (stop, c, d) = stopper.check(k, x);
                 region.converged.store(c, Ordering::SeqCst);
                 region.diverged.store(d, Ordering::SeqCst);
@@ -181,7 +178,7 @@ impl BlockSequentialRk {
         }
 
         if t == 0 {
-            Some((history, k))
+            Some((stopper.expect("thread 0 owns the stopper").into_history(), k))
         } else {
             None
         }

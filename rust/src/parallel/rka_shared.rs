@@ -182,8 +182,8 @@ impl ParallelRka {
         let n = system.cols();
         let q = self.q;
         let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
-        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
-        // Stopping state lives with the thread that decides (thread 0).
+        // Stopping state and history recording live with the thread that
+        // decides (thread 0).
         let mut stopper = (t == 0).then(|| StopCheck::new(system, opts));
         // Private buffers (allocated once, reused every iteration).
         let mut local = vec![0.0; n];
@@ -195,19 +195,12 @@ impl ParallelRka {
             region.barrier.wait();
             if t == 0 {
                 // Stopping test + history; the iterate is only snapshotted
-                // on iterations where something will actually read it (off
+                // on iterations where check() will actually read it (off
                 // the clock in timed runs, off the hot path between
-                // residual checkpoints).
+                // residual checkpoints and history samples).
                 let stopper = stopper.as_mut().expect("thread 0 owns the stopper");
-                if stopper.evaluates_at(k) || history.due(k) {
+                if stopper.needs_iterate_at(k) {
                     region.x.snapshot_into(&mut err_buf);
-                }
-                if history.due(k) {
-                    history.record(
-                        k,
-                        system.error_sq(&err_buf).sqrt(),
-                        system.residual_norm(&err_buf),
-                    );
                 }
                 let (stop, c, d) = stopper.check(k, &err_buf);
                 region.converged.store(c, Ordering::SeqCst);
@@ -308,7 +301,7 @@ impl ParallelRka {
         }
 
         if t == 0 {
-            Some((history, k))
+            Some((stopper.expect("thread 0 owns the stopper").into_history(), k))
         } else {
             None
         }

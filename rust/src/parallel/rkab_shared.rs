@@ -130,8 +130,8 @@ impl ParallelRkab {
         let n = system.cols();
         let q = self.q;
         let mut sampler = RowSampler::new(system, self.scheme, t, q, self.seed);
-        let mut history = History::every(if t == 0 { opts.history_step } else { 0 });
-        // Stopping state lives with the thread that decides (thread 0).
+        // Stopping state and history recording live with the thread that
+        // decides (thread 0).
         let mut stopper = (t == 0).then(|| StopCheck::new(system, opts));
         let mut v = vec![0.0; n]; // private block estimate
         let mut idx = Vec::with_capacity(self.block_size); // sweep scratch
@@ -146,9 +146,6 @@ impl ParallelRkab {
                 // SAFETY: all writers passed barrier (A); x is stable.
                 let x = unsafe { region.x.as_ref_unchecked() };
                 let stopper = stopper.as_mut().expect("thread 0 owns the stopper");
-                if history.due(k) {
-                    history.record(k, system.error_sq(x).sqrt(), system.residual_norm(x));
-                }
                 let (stop, c, d) = stopper.check(k, x);
                 region.converged.store(c, Ordering::SeqCst);
                 region.diverged.store(d, Ordering::SeqCst);
@@ -198,7 +195,7 @@ impl ParallelRkab {
         }
 
         if t == 0 {
-            Some((history, k))
+            Some((stopper.expect("thread 0 owns the stopper").into_history(), k))
         } else {
             None
         }

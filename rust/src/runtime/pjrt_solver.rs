@@ -15,7 +15,7 @@ use super::engine::PjrtEngine;
 use super::manifest::ArtifactKind;
 use crate::data::LinearSystem;
 use crate::error::Result;
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
 use crate::solvers::{SolveOptions, SolveResult, StopCheck};
 use std::cell::RefCell;
@@ -78,7 +78,7 @@ impl PjrtRkabSolver {
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, SamplingScheme::FullMatrix, t, q, self.seed))
             .collect();
-        let mut history = History::every(opts.history_step);
+        // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
         let mut engine = self.engine.borrow_mut();
 
@@ -92,9 +92,6 @@ impl PjrtRkabSolver {
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            if history.due(k) {
-                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-            }
             let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
@@ -132,7 +129,7 @@ impl PjrtRkabSolver {
             diverged,
             seconds: sw.seconds(),
             rows_used: k * q * bs,
-            history,
+            history: stopper.into_history(),
         })
     }
 }

@@ -7,7 +7,7 @@
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::{axpy, dot};
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 
 /// Cyclic Kaczmarz solver.
 pub struct CkSolver {
@@ -43,19 +43,16 @@ impl Solver for CkSolver {
         let m = system.rows();
         let n = system.cols();
         let mut x = vec![0.0; n];
-        let mut history = History::every(opts.history_step);
         // Timing protocol (§3.1): with `fixed_iterations` set, StopCheck
         // never evaluates the metric, so the stopping test is off the clock
-        // and the reference solution is never consulted.
+        // and the reference solution is never consulted. History recording
+        // (dual-channel, reference-optional) also lives in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
         let sw = Stopwatch::start();
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            if history.due(k) {
-                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-            }
             let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
@@ -83,7 +80,7 @@ impl Solver for CkSolver {
             diverged,
             seconds: sw.seconds(),
             rows_used: k,
-            history,
+            history: stopper.into_history(),
         }
     }
 }

@@ -86,9 +86,13 @@ pub struct SolveOptions {
     /// solution — and they report `converged = false`, because nothing was
     /// measured.
     pub fixed_iterations: Option<usize>,
-    /// Record error/residual every `history_step` iterations (0 = off).
-    /// Recording measures against the reference solution, so it requires
-    /// one even under residual stopping.
+    /// Record a convergence-history sample every `history_step` iterations
+    /// (0 = off). Recording is **dual-channel and reference-optional**: the
+    /// residual channel `‖Ax - b‖` is always recorded (one amortized
+    /// [`gemv_block_into`] per sample), the reference-error channel
+    /// `‖x - x_ref‖` only when the system actually carries a reference —
+    /// so reference-free serving jobs can request convergence curves too
+    /// (see [`crate::metrics::History`]).
     pub history_step: usize,
     /// Declare divergence when the stopping metric exceeds
     /// `divergence_factor` x its initial value (used by the Fig. 10 α
@@ -153,18 +157,17 @@ impl SolveOptions {
         self
     }
 
-    /// Would a solve under these options consult the system's reference
-    /// solution? True when the convergence test measures against it
-    /// (reference-error stopping outside the fixed-iteration protocol) or
-    /// when history recording is on (histories store `‖x - x_ref‖`).
-    /// Residual-stopped, history-free runs — and *all* fixed-iteration,
-    /// history-free runs — never touch the reference, so they are valid on
-    /// systems that do not carry one. The batch layer validates jobs
-    /// against this predicate so the two can never drift.
+    /// Would a solve under these options *require* the system's reference
+    /// solution? True only when the convergence test measures against it:
+    /// reference-error stopping outside the fixed-iteration protocol.
+    /// History recording does **not** require one — histories are
+    /// dual-channel, and on a reference-free system only the residual
+    /// channel is recorded (the reference channel stays empty rather than
+    /// panicking). Residual-stopped and fixed-iteration runs therefore
+    /// never touch the reference regardless of `history_step`, so they are
+    /// valid on systems that do not carry one. The batch layer validates
+    /// jobs against this predicate so the two can never drift.
     pub fn consults_reference(&self) -> bool {
-        if self.history_step != 0 {
-            return true;
-        }
         self.fixed_iterations.is_none()
             && matches!(self.stopping, StoppingCriterion::ReferenceError { .. })
     }
@@ -190,7 +193,10 @@ pub struct SolveResult {
     /// Total rows processed (iterations x workers x block for the block
     /// methods; equals `iterations` for RK/CK).
     pub rows_used: usize,
-    /// Step-sampled error/residual history (empty unless requested).
+    /// Step-sampled convergence history (empty unless requested via
+    /// `history_step`). Dual-channel: the residual channel is always
+    /// recorded, the reference-error channel only when the system carries
+    /// a reference solution — see [`History`].
     pub history: History,
 }
 
@@ -202,20 +208,27 @@ pub trait Solver {
     fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult;
 }
 
-/// Shared stopping-test state for every solver inner loop.
+/// Shared stopping-and-observability state for every solver inner loop.
 ///
 /// One `StopCheck` lives per solve (per rank 0 / participant 0 in the
 /// parallel and distributed engines) and owns everything the convergence
-/// decision needs:
+/// decision *and* the convergence curve need:
 ///
 /// - the **lazy initial metric** — the divergence test compares against the
 ///   metric's value at `x^(0)`, but that value is only computed on the
 ///   *first evaluation*, so fixed-iteration runs (which never evaluate)
 ///   never touch the reference solution at all. This is what lets the batch
 ///   layer run reference-free jobs without patching in a dummy `x_ref`;
-/// - the **residual scratch** — residual stopping needs `A x` (length `m`),
-///   computed through [`gemv_block_into`] into a buffer allocated once per
-///   solve, never per check.
+/// - the **residual scratch** — residual stopping *and* history recording
+///   need `A x` (length `m`), computed through [`gemv_block_into`] into a
+///   buffer allocated once per solve, never per check;
+/// - the **history recorder** — [`StopCheck::check`] records a
+///   [`History`] sample whenever iteration `k` is due, so the eleven solve
+///   loops share one recording implementation instead of open-coding it.
+///   Recording is dual-channel: the residual channel always, the
+///   reference-error channel only when the system carries a reference —
+///   a reference-free history costs one amortized `gemv_block_into` per
+///   sample instead of an `error_sq` panic.
 ///
 /// Under [`StoppingCriterion::ReferenceError`] the decision sequence —
 /// metric every iteration, tolerance then divergence then budget — is
@@ -226,28 +239,42 @@ pub(crate) struct StopCheck<'a> {
     /// Metric value at the first evaluation (the `x = 0` state), lazily
     /// filled; the divergence reference.
     initial: Option<f64>,
-    /// `A x` scratch for the residual criterion (empty under
-    /// reference-error stopping).
+    /// `A x` scratch, shared by the residual criterion and the residual
+    /// history channel (empty when neither is active).
     ax: Vec<f64>,
+    /// The convergence curve recorded by [`StopCheck::check`] /
+    /// [`StopCheck::record_sample`]; reclaimed via
+    /// [`StopCheck::into_history`].
+    history: History,
+    /// Whether history samples carry the reference-error channel (decided
+    /// once per solve: does the system have a reference solution?).
+    record_reference: bool,
 }
 
 impl<'a> StopCheck<'a> {
     pub(crate) fn new(system: &'a LinearSystem, opts: &'a SolveOptions) -> Self {
-        let ax = match opts.stopping {
-            StoppingCriterion::Residual { .. } if opts.fixed_iterations.is_none() => {
-                vec![0.0; system.rows()]
-            }
-            _ => Vec::new(),
+        let needs_residual_metric = matches!(opts.stopping, StoppingCriterion::Residual { .. })
+            && opts.fixed_iterations.is_none();
+        let ax = if needs_residual_metric || opts.history_step != 0 {
+            vec![0.0; system.rows()]
+        } else {
+            Vec::new()
         };
-        StopCheck { system, opts, initial: None, ax }
+        StopCheck {
+            system,
+            opts,
+            initial: None,
+            ax,
+            history: History::every(opts.history_step),
+            record_reference: system.reference_solution().is_some(),
+        }
     }
 
     /// Will [`StopCheck::check`] at iteration `k` evaluate the convergence
-    /// metric (and therefore read the iterate)? False for every `k` in
-    /// fixed-iteration runs; false between residual checkpoints. Callers
-    /// that must *materialize* the iterate before checking (the shared-
-    /// memory engines snapshot atomics into a buffer) use this to skip the
-    /// snapshot on iterations where `check` would not look at it.
+    /// metric? False for every `k` in fixed-iteration runs; false between
+    /// residual checkpoints. Note that `check` may still read the iterate
+    /// on such iterations to record history — materializing callers should
+    /// gate on [`StopCheck::needs_iterate_at`], which covers both.
     #[inline]
     pub(crate) fn evaluates_at(&self, k: usize) -> bool {
         if self.opts.fixed_iterations.is_some() {
@@ -259,26 +286,71 @@ impl<'a> StopCheck<'a> {
         }
     }
 
+    /// Will [`StopCheck::check`] at iteration `k` read the iterate at all —
+    /// for the convergence metric *or* for a due history sample? Callers
+    /// that must *materialize* the iterate before checking (the shared-
+    /// memory engines snapshot atomics into a buffer) use this to skip the
+    /// snapshot on iterations where `check` would not look at it.
+    #[inline]
+    pub(crate) fn needs_iterate_at(&self, k: usize) -> bool {
+        self.history.due(k) || self.evaluates_at(k)
+    }
+
+    /// `‖Ax - b‖²` through the blocked GEMV and the per-solve scratch.
+    fn residual_sq(&mut self, x: &[f64]) -> f64 {
+        debug_assert_eq!(self.ax.len(), self.system.rows(), "residual scratch not allocated");
+        gemv_block_into(&self.system.a, x, &mut self.ax);
+        dist_sq(&self.ax, &self.system.b)
+    }
+
     /// The squared stopping metric for iterate `x`.
     fn metric(&mut self, x: &[f64]) -> f64 {
         match self.opts.stopping {
             StoppingCriterion::ReferenceError { .. } => self.system.error_sq(x),
-            StoppingCriterion::Residual { .. } => {
-                gemv_block_into(&self.system.a, x, &mut self.ax);
-                dist_sq(&self.ax, &self.system.b)
-            }
+            StoppingCriterion::Residual { .. } => self.residual_sq(x),
         }
     }
 
+    /// Record one history sample for iterate `x` at iteration `k`,
+    /// regardless of cadence, returning the squared residual it computed
+    /// (so a caller about to evaluate the residual *metric* on the same
+    /// iterate can reuse it instead of paying the `O(m·n)` GEMV twice).
+    /// [`StopCheck::check`] calls this on the `history_step` cadence; the
+    /// AsyRK monitor — whose "iteration" is a racy global update count
+    /// with no loop boundary — calls it directly on its own polling
+    /// cadence.
+    pub(crate) fn record_sample(&mut self, k: usize, x: &[f64]) -> f64 {
+        let residual_sq = self.residual_sq(x);
+        let error = if self.record_reference {
+            Some(self.system.error_sq(x).sqrt())
+        } else {
+            None
+        };
+        self.history.record(k, error, residual_sq.sqrt());
+        residual_sq
+    }
+
+    /// The recorded convergence curve (call once, after the solve loop).
+    pub(crate) fn into_history(self) -> History {
+        self.history
+    }
+
     /// Full stopping decision at iteration `k`: `(stop, converged,
-    /// diverged)`. `x` is only read when [`StopCheck::evaluates_at`]`(k)`
-    /// is true, so callers may pass a stale buffer on other iterations.
+    /// diverged)`, recording a history sample first when `k` is due (so the
+    /// stopping iteration's state is included in the curve). `x` is only
+    /// read when [`StopCheck::needs_iterate_at`]`(k)` is true, so callers
+    /// may pass a stale buffer on other iterations.
     pub(crate) fn check(&mut self, k: usize, x: &[f64]) -> (bool, bool, bool) {
+        let recorded_residual_sq = if self.history.due(k) {
+            Some(self.record_sample(k, x))
+        } else {
+            None
+        };
         if let Some(fixed) = self.opts.fixed_iterations {
             return (k >= fixed, false, false);
         }
         if self.evaluates_at(k) {
-            let (converged, diverged) = self.check_now(x);
+            let (converged, diverged) = self.check_now_reusing(x, recorded_residual_sq);
             if converged || diverged {
                 return (true, converged, diverged);
             }
@@ -287,12 +359,34 @@ impl<'a> StopCheck<'a> {
     }
 
     /// Cadence-free convergence/divergence test: `(converged, diverged)`.
-    /// The single copy of the decision sequence — tolerance, then
-    /// divergence — that [`StopCheck::check`] runs on its cadence and the
-    /// AsyRK monitor (which has no iteration boundary to hang `check_every`
-    /// off of, and handles the budget itself) runs per poll.
+    /// [`StopCheck::check`] runs this on its cadence; the AsyRK monitor
+    /// (which has no iteration boundary to hang `check_every` off of, and
+    /// handles the budget itself) runs it per poll.
     pub(crate) fn check_now(&mut self, x: &[f64]) -> (bool, bool) {
-        let m = self.metric(x);
+        self.check_now_reusing(x, None)
+    }
+
+    /// [`StopCheck::check_now`] with residual reuse: when the stopping
+    /// metric *is* the residual and [`StopCheck::record_sample`] just
+    /// computed it for this same iterate, the caller passes it back here
+    /// and the O(m·n) GEMV is not paid a second time (bit-equal — same
+    /// computation on the same `x`). Falls back to evaluating the metric
+    /// in every other case.
+    pub(crate) fn check_now_reusing(
+        &mut self,
+        x: &[f64],
+        recorded_residual_sq: Option<f64>,
+    ) -> (bool, bool) {
+        let m = match (self.opts.stopping, recorded_residual_sq) {
+            (StoppingCriterion::Residual { .. }, Some(r)) => r,
+            _ => self.metric(x),
+        };
+        self.decide(m)
+    }
+
+    /// The single copy of the decision sequence — tolerance, then
+    /// divergence — applied to an already-computed squared metric.
+    fn decide(&mut self, m: f64) -> (bool, bool) {
         let initial = *self.initial.get_or_insert(m);
         if m < self.opts.tolerance() {
             return (true, false);
@@ -402,12 +496,79 @@ mod tests {
         assert!(reference.consults_reference());
         let fixed = SolveOptions::default().with_fixed_iterations(10);
         assert!(!fixed.consults_reference());
+        // History no longer forces a reference: the curve is dual-channel
+        // and degrades to residual-only on reference-free systems.
         let fixed_history = SolveOptions::default().with_fixed_iterations(10).with_history_step(2);
-        assert!(fixed_history.consults_reference());
+        assert!(!fixed_history.consults_reference());
         let residual = SolveOptions::default().with_residual_stopping(1e-8, 32);
         assert!(!residual.consults_reference());
         let residual_history = residual.with_history_step(5);
-        assert!(residual_history.consults_reference());
+        assert!(!residual_history.consults_reference());
+        // The only consulting shape: reference-error stopping, unfixed.
+        assert!(SolveOptions::default().with_history_step(5).consults_reference());
+    }
+
+    #[test]
+    fn check_records_history_on_cadence_including_the_stop_iteration() {
+        let sys = identity_system();
+        let opts = SolveOptions::default().with_fixed_iterations(10).with_history_step(5);
+        let mut sc = StopCheck::new(&sys, &opts);
+        for k in 0..=10 {
+            let (stop, ..) = sc.check(k, &[1.0, 1.0]);
+            assert_eq!(stop, k >= 10);
+        }
+        let h = sc.into_history();
+        assert_eq!(h.iterations, vec![0, 5, 10]); // final state included
+        // Referenced system: both channels populated, one entry per sample.
+        assert_eq!(h.errors.len(), 3);
+        assert_eq!(h.residuals.len(), 3);
+        // Identity system: error and residual coincide (‖x - [3,4]‖).
+        for (e, r) in h.errors.iter().zip(&h.residuals) {
+            assert!((e - r).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reference_free_history_records_residual_channel_only() {
+        // No reference solution at all: error_sq would panic, so a clean
+        // pass proves recording never touched it.
+        let a = Matrix::identity(2);
+        let sys = LinearSystem::new(a, vec![3.0, 4.0], None, true);
+        let opts = SolveOptions::default()
+            .with_residual_stopping(1e-9, 2)
+            .with_history_step(2)
+            .with_max_iterations(6);
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert!(sc.needs_iterate_at(0));
+        assert!(!sc.needs_iterate_at(1));
+        for k in 0..=6 {
+            if sc.check(k, &[0.0, 0.0]).0 {
+                break;
+            }
+        }
+        let h = sc.into_history();
+        assert!(!h.has_reference_channel());
+        assert_eq!(h.errors.len(), 0);
+        assert_eq!(h.iterations, vec![0, 2, 4, 6]);
+        assert!(h.residuals.iter().all(|r| (r - 5.0).abs() < 1e-12));
+        assert_eq!(h.min_error(), Some(5.0)); // falls back to the residual channel
+    }
+
+    #[test]
+    fn needs_iterate_covers_history_and_metric_cadence() {
+        let sys = identity_system();
+        let opts = SolveOptions::default().with_residual_stopping(1e-8, 8).with_history_step(6);
+        let sc = StopCheck::new(&sys, &opts);
+        assert!(sc.needs_iterate_at(0)); // both due
+        assert!(sc.needs_iterate_at(6)); // history only
+        assert!(sc.needs_iterate_at(8)); // metric only
+        assert!(!sc.needs_iterate_at(5)); // neither
+        // Fixed runs evaluate no metric but still record due samples.
+        let fixed = SolveOptions::default().with_fixed_iterations(100).with_history_step(6);
+        let sc = StopCheck::new(&sys, &fixed);
+        assert!(!sc.evaluates_at(6));
+        assert!(sc.needs_iterate_at(6));
+        assert!(!sc.needs_iterate_at(5));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::{axpy, dot};
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 use crate::rng::{AliasTable, Mt19937};
 
 /// Randomized Kaczmarz solver.
@@ -42,16 +42,13 @@ impl Solver for RkSolver {
         let mut rng = Mt19937::new(self.seed);
         // Alias table: O(1) row sampling (see rng::distribution docs).
         let dist = AliasTable::new(system.sampling_weights());
-        let mut history = History::every(opts.history_step);
+        // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
         let sw = Stopwatch::start();
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            if history.due(k) {
-                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-            }
             let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
@@ -72,7 +69,7 @@ impl Solver for RkSolver {
             diverged,
             seconds: sw.seconds(),
             rows_used: k,
-            history,
+            history: stopper.into_history(),
         }
     }
 }

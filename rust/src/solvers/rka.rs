@@ -17,7 +17,7 @@ use super::sampling::{RowSampler, SamplingScheme};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::{axpy, dot};
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 
 /// Per-worker relaxation weights.
 #[derive(Clone, Debug)]
@@ -101,16 +101,13 @@ impl Solver for RkaSolver {
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
-        let mut history = History::every(opts.history_step);
+        // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
         let sw = Stopwatch::start();
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            if history.due(k) {
-                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-            }
             let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
@@ -137,7 +134,7 @@ impl Solver for RkaSolver {
             diverged,
             seconds: sw.seconds(),
             rows_used: k * q,
-            history,
+            history: stopper.into_history(),
         }
     }
 }

@@ -16,7 +16,7 @@ use super::sampling::{RowSampler, SamplingScheme};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::{axpy, axpy_dot, dot};
-use crate::metrics::{History, Stopwatch};
+use crate::metrics::Stopwatch;
 
 /// One worker's in-block sweep: `block_size` sequential Kaczmarz projections
 /// applied to the private iterate `v` (eq. 8 / Algorithm 3 lines 5-11).
@@ -103,16 +103,13 @@ impl Solver for RkabSolver {
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
-        let mut history = History::every(opts.history_step);
+        // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
         let sw = Stopwatch::start();
         let mut k = 0usize;
         let (mut converged, mut diverged);
         loop {
-            if history.due(k) {
-                history.record(k, system.error_sq(&x).sqrt(), system.residual_norm(&x));
-            }
             let (stop, c, d) = stopper.check(k, &x);
             converged = c;
             diverged = d;
@@ -142,7 +139,7 @@ impl Solver for RkabSolver {
             diverged,
             seconds: sw.seconds(),
             rows_used: k * q * self.block_size,
-            history,
+            history: stopper.into_history(),
         }
     }
 }

@@ -1,0 +1,282 @@
+//! Property tests for the reference-free observability contract:
+//!
+//! 1. a system constructed **without** a reference solution can run every
+//!    solver layer with `history_step != 0` and residual stopping,
+//!    producing a non-empty residual history and **zero** reference
+//!    evaluations — pinned by the panicking-probe pattern of
+//!    `tests/stopping_properties.rs` (`error_sq` panics on a reference-free
+//!    system, so a clean pass proves the count is exactly zero);
+//! 2. on referenced systems the history is dual-channel (both channels
+//!    populated, sample-aligned), and the residual channel certifies the
+//!    tolerance at the stopping sample;
+//! 3. residual-stopped calibration agrees with reference-stopped
+//!    calibration on a consistent system within seed noise, and an
+//!    all-divergent configuration is a typed error, never a zero budget.
+
+use kaczmarz::batch::SolveQueue;
+use kaczmarz::coordinator::{calibrate_iterations, calibrate_iterations_residual};
+use kaczmarz::data::{DatasetBuilder, LinearSystem};
+use kaczmarz::distributed::{DistRka, DistRkab, Placement, SimCluster};
+use kaczmarz::error::Error;
+use kaczmarz::metrics::{Channel, History};
+use kaczmarz::parallel::{AsyRkSolver, BlockSequentialRk, ParallelRka, ParallelRkab};
+use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+
+/// The same system, stripped of every reference solution: any call to
+/// `error_sq` panics, so a run that completes proves zero consultations.
+fn strip_reference(sys: &LinearSystem) -> LinearSystem {
+    LinearSystem::new(sys.a.clone(), sys.b.clone(), None, true)
+}
+
+/// Every `Solver`-trait implementation in the crate, smallest viable
+/// parallelism degrees (the pool tolerates oversubscription).
+fn all_trait_solvers(seed: u32) -> Vec<(&'static str, Box<dyn Solver>)> {
+    vec![
+        ("CK", Box::new(CkSolver::new())),
+        ("RK", Box::new(RkSolver::new(seed))),
+        ("RKA", Box::new(RkaSolver::new(seed, 4, 1.0))),
+        ("RKAB", Box::new(RkabSolver::new(seed, 4, 8, 1.0))),
+        ("RKA-parallel", Box::new(ParallelRka::new(seed, 3, 1.0))),
+        ("RKAB-parallel", Box::new(ParallelRkab::new(seed, 3, 8, 1.0))),
+        ("RK-block-seq", Box::new(BlockSequentialRk::new(seed, 2))),
+        ("AsyRK", Box::new(AsyRkSolver::new(seed, 2))),
+    ]
+}
+
+fn assert_residual_only_history(name: &str, h: &History) {
+    assert!(!h.is_empty(), "{name}: history requested but empty");
+    assert_eq!(h.errors.len(), 0, "{name}: reference channel recorded without a reference");
+    assert!(!h.has_reference_channel(), "{name}");
+    assert_eq!(h.residuals.len(), h.iterations.len(), "{name}: channel misaligned");
+    assert!(h.residuals.iter().all(|r| r.is_finite()), "{name}: non-finite residual sample");
+    // min_error transparently reads the residual channel.
+    assert_eq!(h.primary_channel(), Channel::Residual, "{name}");
+    assert_eq!(h.min_error(), h.min_in(Channel::Residual), "{name}");
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: reference-free convergence curves, zero reference evaluations.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reference_free_histories_record_residuals_for_every_trait_solver() {
+    // The probe: no reference anywhere; `error_sq` panics if consulted.
+    let sys = strip_reference(&DatasetBuilder::new(200, 10).seed(1).consistent());
+    for (name, s) in all_trait_solvers(3) {
+        // Residual stopping + history — the shape PR 3 could not express
+        // (history used to force `consults_reference()` = true). AsyRK's
+        // racy dense updates converge more slowly (the paper's point about
+        // it), so it gets the same looser — still deep — target as in
+        // tests/stopping_properties.rs.
+        let opts = if name == "AsyRK" {
+            SolveOptions::default().with_residual_stopping(1e-3, 1).with_history_step(8)
+        } else {
+            SolveOptions::default().with_residual_stopping(1e-6, 8).with_history_step(8)
+        };
+        let r = s.solve(&sys, &opts);
+        assert!(r.converged, "{name}: residual run did not converge");
+        assert_residual_only_history(name, &r.history);
+        // The curve moved: for the synchronous solvers the first sample is
+        // ‖b‖ at x^(0) = 0 and the stopping sample is inside the tolerance.
+        // (AsyRK's monitor takes its first sample only after the racy
+        // workers have already started, so only the weaker non-increase
+        // holds there.)
+        let first = r.history.residuals.first().unwrap();
+        let last = r.history.residuals.last().unwrap();
+        if name == "AsyRK" {
+            assert!(last <= first, "{name}: residual curve increased");
+        } else {
+            assert!(last < first, "{name}: residual curve did not decrease");
+        }
+    }
+}
+
+#[test]
+fn reference_free_histories_under_fixed_budgets_too() {
+    let sys = strip_reference(&DatasetBuilder::new(150, 8).seed(5).consistent());
+    let opts = SolveOptions::default().with_fixed_iterations(40).with_history_step(10);
+    for (name, s) in all_trait_solvers(3) {
+        let r = s.solve(&sys, &opts);
+        assert!(!r.converged, "{name}: fixed-budget run claimed convergence");
+        assert_residual_only_history(name, &r.history);
+    }
+}
+
+#[test]
+fn reference_free_histories_for_distributed_solvers() {
+    let sys = strip_reference(&DatasetBuilder::new(240, 10).seed(2).consistent());
+    let cluster = SimCluster::new(3, Placement::two_per_node());
+    let opts = SolveOptions::default()
+        .with_residual_stopping(1e-6, 8)
+        .with_history_step(8)
+        .with_max_iterations(2_000_000);
+
+    let r = DistRka::new(3, 1.0).solve(&sys, &opts, &cluster);
+    assert!(r.converged, "DistRka residual run did not converge");
+    assert_residual_only_history("DistRka", &r.history);
+
+    let r = DistRkab::new(3, 8, 1.0).solve(&sys, &opts, &cluster);
+    assert!(r.converged, "DistRkab residual run did not converge");
+    assert_residual_only_history("DistRkab", &r.history);
+}
+
+#[test]
+fn reference_free_histories_for_the_pjrt_solver() {
+    // Requires `make artifacts` (skipped with a clear message otherwise),
+    // same guard as tests/runtime_integration.rs.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    // (q, bs, n) = (4, 256, 256) is in the AOT catalogue (see
+    // python/compile/aot.py RKAB_ROUND_SHAPES) and converges quickly on
+    // this workload (same shape as pjrt_rkab_converges_to_solution).
+    let (q, bs, n) = (4, 256, 256);
+    let sys = strip_reference(&DatasetBuilder::new(4000, n).seed(7).consistent());
+    let solver = kaczmarz::runtime::PjrtRkabSolver::new(&dir, 3, q, bs, n, 1.0)
+        .expect("rkab_round artifact for q=4, bs=256, n=256");
+    let opts = SolveOptions::default()
+        .with_residual_stopping(1e-1, 4)
+        .with_history_step(4)
+        .with_max_iterations(2000);
+    let r = solver.solve(&sys, &opts).expect("PJRT solve");
+    assert!(r.converged, "PJRT residual run did not converge");
+    assert_residual_only_history("RKAB-pjrt", &r.history);
+}
+
+#[test]
+fn reference_free_queue_jobs_can_request_convergence_curves() {
+    // The serving story end to end: a reference-free job asks for both a
+    // residual-stopped solve AND its convergence curve — previously
+    // rejected up front by the queue's consults_reference validation.
+    let system = strip_reference(&DatasetBuilder::new(200, 8).seed(7).consistent());
+    let mut queue = SolveQueue::new();
+    queue.push(
+        system,
+        SolveOptions::default().with_residual_stopping(1e-6, 16).with_history_step(16),
+    );
+    let reports = queue.run(&RkSolver::new(3)).unwrap();
+    assert!(reports[0].result.converged);
+    let curve = reports[0].residual_history();
+    assert!(!curve.is_empty(), "queue job produced no residual history");
+    assert!(curve.last().unwrap() < curve.first().unwrap());
+    assert!(!reports[0].result.history.has_reference_channel());
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: dual-channel histories on referenced systems.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn referenced_histories_carry_both_channels_aligned() {
+    let sys = DatasetBuilder::new(200, 10).seed(9).consistent();
+    let opts = SolveOptions::default().with_fixed_iterations(100).with_history_step(20);
+    let r = RkSolver::new(4).solve(&sys, &opts);
+    assert_eq!(r.history.iterations, vec![0, 20, 40, 60, 80, 100]);
+    assert_eq!(r.history.errors.len(), 6);
+    assert_eq!(r.history.residuals.len(), 6);
+    assert!(r.history.has_reference_channel());
+    assert_eq!(r.history.primary_channel(), Channel::ReferenceError);
+    // Both channels shrink over a consistent-system solve.
+    assert!(r.history.errors.last().unwrap() < r.history.errors.first().unwrap());
+    assert!(r.history.residuals.last().unwrap() < r.history.residuals.first().unwrap());
+}
+
+#[test]
+fn residual_history_certifies_tolerance_at_the_stopping_sample() {
+    // With history_step == check_every the stopping iteration is also a
+    // history sample, so the recorded curve ends inside the tolerance.
+    let sys = DatasetBuilder::new(200, 10).seed(11).consistent();
+    let tol = 1e-6;
+    let opts = SolveOptions::default()
+        .with_residual_stopping(tol, 8)
+        .with_history_step(8)
+        .with_max_iterations(2_000_000);
+    let r = RkSolver::new(2).solve(&sys, &opts);
+    assert!(r.converged);
+    let last = *r.history.residuals.last().unwrap();
+    assert!(last * last < tol, "stopping sample residual² {:.3e} >= tol", last * last);
+    // The recorded sample describes the returned iterate (same x, the
+    // record and the metric share the stopping checkpoint).
+    let direct = sys.residual_norm(&r.x);
+    assert!(
+        (last - direct).abs() <= 1e-9 * direct.max(1.0),
+        "recorded {last:.6e} vs recomputed {direct:.6e}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: residual-stopped calibration.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn residual_calibration_agrees_with_reference_calibration_within_seed_noise() {
+    let sys = DatasetBuilder::new(200, 10).seed(13).consistent();
+    let opts = SolveOptions::default(); // reference-stopped, eps = 1e-8
+    let by_ref = calibrate_iterations(RkSolver::new, &sys, &opts, 4).unwrap();
+
+    // Self-calibrate the comparable residual tolerance: the residual² the
+    // seed-0 reference-stopped run ends at. Both calibrations then chase
+    // the same contraction depth along identical per-seed iterate paths,
+    // so the means must agree closely (offline simulation: ratio ~1.007;
+    // the 1.5x band is seed-noise slack, not an expected effect).
+    let probe = RkSolver::new(0).solve(&sys, &opts);
+    let r = sys.residual_norm(&probe.x);
+    let tol = r * r;
+    assert!(tol > 0.0);
+    let by_res = calibrate_iterations_residual(RkSolver::new, &sys, &opts, tol, 1, 4).unwrap();
+
+    assert_eq!(by_ref.converged_fraction, 1.0);
+    assert_eq!(by_res.converged_fraction, 1.0);
+    let ratio = by_res.mean_iterations / by_ref.mean_iterations;
+    assert!(
+        (0.67..1.5).contains(&ratio),
+        "residual calibration drifted: {} vs {} (ratio {ratio:.3})",
+        by_res.mean_iterations,
+        by_ref.mean_iterations
+    );
+}
+
+#[test]
+fn residual_calibration_runs_on_reference_free_systems() {
+    // The ROADMAP item: the §3.1 calibrate-then-time protocol on a system
+    // with no known solution. The reference-stopped mode cannot run here at
+    // all (error_sq panics); the residual mode calibrates a usable budget.
+    let sys = strip_reference(&DatasetBuilder::new(200, 10).seed(15).consistent());
+    let cal = calibrate_iterations_residual(
+        RkSolver::new,
+        &sys,
+        &SolveOptions::default(),
+        1e-6,
+        8,
+        3,
+    )
+    .expect("reference-free calibration");
+    let budget = cal.iterations();
+    assert!(budget > 0);
+    // ...and the budget actually drives the timing protocol on the same
+    // reference-free system.
+    let timed = RkSolver::new(0)
+        .solve(&sys, &SolveOptions::default().with_fixed_iterations(budget));
+    assert_eq!(timed.iterations, budget);
+}
+
+#[test]
+fn all_divergent_calibration_is_a_typed_error() {
+    let sys = DatasetBuilder::new(200, 10).seed(2).consistent();
+    let opts = SolveOptions {
+        divergence_factor: 1e4,
+        max_iterations: 50_000,
+        ..Default::default()
+    };
+    // alpha = 3.9 with large blocks diverges for every seed (Fig. 10b).
+    let err = calibrate_iterations(|s| RkabSolver::new(s, 4, 100, 3.9), &sys, &opts, 3)
+        .err()
+        .expect("all-divergent calibration must be an error, not a zero budget");
+    assert!(matches!(err, Error::CalibrationFailed { diverged: 3, .. }), "{err:?}");
+}
