@@ -1,21 +1,33 @@
 //! Micro-benchmarks of the L3 hot paths feeding the cost model and the
 //! §Perf pass: dot/axpy (the per-iteration projection), row sampling
 //! (alias vs CDF), gather-add, atomic CAS-add, memcpy, barrier crossings,
-//! and the batch-serving fan-out (batched vs looped single solves).
-//! Prints ns/op and effective GB/s.
+//! the batch-serving fan-out (batched vs looped single solves), stop-check
+//! overhead, and telemetry-sink overhead. Prints ns/op and effective GB/s.
+//!
+//! **Perf-tracking CI lane:** this harness is also the `bench-smoke` CI
+//! job's workload. `BENCH_SMOKE=1` shrinks every problem size/iteration
+//! count (~1 min wall instead of many), and the run always writes a
+//! machine-readable `BENCH_micro.json` (override the path with
+//! `BENCH_JSON=...`): every table row (per-op ns/iter) plus the
+//! bitwise-equivalence flags. The process **exits nonzero when any
+//! equivalence check fails**, so fused-kernel or batching drift cannot
+//! merge green; timing ratios are printed but never gate (CI runners are
+//! too noisy to fail on perf numbers alone).
 
 use kaczmarz::batch::{BatchJob, BatchSolver};
 use kaczmarz::data::{DatasetBuilder, LinearSystem};
 use kaczmarz::linalg::vector::{axpy, dot};
 use kaczmarz::linalg::{gemv, gemv_block_into, Matrix};
-use kaczmarz::metrics::Stopwatch;
+use kaczmarz::metrics::{ProgressSink, Stopwatch};
 use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::parallel::WorkerPool;
-use kaczmarz::report::Table;
+use kaczmarz::report::{json_string, Table};
 use kaczmarz::rng::{AliasTable, DiscreteDistribution, Mt19937};
 use kaczmarz::solvers::rk::RkSolver;
 use kaczmarz::solvers::rkab::block_sweep;
 use kaczmarz::solvers::{RowSampler, SamplingScheme, SolveOptions, Solver};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 fn bench<F: FnMut()>(mut f: F, iters: usize) -> f64 {
     // Warmup.
@@ -30,17 +42,28 @@ fn bench<F: FnMut()>(mut f: F, iters: usize) -> f64 {
 }
 
 fn main() {
+    // BENCH_SMOKE=1: the CI-sized run (reduced sizes, same coverage).
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    // Iteration-count divisor for timing loops in smoke mode.
+    let shrink = if smoke { 10 } else { 1 };
+    if smoke {
+        eprintln!("BENCH_SMOKE=1: reduced problem sizes (perf-tracking CI lane)");
+    }
+
     let mut t = Table::new(
         "L3 hot-path micro-benchmarks",
         &["operation", "n", "ns/op", "GB/s (eff)"],
     );
+    // Equivalence gates: (name, pass). Any `false` fails the process at the
+    // end — these are bit-exactness claims, not timing claims.
+    let mut checks: Vec<(String, bool)> = Vec::new();
 
     let mut rng = Mt19937::new(1);
     for n in [50usize, 200, 1000, 4000, 10000] {
         let a: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
         let b: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
         let mut y = vec![0.0f64; n];
-        let iters = (50_000_000 / n).max(100);
+        let iters = (50_000_000 / shrink / n).max(100);
 
         let td = bench(
             || {
@@ -70,14 +93,16 @@ fn main() {
     }
 
     // Full projection on a real system (what CostModel::t_proj measures).
-    let sys = DatasetBuilder::new(4000, 1000).seed(3).consistent();
-    let r = kaczmarz::solvers::rk::RkSolver::new(1)
-        .solve(&sys, &SolveOptions::default().with_fixed_iterations(20_000));
+    let (proj_m, proj_n, proj_iters) =
+        if smoke { (1200usize, 300usize, 4_000usize) } else { (4000, 1000, 20_000) };
+    let sys = DatasetBuilder::new(proj_m, proj_n).seed(3).consistent();
+    let r = RkSolver::new(1)
+        .solve(&sys, &SolveOptions::default().with_fixed_iterations(proj_iters));
     t.row(vec![
-        "RK projection (4000x1000 system)".into(),
-        "1000".into(),
+        format!("RK projection ({proj_m}x{proj_n} system)"),
+        proj_n.to_string(),
         format!("{:.1}", r.seconds / r.iterations as f64 * 1e9),
-        format!("{:.1}", 16_000.0 / (r.seconds / r.iterations as f64) / 1e9),
+        format!("{:.1}", 16.0 * proj_n as f64 / (r.seconds / r.iterations as f64) / 1e9),
     ]);
 
     // RKAB in-block sweep: the real fused kernel (solvers::rkab::block_sweep,
@@ -90,7 +115,7 @@ fn main() {
     {
         let n = sys.cols();
         for bs in [1usize, 8, 32, 128, 512] {
-            let sweeps = (2_000_000 / (bs * n).max(1)).max(10);
+            let sweeps = (2_000_000 / shrink / (bs * n).max(1)).max(10);
             let alpha = 1.0;
 
             // Row-loop baseline (the seed's formulation).
@@ -144,18 +169,48 @@ fn main() {
                 per_row_fused / per_row_base
             );
         }
+
+        // Bitwise equivalence: the fused kernel must reproduce the exact
+        // bits of the dot-then-axpy formulation (same sampled rows, same
+        // FP operation order). Drift here is a silent numerics change in
+        // the RKAB hot path — this is the check that gates the CI lane.
+        {
+            let bs = 32usize;
+            let mut s_base = RowSampler::new(&sys, SamplingScheme::FullMatrix, 0, 1, 99);
+            let mut s_fused = RowSampler::new(&sys, SamplingScheme::FullMatrix, 0, 1, 99);
+            let mut idx_base: Vec<usize> = Vec::with_capacity(bs);
+            let mut idx_fused: Vec<usize> = Vec::with_capacity(bs);
+            let mut v_base = vec![0.0f64; n];
+            let mut v_fused = vec![0.0f64; n];
+            for _ in 0..50 {
+                idx_base.clear();
+                for _ in 0..bs {
+                    idx_base.push(s_base.sample());
+                }
+                for &i in &idx_base {
+                    let row = sys.a.row(i);
+                    let scale = (sys.b[i] - dot(row, &v_base)) / sys.row_norms_sq[i];
+                    axpy(scale, row, &mut v_base);
+                }
+                block_sweep(&sys, &mut s_fused, bs, 1.0, &mut v_fused, &mut idx_fused);
+            }
+            let bitwise = idx_base == idx_fused
+                && v_base.iter().zip(&v_fused).all(|(a, b)| a.to_bits() == b.to_bits());
+            println!("[rkab-sweep] fused bitwise-equal to row loop = {bitwise} (must be true)");
+            checks.push(("rkab fused sweep bitwise vs row loop".into(), bitwise));
+        }
     }
 
     // Cache-blocked gemv on a wide matrix (x no longer fits L1): panel
     // kernel vs the straight row-dot loop.
     {
-        let (m, n) = (512usize, 8192usize);
+        let (m, n) = if smoke { (256usize, 2048usize) } else { (512, 8192) };
         let mut rngw = Mt19937::new(23);
         let data: Vec<f64> = (0..m * n).map(|_| rngw.next_f64() - 0.5).collect();
         let a = Matrix::from_vec(m, n, data).unwrap();
         let x: Vec<f64> = (0..n).map(|_| rngw.next_f64() - 0.5).collect();
         let mut y = vec![0.0f64; m];
-        let iters = 50;
+        let iters = if smoke { 20 } else { 50 };
         let t_naive = bench(
             || {
                 for (yi, row) in y.iter_mut().zip(a.rows_iter()) {
@@ -192,14 +247,31 @@ fn main() {
     let alias = AliasTable::new(weights);
     let cdf = DiscreteDistribution::new(weights);
     let mut rng2 = Mt19937::new(9);
-    let ts = bench(|| {
-        std::hint::black_box(alias.sample(&mut rng2));
-    }, 2_000_000);
-    t.row(vec!["sample (alias)".into(), "m=4000".into(), format!("{:.1}", ts * 1e9), "-".into()]);
-    let ts = bench(|| {
-        std::hint::black_box(cdf.sample(&mut rng2));
-    }, 2_000_000);
-    t.row(vec!["sample (cdf bsearch)".into(), "m=4000".into(), format!("{:.1}", ts * 1e9), "-".into()]);
+    let sample_iters = 2_000_000 / shrink;
+    let ts = bench(
+        || {
+            std::hint::black_box(alias.sample(&mut rng2));
+        },
+        sample_iters,
+    );
+    t.row(vec![
+        "sample (alias)".into(),
+        format!("m={}", sys.rows()),
+        format!("{:.1}", ts * 1e9),
+        "-".into(),
+    ]);
+    let ts = bench(
+        || {
+            std::hint::black_box(cdf.sample(&mut rng2));
+        },
+        sample_iters,
+    );
+    t.row(vec![
+        "sample (cdf bsearch)".into(),
+        format!("m={}", sys.rows()),
+        format!("{:.1}", ts * 1e9),
+        "-".into(),
+    ]);
 
     // Gather primitives at n = 1000.
     let n = 1000;
@@ -212,7 +284,7 @@ fn main() {
             }
             std::hint::black_box(&mut dst);
         },
-        50_000,
+        50_000 / shrink,
     );
     t.row(vec![
         "gather add (critical body)".into(),
@@ -227,7 +299,7 @@ fn main() {
                 av.add(i, 1.0);
             }
         },
-        20_000,
+        20_000 / shrink,
     );
     t.row(vec![
         "atomic CAS add".into(),
@@ -240,7 +312,7 @@ fn main() {
             dst.copy_from_slice(&src);
             std::hint::black_box(&mut dst);
         },
-        100_000,
+        100_000 / shrink,
     );
     t.row(vec![
         "memcpy".into(),
@@ -254,7 +326,7 @@ fn main() {
     // warm-up dispatch first so worker spawning stays off the clock.
     for q in [2usize, 4] {
         let barrier = SpinBarrier::new(q);
-        let rounds = 20_000usize;
+        let rounds = 20_000usize / shrink;
         let pool = WorkerPool::new();
         pool.run(q, |_| {});
         let sw = Stopwatch::start();
@@ -271,14 +343,15 @@ fn main() {
         ]);
     }
 
-    // Batch serving: 16 right-hand sides against one system, solved by a
-    // loop of independent single solves (each paying system construction:
+    // Batch serving: right-hand sides against one system, solved by a loop
+    // of independent single solves (each paying system construction:
     // matrix copy + row-norm recompute) vs one BatchSolver dispatch (lane
     // state prepared once, jobs fanned across the pool). The batched path
     // must be at least as fast and bitwise-equal to the loop.
     {
-        let serve = DatasetBuilder::new(1500, 250).seed(41).consistent();
-        let n_jobs = 16usize;
+        let (bm, bn, n_jobs, b_iters) =
+            if smoke { (600usize, 120usize, 8usize, 800usize) } else { (1500, 250, 16, 2000) };
+        let serve = DatasetBuilder::new(bm, bn).seed(41).consistent();
         let mut rngb = Mt19937::new(29);
         let jobs: Vec<BatchJob> = (0..n_jobs)
             .map(|_| {
@@ -287,7 +360,7 @@ fn main() {
                 BatchJob::new(gemv(&serve.a, &x).unwrap()).with_reference(x)
             })
             .collect();
-        let opts = SolveOptions::default().with_fixed_iterations(2000);
+        let opts = SolveOptions::default().with_fixed_iterations(b_iters);
         let seed = 7;
 
         // Looped baseline: build + solve each request independently.
@@ -330,19 +403,22 @@ fn main() {
              bitwise-equal = {bitwise} (must be true)",
             t_batch / t_loop
         );
+        checks.push(("batch serve bitwise vs looped solves".into(), bitwise));
     }
 
-    // Stopping-test overhead on a serving-sized (2048 x 512) system. The
-    // reference-error test is O(n) per iteration; the residual test is a
-    // full O(m·n) gemv per *check*, so `check_every` is the amortization
-    // lever. Every run executes exactly the same 512 iterations (tolerance
-    // 0 is unsatisfiable, the cap stops the run) with the stopping
-    // machinery live; the fixed-budget row is the no-stopping floor.
+    // Stopping-test and telemetry-sink overhead on a serving-sized system.
+    // The reference-error test is O(n) per iteration; the residual test is
+    // a full O(m·n) gemv per *check*, so `check_every` is the amortization
+    // lever; a progress sink piggybacks on those same checkpoints, so its
+    // overhead must be noise ("zero new GEMVs" as a number, not a comment).
+    // Every run executes exactly the same iterations (tolerance 0 is
+    // unsatisfiable, the cap stops the run) with the stopping machinery
+    // live; the fixed-budget row is the no-stopping floor.
     {
-        let (m, n) = (2048usize, 512usize);
+        let (m, n) = if smoke { (1024usize, 256usize) } else { (2048, 512) };
         let sys = DatasetBuilder::new(m, n).seed(47).consistent();
         let iters = 512usize;
-        let mut run = |label: String, opts: SolveOptions| -> f64 {
+        let run = |t: &mut Table, label: String, opts: SolveOptions| -> f64 {
             let r = RkSolver::new(5).solve(&sys, &opts);
             assert_eq!(r.iterations, iters, "{label}: must run the full cap");
             assert!(!r.converged, "{label}: tolerance 0 is unsatisfiable");
@@ -351,15 +427,18 @@ fn main() {
             per_iter
         };
         let t_off = run(
+            &mut t,
             format!("stopping off, fixed budget ({m}x{n})"),
             SolveOptions::default().with_fixed_iterations(iters),
         );
         let t_ref = run(
+            &mut t,
             format!("stop ref-error every iter ({m}x{n})"),
             SolveOptions::default().with_tolerance(0.0).with_max_iterations(iters),
         );
         for ce in [1usize, 32, 256] {
             let t_res = run(
+                &mut t,
                 format!("stop residual ce={ce} ({m}x{n})"),
                 SolveOptions::default()
                     .with_residual_stopping(0.0, ce)
@@ -372,8 +451,83 @@ fn main() {
                 t_res / t_off
             );
         }
+
+        // Telemetry-sink overhead at the same checkpoints: no sink vs
+        // callback vs bounded channel, residual stopping at ce ∈ {32, 256}.
+        // Expected samples per run: iters/ce + 1 (k = 0 included).
+        for ce in [32usize, 256] {
+            let base = SolveOptions::default()
+                .with_residual_stopping(0.0, ce)
+                .with_max_iterations(iters);
+            let t_none = run(&mut t, format!("sink none ce={ce} ({m}x{n})"), base.clone());
+
+            let count = Arc::new(AtomicUsize::new(0));
+            let counter = Arc::clone(&count);
+            let cb = ProgressSink::callback(move |s| {
+                std::hint::black_box(s.residual);
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            let t_cb = run(
+                &mut t,
+                format!("sink callback ce={ce} ({m}x{n})"),
+                base.clone().with_progress(cb),
+            );
+
+            let (chan, rx) = ProgressSink::bounded(8);
+            let t_ch = run(
+                &mut t,
+                format!("sink channel ce={ce} ({m}x{n})"),
+                base.with_progress(chan),
+            );
+
+            println!(
+                "[sink-overhead ce={ce}] callback/none = {:.3}, channel/none = {:.3} \
+                 (both must be ~1.0: sinks reuse the checkpoint GEMV)",
+                t_cb / t_none,
+                t_ch / t_none
+            );
+            // The sample *count* is exact arithmetic, so it does gate: one
+            // sample per checkpoint (k = 0, ce, ..., iters), and the
+            // channel's queued + dropped tally must conserve every emission.
+            let expected = iters / ce + 1;
+            let cb_seen = count.load(Ordering::Relaxed);
+            let ch_seen = rx.drain().len() + rx.dropped() as usize;
+            checks.push((
+                format!("sink callback sample count ce={ce}"),
+                cb_seen == expected,
+            ));
+            checks.push((
+                format!("sink channel sample count ce={ce} (queued + dropped)"),
+                ch_seen == expected,
+            ));
+        }
     }
 
     println!("{}", t.to_markdown());
     println!("{}", t.to_text());
+
+    // Machine-readable output for the perf-tracking CI lane: every table
+    // row plus the equivalence flags, as one JSON document.
+    let json_path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".into());
+    let mut j = String::from("{\n");
+    j.push_str(&format!("\"bench\": {},\n", json_string("bench_micro_hotpath")));
+    j.push_str(&format!("\"smoke\": {},\n", smoke));
+    j.push_str(&format!("\"rows\": {},\n", t.to_json()));
+    j.push_str("\"checks\": [");
+    for (i, (name, pass)) in checks.iter().enumerate() {
+        if i > 0 {
+            j.push(',');
+        }
+        j.push_str(&format!("\n  {{\"name\": {}, \"pass\": {}}}", json_string(name), pass));
+    }
+    j.push_str("\n]\n}\n");
+    std::fs::write(&json_path, &j).expect("write bench JSON");
+    eprintln!("wrote {json_path}");
+
+    let failed: Vec<&str> =
+        checks.iter().filter(|(_, ok)| !ok).map(|(name, _)| name.as_str()).collect();
+    if !failed.is_empty() {
+        eprintln!("EQUIVALENCE CHECK FAILURES: {failed:?}");
+        std::process::exit(1);
+    }
 }

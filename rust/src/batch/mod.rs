@@ -51,6 +51,20 @@
 //! a reference only the residual channel `‖Ax - b‖` is recorded — see
 //! [`SolveReport::residual_history`].
 //!
+//! # Live telemetry
+//!
+//! Curves arrive *after* a job returns; long-running jobs can also be
+//! watched **while they run**. Attach a [`crate::metrics::ProgressSink`]
+//! per job — [`BatchJob::with_progress`] on the batch side, a
+//! `SolveOptions::with_progress` per pushed job on the queue side — and
+//! each job streams its `(k, residual, elapsed)` samples to its own sink
+//! from the solve's amortized checkpoints (residual stopping checks and/or
+//! history samples; no new GEMVs). Sinks are non-blocking by construction
+//! (the bounded-channel flavor drops oldest rather than stalling a lane),
+//! so 16 receivers can watch 16 lanes converge concurrently without
+//! perturbing the batch: results stay bitwise identical to unwatched runs
+//! (`tests/telemetry_streaming.rs`).
+//!
 //! # Determinism guarantee
 //!
 //! A batched solve is *bitwise identical* to running the same jobs one at a

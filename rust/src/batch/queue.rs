@@ -17,6 +17,14 @@ use std::sync::Arc;
 /// order, one [`SolveReport`] per job, so a diverging or slow job never
 /// hides the outcomes of its neighbours.
 ///
+/// Because every job carries its own [`SolveOptions`], **per-job live
+/// telemetry** comes free: push a job whose options hold a
+/// [`ProgressSink`](crate::metrics::ProgressSink)
+/// (`SolveOptions::with_progress`) and watch that job's residual stream on
+/// the matching receiver while the queue drains — each job's samples land
+/// on its own channel, demultiplexed by construction (see the
+/// [module docs](crate::batch) and `tests/telemetry_streaming.rs`).
+///
 /// # Example
 ///
 /// ```

@@ -3,6 +3,7 @@
 use super::{default_workers, fan_out, SolveReport};
 use crate::data::LinearSystem;
 use crate::error::{Error, Result};
+use crate::metrics::ProgressSink;
 use crate::parallel::pool::WorkerPool;
 use crate::solvers::{SolveOptions, Solver};
 use std::sync::{Arc, Mutex};
@@ -21,18 +22,33 @@ pub struct BatchJob {
     /// either way (reference-free histories record the residual channel
     /// only). [`BatchSolver::solve_many`] validates this up front.
     pub x_ref: Option<Vec<f64>>,
+    /// Per-job live telemetry sink: when set, *this job's* solve streams
+    /// its convergence [`Sample`](crate::metrics::Sample)s here (overriding
+    /// any batch-wide sink in the shared [`SolveOptions`]), so a client can
+    /// watch every lane of a batch converge concurrently — one bounded
+    /// channel per job demultiplexes the streams for free.
+    pub progress: Option<ProgressSink>,
 }
 
 impl BatchJob {
     /// Job with an unknown solution (requires reference-free options:
     /// residual stopping or a fixed iteration budget).
     pub fn new(rhs: Vec<f64>) -> Self {
-        BatchJob { rhs, x_ref: None }
+        BatchJob { rhs, x_ref: None, progress: None }
     }
 
     /// Attach the reference solution for error-based stopping.
     pub fn with_reference(mut self, x_ref: Vec<f64>) -> Self {
         self.x_ref = Some(x_ref);
+        self
+    }
+
+    /// Stream this job's live convergence samples to `sink` (see
+    /// [`BatchJob::progress`]). Pair with residual stopping or a
+    /// `history_step` in the batch options so the solve has telemetry
+    /// checkpoints to stream from.
+    pub fn with_progress(mut self, sink: ProgressSink) -> Self {
+        self.progress = Some(sink);
         self
     }
 }
@@ -145,7 +161,17 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
             sys.x_true = job.x_ref.clone();
             sys.x_ls = None;
             sys.consistent = true;
-            let result = self.solver.solve(&sys, opts);
+            // A per-job sink overrides the (shared) batch options so each
+            // job's telemetry lands on its own channel. The clone is cheap
+            // (options are a handful of scalars plus two Arcs) and happens
+            // only for jobs that asked to be watched.
+            let result = match &job.progress {
+                Some(sink) => {
+                    let watched = opts.clone().with_progress(sink.clone());
+                    self.solver.solve(&sys, &watched)
+                }
+                None => self.solver.solve(&sys, opts),
+            };
             let residual_norm = sys.residual_norm(&result.x);
             SolveReport { job: j, solver: self.solver.name(), result, residual_norm }
         }))
@@ -219,6 +245,34 @@ mod tests {
         let reports = batch.solve_many(&jobs, &opts).unwrap();
         assert_eq!(reports[0].result.iterations, 50);
         assert!(reports[0].residual_norm.is_finite());
+    }
+
+    #[test]
+    fn per_job_sinks_demultiplex_batch_telemetry() {
+        let system = DatasetBuilder::new(150, 8).seed(6).consistent();
+        let mut rxs = Vec::new();
+        let jobs: Vec<BatchJob> = jobs_for(&system, 3)
+            .into_iter()
+            .map(|j| {
+                let (sink, rx) = ProgressSink::bounded(64);
+                rxs.push(rx);
+                j.with_progress(sink)
+            })
+            .collect();
+        let opts = SolveOptions::default().with_fixed_iterations(64).with_history_step(16);
+        let batch = BatchSolver::new(&system, RkSolver::new(3)).with_workers(2);
+        let reports = batch.solve_many(&jobs, &opts).unwrap();
+        for (j, rx) in rxs.iter().enumerate() {
+            let samples = rx.drain();
+            let h = &reports[j].result.history;
+            // Each job's channel carries exactly its own curve (correct
+            // demultiplexing even with lanes stealing jobs concurrently).
+            assert_eq!(samples.len(), h.len(), "job {j}");
+            for (s, (k, r)) in samples.iter().zip(h.iterations.iter().zip(&h.residuals)) {
+                assert_eq!(s.k, *k, "job {j}");
+                assert_eq!(s.residual.to_bits(), r.to_bits(), "job {j}");
+            }
+        }
     }
 
     #[test]

@@ -4,22 +4,45 @@
 //!
 //! The tuner probes candidate block sizes with a *fixed row budget* (so
 //! every probe does the same amount of raw work), scores each candidate by
-//! error-decay per modeled second
+//! metric-decay per modeled second
 //!
 //! ```text
-//! score(bs) = ln(err_0 / err_bs) / (iterations * T_iter(q, bs))
+//! score(bs) = ln(metric_0 / metric_bs) / (iterations * T_iter(q, bs))
 //! ```
 //!
 //! and returns the argmax. The probe honors both effects the paper
 //! identified: larger bs amortizes the gather (numerator grows per second)
 //! but wastes rows past bs ≈ n (numerator stalls), and under partitioned
 //! sampling the per-worker information limit (m/q rows) caps useful bs.
+//!
+//! Two scorers share that protocol:
+//!
+//! - [`autotune_block_size`] — the paper's metric `‖x - x*‖²`
+//!   ([`LinearSystem::error_sq`]): bit-compatible with the reproduction
+//!   experiments, but it needs a known reference solution, which serving
+//!   systems do not have;
+//! - [`autotune_block_size_residual`] — the **reference-free** scorer:
+//!   probes run with a telemetry-grade history (`history_step` =
+//!   probe length), and the decay is read from each probe's *own*
+//!   `StopCheck` residual samples (`‖b‖` at `x^(0) = 0` down to
+//!   `‖A x - b‖` after the probe) instead of `system.error_sq`. This is
+//!   the tuner a production RKAB deployment can actually run — on
+//!   consistent systems it agrees with the reference scorer (equal probe
+//!   trajectories, monotone-related metrics; `tests/telemetry_streaming.rs`
+//!   pins the agreement within seed noise).
+//!
+//! Candidate hygiene: candidates (default `{n/10, n/4, n/2, n, 2n}` *and*
+//! user-supplied sets) are clamped to ≥ 1 and deduplicated after clamping
+//! (`n/10` is 0 below n = 10, and clamping can alias small candidates); an
+//! empty candidate set is a typed [`Error::InvalidArgument`], never a
+//! divide-by-zero probe.
 
 use super::timing::CostModel;
 use crate::data::LinearSystem;
+use crate::error::{Error, Result};
 use crate::solvers::rkab::RkabSolver;
 use crate::solvers::sampling::SamplingScheme;
-use crate::solvers::{SolveOptions, Solver};
+use crate::solvers::{SolveOptions, SolveResult, Solver};
 
 /// One probe outcome.
 #[derive(Clone, Debug)]
@@ -28,11 +51,13 @@ pub struct ProbeResult {
     pub block_size: usize,
     /// Probe iterations run (row_budget / (q*bs)).
     pub iterations: usize,
-    /// Squared error after the probe.
-    pub err_sq: f64,
+    /// Squared value of the scored metric after the probe: the reference
+    /// error `‖x - x*‖²` under [`autotune_block_size`], the residual
+    /// `‖Ax - b‖²` under [`autotune_block_size_residual`].
+    pub metric_sq: f64,
     /// Modeled wall time of the probe.
     pub modeled_seconds: f64,
-    /// Error-decay rate per modeled second (higher = better).
+    /// Metric-decay rate per modeled second (higher = better).
     pub score: f64,
 }
 
@@ -47,7 +72,10 @@ pub struct AutotuneConfig {
     pub scheme: SamplingScheme,
     /// Rows each probe may consume in total (default 24 * n * q).
     pub row_budget: Option<usize>,
-    /// Candidate block sizes (default {n/10, n/4, n/2, n, 2n} clamped).
+    /// Candidate block sizes (default {n/10, n/4, n/2, n, 2n}); clamped to
+    /// ≥ 1 and deduplicated before probing, so a small-n default set (or a
+    /// user set containing 0) degrades gracefully instead of dividing by
+    /// zero.
     pub candidates: Option<Vec<usize>>,
     /// RNG seed for the probes.
     pub seed: u32,
@@ -67,45 +95,108 @@ impl AutotuneConfig {
     }
 }
 
-/// Probe all candidates and return (best block size, all probe results).
+/// The probed candidate set: defaults or user-supplied, clamped to ≥ 1,
+/// deduplicated after clamping (order-preserving, so the probe sequence —
+/// and therefore the scores — stay bit-compatible for already-valid sets).
+fn candidate_set(n: usize, cfg: &AutotuneConfig) -> Result<Vec<usize>> {
+    let raw = cfg
+        .candidates
+        .clone()
+        .unwrap_or_else(|| vec![n / 10, n / 4, n / 2, n, 2 * n]);
+    let mut seen = std::collections::HashSet::new();
+    let candidates: Vec<usize> =
+        raw.into_iter().map(|b| b.max(1)).filter(|b| seen.insert(*b)).collect();
+    if candidates.is_empty() {
+        return Err(Error::InvalidArgument(
+            "autotune: empty block-size candidate set (supply at least one candidate >= 1)"
+                .to_string(),
+        ));
+    }
+    Ok(candidates)
+}
+
+/// Shared probe driver: run every candidate under the fixed row budget and
+/// score it by the decay of the metric `metrics` extracts — which returns
+/// `(metric_0², metric_end²)` for one finished probe.
+fn probe_candidates<F>(
+    system: &LinearSystem,
+    model: &CostModel,
+    cfg: &AutotuneConfig,
+    history_samples: bool,
+    metrics: F,
+) -> Result<(usize, Vec<ProbeResult>)>
+where
+    F: Fn(&SolveResult) -> (f64, f64),
+{
+    let n = system.cols();
+    let q = cfg.q;
+    let budget = cfg.row_budget.unwrap_or(24 * n * q);
+    let candidates = candidate_set(n, cfg)?;
+
+    let mut results = Vec::with_capacity(candidates.len());
+    for &bs in &candidates {
+        let iterations = (budget / (q * bs)).max(1);
+        let mut opts = SolveOptions::default().with_fixed_iterations(iterations);
+        if history_samples {
+            // Bracket the probe with exactly two StopCheck samples (k = 0
+            // and k = iterations): the residual scorer reads its metric
+            // from the probe's own telemetry instead of the reference.
+            opts = opts.with_history_step(iterations);
+        }
+        let r = RkabSolver::new(cfg.seed, q, bs, cfg.alpha)
+            .with_scheme(cfg.scheme)
+            .solve(system, &opts);
+        let (m0_sq, metric_sq) = metrics(&r);
+        let (m0_sq, metric_sq) = (m0_sq.max(1e-300), metric_sq.max(1e-300));
+        let modeled_seconds = iterations as f64 * model.rkab_iteration(q, bs);
+        // ln of the *norm* ratio = 0.5 ln of the squared ratio.
+        let decay = 0.5 * (m0_sq / metric_sq).ln();
+        let score = if decay > 0.0 { decay / modeled_seconds } else { f64::NEG_INFINITY };
+        results.push(ProbeResult { block_size: bs, iterations, metric_sq, modeled_seconds, score });
+    }
+    let best = results
+        .iter()
+        .max_by(|a, b| a.score.total_cmp(&b.score))
+        .map(|r| r.block_size)
+        .unwrap_or(n);
+    Ok((best, results))
+}
+
+/// Probe all candidates, scoring by the paper's reference-error metric, and
+/// return (best block size, all probe results). Bit-compatible with the
+/// reproduction experiments — and like them, it requires the system to
+/// carry a reference solution. For serving systems (no reference), use
+/// [`autotune_block_size_residual`].
 pub fn autotune_block_size(
     system: &LinearSystem,
     model: &CostModel,
     cfg: &AutotuneConfig,
-) -> (usize, Vec<ProbeResult>) {
+) -> Result<(usize, Vec<ProbeResult>)> {
     let n = system.cols();
-    let q = cfg.q;
-    let budget = cfg.row_budget.unwrap_or(24 * n * q);
-    let candidates = cfg.candidates.clone().unwrap_or_else(|| {
-        let mut c: Vec<usize> = [n / 10, n / 4, n / 2, n, 2 * n]
-            .into_iter()
-            .map(|b| b.max(1))
-            .collect();
-        c.dedup();
-        c
-    });
+    let err0 = system.error_sq(&vec![0.0; n]);
+    probe_candidates(system, model, cfg, false, |r| (err0, system.error_sq(&r.x)))
+}
 
-    let mut results = Vec::with_capacity(candidates.len());
-    let err0 = system.error_sq(&vec![0.0; n]).max(1e-300);
-    for &bs in &candidates {
-        let iterations = (budget / (q * bs)).max(1);
-        let opts = SolveOptions::default().with_fixed_iterations(iterations);
-        let r = RkabSolver::new(cfg.seed, q, bs, cfg.alpha)
-            .with_scheme(cfg.scheme)
-            .solve(system, &opts);
-        let err_sq = system.error_sq(&r.x).max(1e-300);
-        let modeled_seconds = iterations as f64 * model.rkab_iteration(q, bs);
-        // ln of the *norm* ratio = 0.5 ln of the squared ratio.
-        let decay = 0.5 * (err0 / err_sq).ln();
-        let score = if decay > 0.0 { decay / modeled_seconds } else { f64::NEG_INFINITY };
-        results.push(ProbeResult { block_size: bs, iterations, err_sq, modeled_seconds, score });
-    }
-    let best = results
-        .iter()
-        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
-        .map(|r| r.block_size)
-        .unwrap_or(n);
-    (best, results)
+/// Probe all candidates, scoring by **residual** decay per modeled second —
+/// the reference-free tuner. The same fixed-row-budget protocol as
+/// [`autotune_block_size`], but each probe's metric is read from its own
+/// `StopCheck` history samples (`‖A x^(k)- b‖` at `k = 0` and at the probe
+/// end), so it runs on real inconsistent workloads where no reference
+/// solution exists. On consistent systems it agrees with the
+/// reference-error scorer within seed noise (the two metrics decay
+/// together); on inconsistent systems the residual is the only measurable
+/// quantity, and its decay toward the least-squares floor is exactly what
+/// Moorman et al. (arXiv:2002.04126) monitor for RKA-family methods.
+pub fn autotune_block_size_residual(
+    system: &LinearSystem,
+    model: &CostModel,
+    cfg: &AutotuneConfig,
+) -> Result<(usize, Vec<ProbeResult>)> {
+    probe_candidates(system, model, cfg, true, |r| {
+        let first = r.history.residuals.first().copied().unwrap_or(0.0);
+        let last = r.history.residuals.last().copied().unwrap_or(0.0);
+        (first * first, last * last)
+    })
 }
 
 #[cfg(test)]
@@ -120,7 +211,8 @@ mod tests {
         // constants; the point is it avoids tiny and huge blocks).
         let sys = DatasetBuilder::new(2000, 100).seed(1).consistent();
         let model = CostModel::calibrate(&sys);
-        let (best, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(4));
+        let (best, results) =
+            autotune_block_size(&sys, &model, &AutotuneConfig::new(4)).unwrap();
         assert!(results.len() >= 4);
         assert!(
             best >= 25 && best <= 200,
@@ -133,7 +225,7 @@ mod tests {
     fn tuner_scores_tiny_blocks_worse() {
         let sys = DatasetBuilder::new(2000, 100).seed(2).consistent();
         let model = CostModel::calibrate(&sys);
-        let (_, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(8));
+        let (_, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(8)).unwrap();
         let score_of = |bs: usize| {
             results.iter().find(|r| r.block_size == bs).map(|r| r.score).unwrap()
         };
@@ -146,10 +238,70 @@ mod tests {
         let sys = DatasetBuilder::new(500, 50).seed(3).consistent();
         let model = CostModel::calibrate(&sys);
         let cfg = AutotuneConfig { row_budget: Some(4000), ..AutotuneConfig::new(2) };
-        let (_, results) = autotune_block_size(&sys, &model, &cfg);
+        let (_, results) = autotune_block_size(&sys, &model, &cfg).unwrap();
         for r in &results {
             let rows = r.iterations * 2 * r.block_size;
             assert!(rows <= 4000 + 2 * r.block_size, "bs {} used {rows}", r.block_size);
         }
+    }
+
+    #[test]
+    fn small_n_default_candidates_are_clamped_and_deduped() {
+        // n = 4: raw defaults {0, 1, 2, 4, 8} — the 0 must become 1, and
+        // the clamp-induced duplicate must collapse, so every probe has a
+        // positive block size and no candidate is probed twice.
+        let sys = DatasetBuilder::new(60, 4).seed(7).consistent();
+        let model = CostModel::calibrate(&sys);
+        let (best, results) = autotune_block_size(&sys, &model, &AutotuneConfig::new(2)).unwrap();
+        assert!(best >= 1);
+        let sizes: Vec<usize> = results.iter().map(|r| r.block_size).collect();
+        assert!(sizes.iter().all(|&b| b >= 1), "{sizes:?}");
+        let mut deduped = sizes.clone();
+        deduped.dedup();
+        assert_eq!(sizes, deduped, "duplicate candidates probed");
+    }
+
+    #[test]
+    fn user_candidates_with_zero_are_clamped_not_divided_by() {
+        let sys = DatasetBuilder::new(100, 8).seed(8).consistent();
+        let model = CostModel::calibrate(&sys);
+        let cfg = AutotuneConfig {
+            candidates: Some(vec![0, 8, 8, 0]),
+            row_budget: Some(1000),
+            ..AutotuneConfig::new(2)
+        };
+        // 0 clamps to 1; duplicates (including the two clamped zeros)
+        // collapse: exactly {1, 8} is probed, in that order.
+        let (_, results) = autotune_block_size(&sys, &model, &cfg).unwrap();
+        let sizes: Vec<usize> = results.iter().map(|r| r.block_size).collect();
+        assert_eq!(sizes, vec![1, 8]);
+    }
+
+    #[test]
+    fn empty_candidate_set_is_a_typed_error() {
+        let sys = DatasetBuilder::new(100, 8).seed(9).consistent();
+        let model = CostModel::calibrate(&sys);
+        let cfg = AutotuneConfig { candidates: Some(vec![]), ..AutotuneConfig::new(2) };
+        let err = autotune_block_size(&sys, &model, &cfg).err().expect("must be rejected");
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+        let err =
+            autotune_block_size_residual(&sys, &model, &cfg).err().expect("must be rejected");
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+    }
+
+    #[test]
+    fn residual_tuner_runs_without_any_reference_solution() {
+        // A serving-shaped system: nobody knows x*. error_sq would panic,
+        // so a clean pass proves the scorer never touched the reference.
+        let src = DatasetBuilder::new(400, 20).seed(11).consistent();
+        let sys = crate::data::LinearSystem::new(src.a.clone(), src.b.clone(), None, true);
+        let model = CostModel::calibrate(&src); // calibration needs no reference either way
+        let (best, results) =
+            autotune_block_size_residual(&sys, &model, &AutotuneConfig::new(2)).unwrap();
+        assert!(best >= 1);
+        assert!(results.iter().all(|r| r.metric_sq.is_finite()));
+        // Consistent system, healthy probes: the residual must decay, so at
+        // least one candidate gets a finite positive score.
+        assert!(results.iter().any(|r| r.score > 0.0), "{results:?}");
     }
 }

@@ -147,7 +147,8 @@ impl Experiment for AblationAutotune {
         let model = CostModel::calibrate(&sys);
 
         let sw = Stopwatch::start();
-        let (best, probes) = autotune_block_size(&sys, &model, &AutotuneConfig::new(q));
+        let (best, probes) = autotune_block_size(&sys, &model, &AutotuneConfig::new(q))
+            .expect("default candidate set is never empty");
         let tune_cost = sw.seconds();
 
         let mut t = Table::new(
@@ -158,7 +159,7 @@ impl Experiment for AblationAutotune {
             t.row(vec![
                 p.block_size.to_string(),
                 p.iterations.to_string(),
-                format!("{:.2e}", p.err_sq),
+                format!("{:.2e}", p.metric_sq),
                 fmt_seconds(p.modeled_seconds),
                 format!("{:.1}", p.score),
             ]);

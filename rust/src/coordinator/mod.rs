@@ -18,7 +18,7 @@ pub mod calibrate;
 pub mod experiments;
 pub mod timing;
 
-pub use autotune::{autotune_block_size, AutotuneConfig};
+pub use autotune::{autotune_block_size, autotune_block_size_residual, AutotuneConfig};
 pub use calibrate::{calibrate_iterations, calibrate_iterations_residual, Calibration};
 pub use timing::CostModel;
 

@@ -6,13 +6,15 @@
 //!                                run one experiment (fig1..fig14, table1/2)
 //!   all [--scale f] [--out dir]  run the full evaluation suite
 //!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n]
-//!         [--residual [--check-every k]] [--history step] ...
+//!         [--residual [--check-every k]] [--history step] [--watch] ...
 //!                                one-off solve on a generated system;
 //!                                --residual stops on ‖Ax-b‖² instead of
 //!                                the reference error; --history records
 //!                                the convergence curve every `step`
 //!                                iterations and prints it (error and
-//!                                residual channels)
+//!                                residual channels); --watch streams the
+//!                                dual-channel curve line-by-line *while*
+//!                                the solve runs (live telemetry sink)
 //!   info                         version, core count, artifact status
 
 use kaczmarz::cli::Args;
@@ -145,6 +147,34 @@ fn cmd_solve(args: &Args) {
             args.get_parse("tolerance", 1e-8),
             args.get_parse("check-every", 32usize),
         );
+    }
+
+    // --watch: stream the dual-channel curve line-by-line while the solve
+    // runs, via a callback telemetry sink. Samples flow from the solve's
+    // amortized checkpoints; if the run has none yet (reference-error
+    // stopping with no --history), default to a history step so there is
+    // something to stream.
+    if args.has("watch") {
+        if opts.history_step == 0 && !args.has("residual") {
+            opts = opts.with_history_step(args.get_parse("history", 1000usize));
+        }
+        opts = opts.with_progress(kaczmarz::metrics::ProgressSink::callback(|s| {
+            match s.reference_err {
+                Some(e) => println!(
+                    "watch k={:<10} ||Ax-b||={:<12.6e} ||x-x_ref||={:<12.6e} t={:.3}s",
+                    s.k,
+                    s.residual,
+                    e,
+                    s.elapsed.as_secs_f64()
+                ),
+                None => println!(
+                    "watch k={:<10} ||Ax-b||={:<12.6e} t={:.3}s",
+                    s.k,
+                    s.residual,
+                    s.elapsed.as_secs_f64()
+                ),
+            }
+        }));
     }
 
     let r = match method.as_str() {

@@ -1,4 +1,9 @@
-//! Measurement utilities: timers, step-sampled histories, summary stats.
+//! Measurement utilities: timers, step-sampled histories, summary stats,
+//! and streaming telemetry sinks ([`progress`]).
+
+pub mod progress;
+
+pub use progress::{ProgressReceiver, ProgressSink, Sample};
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,354 @@
+//! Streaming solve telemetry: live convergence samples pushed to a
+//! [`ProgressSink`] *while the solve runs*.
+//!
+//! Histories ([`super::History`]) answer "what did the convergence curve
+//! look like?" — after the solve returns. Long-running serving jobs need the
+//! other tense: *is this RKA job still making progress right now?* Moorman
+//! et al. (arXiv:2002.04126) motivate exactly this — RKA's value on
+//! inconsistent systems is its error-horizon behavior, which an operator can
+//! only act on by watching the residual live. And Liu, Wright & Sridhar's
+//! asynchronous solver (arXiv:1401.4780) dictates the design constraint: a
+//! monitor that stalls workers destroys the async speedup, so a sink must
+//! **never block the iterate**.
+//!
+//! Two sink flavors, both non-blocking by construction:
+//!
+//! - [`ProgressSink::callback`] — the solve invokes your closure inline at
+//!   each telemetry checkpoint. Latency on the solver thread is whatever the
+//!   closure costs, so keep it cheap (push to your own queue, update a
+//!   gauge, print a line);
+//! - [`ProgressSink::bounded`] — a bounded in-memory channel. The solver
+//!   side **drops the oldest sample** when the channel is full (a live
+//!   monitor wants the freshest state, not a complete backlog) and never
+//!   waits for the consumer; the [`ProgressReceiver`] side polls with
+//!   [`ProgressReceiver::try_recv`] / [`ProgressReceiver::recv_timeout`] /
+//!   [`ProgressReceiver::drain`].
+//!
+//! Samples are emitted at the solve's *existing* amortized checkpoints —
+//! history samples (`history_step`) and residual stopping checkpoints
+//! (`check_every`) — where the `O(m·n)` residual GEMV is already being paid,
+//! so attaching a sink adds **zero new GEMVs** to the hot path (the
+//! `bench_micro_hotpath` sink-overhead rows put a number on this). A solve
+//! that never computes a residual (reference-error stopping or a fixed
+//! budget, with `history_step = 0`) has no checkpoints and emits nothing:
+//! pair the sink with residual stopping or a history step.
+//!
+//! # Example
+//!
+//! ```
+//! use kaczmarz::data::DatasetBuilder;
+//! use kaczmarz::metrics::ProgressSink;
+//! use kaczmarz::solvers::{rk::RkSolver, SolveOptions, Solver};
+//!
+//! let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+//! let (sink, rx) = ProgressSink::bounded(64);
+//! let opts = SolveOptions::default()
+//!     .with_residual_stopping(1e-10, 16)
+//!     .with_progress(sink);
+//! let result = RkSolver::new(7).solve(&sys, &opts);
+//! assert!(result.converged);
+//! let samples = rx.drain();
+//! assert!(!samples.is_empty());
+//! // The residual stream decays toward the stopping tolerance.
+//! assert!(samples.last().unwrap().residual < samples[0].residual);
+//! ```
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One live telemetry sample, emitted mid-solve at an amortized checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// Iteration number (for AsyRK: the racy global update count the
+    /// monitor polls — same convention as its history).
+    pub k: usize,
+    /// Residual norm `‖A x^(k) - b‖` — always present; the value the
+    /// checkpoint's GEMV already computed.
+    pub residual: f64,
+    /// Reference-error norm `‖x^(k) - x_ref‖`, only when the system carries
+    /// a reference solution (`None` on serving systems, matching the
+    /// dual-channel [`super::History`] contract).
+    pub reference_err: Option<f64>,
+    /// Wall-clock time since the solve started.
+    pub elapsed: Duration,
+}
+
+/// Shared state of a bounded progress channel.
+struct ChannelShared {
+    state: Mutex<ChannelState>,
+    ready: Condvar,
+}
+
+struct ChannelState {
+    queue: VecDeque<Sample>,
+    capacity: usize,
+    /// Samples discarded because the channel was full (drop-oldest policy).
+    dropped: u64,
+}
+
+#[derive(Clone)]
+enum SinkKind {
+    Callback(Arc<dyn Fn(&Sample) + Send + Sync>),
+    Channel(Arc<ChannelShared>),
+}
+
+/// A non-blocking consumer of live [`Sample`]s, attached to a solve via
+/// [`crate::solvers::SolveOptions::with_progress`].
+///
+/// Cloning a sink is cheap (it is `Arc`-backed) and clones feed the same
+/// destination. A sink never influences the solve it observes: it reads the
+/// iterate's already-computed metrics and cannot stall, reorder, or perturb
+/// the iteration (`tests/telemetry_streaming.rs` pins the solved `x` bitwise
+/// against a sink-free run). See the [module docs](self) for flavors,
+/// checkpoint placement, and the zero-new-GEMV guarantee.
+#[derive(Clone)]
+pub struct ProgressSink {
+    kind: SinkKind,
+}
+
+impl fmt::Debug for ProgressSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kind {
+            SinkKind::Callback(_) => f.write_str("ProgressSink::Callback"),
+            SinkKind::Channel(c) => {
+                let st = c.state.lock().unwrap();
+                f.debug_struct("ProgressSink::Channel")
+                    .field("capacity", &st.capacity)
+                    .field("queued", &st.queue.len())
+                    .field("dropped", &st.dropped)
+                    .finish()
+            }
+        }
+    }
+}
+
+impl ProgressSink {
+    /// Sink that invokes `f` inline on the solver (or monitor) thread at
+    /// each telemetry checkpoint. Keep `f` cheap: its latency is paid by
+    /// the solve — though only at the amortized checkpoints, never per
+    /// iteration.
+    ///
+    /// ```
+    /// use kaczmarz::metrics::ProgressSink;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    /// use std::sync::Arc;
+    ///
+    /// let seen = Arc::new(AtomicUsize::new(0));
+    /// let counter = Arc::clone(&seen);
+    /// let sink = ProgressSink::callback(move |_sample| {
+    ///     counter.fetch_add(1, Ordering::Relaxed);
+    /// });
+    /// // Attach via SolveOptions::with_progress(sink); nothing emitted yet.
+    /// assert_eq!(seen.load(Ordering::Relaxed), 0);
+    /// # let _ = sink;
+    /// ```
+    pub fn callback(f: impl Fn(&Sample) + Send + Sync + 'static) -> ProgressSink {
+        ProgressSink { kind: SinkKind::Callback(Arc::new(f)) }
+    }
+
+    /// Bounded-channel sink: the solve pushes samples, the returned
+    /// [`ProgressReceiver`] polls them from another thread. When the channel
+    /// holds `capacity` samples the **oldest is dropped** to make room —
+    /// the producer never waits, so a slow (or absent) consumer cannot
+    /// stall the iterate. Dropped-sample count is reported by
+    /// [`ProgressReceiver::dropped`].
+    pub fn bounded(capacity: usize) -> (ProgressSink, ProgressReceiver) {
+        assert!(capacity >= 1, "channel capacity must be >= 1");
+        let shared = Arc::new(ChannelShared {
+            state: Mutex::new(ChannelState {
+                queue: VecDeque::with_capacity(capacity),
+                capacity,
+                dropped: 0,
+            }),
+            ready: Condvar::new(),
+        });
+        (
+            ProgressSink { kind: SinkKind::Channel(Arc::clone(&shared)) },
+            ProgressReceiver { shared },
+        )
+    }
+
+    /// Push one sample into the sink (called by the solve's `StopCheck` at
+    /// its checkpoints). Never blocks on a consumer: the callback flavor
+    /// runs inline, the channel flavor drops the oldest queued sample when
+    /// full.
+    pub(crate) fn emit(&self, sample: Sample) {
+        match &self.kind {
+            SinkKind::Callback(f) => f(&sample),
+            SinkKind::Channel(c) => {
+                let mut st = c.state.lock().unwrap();
+                if st.queue.len() == st.capacity {
+                    st.queue.pop_front();
+                    st.dropped += 1;
+                }
+                st.queue.push_back(sample);
+                drop(st);
+                c.ready.notify_one();
+            }
+        }
+    }
+}
+
+/// Consumer half of [`ProgressSink::bounded`].
+///
+/// All methods are poll-style: nothing here can block indefinitely, and
+/// nothing the receiver does can stall the producing solve (the producer
+/// side drops oldest instead of waiting). The channel has no "closed"
+/// state — a solve simply stops emitting when it returns — so a monitor
+/// loop should poll with [`ProgressReceiver::recv_timeout`] until the solve
+/// call it is watching completes.
+pub struct ProgressReceiver {
+    shared: Arc<ChannelShared>,
+}
+
+impl ProgressReceiver {
+    /// Pop the oldest queued sample, or `None` when the channel is empty.
+    pub fn try_recv(&self) -> Option<Sample> {
+        self.shared.state.lock().unwrap().queue.pop_front()
+    }
+
+    /// Pop the oldest queued sample, waiting up to `timeout` for one to
+    /// arrive. `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Sample> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(s) = st.queue.pop_front() {
+                return Some(s);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self.shared.ready.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.queue.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Pop everything currently queued, oldest first.
+    pub fn drain(&self) -> Vec<Sample> {
+        self.shared.state.lock().unwrap().queue.drain(..).collect()
+    }
+
+    /// Number of samples currently queued.
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// True when nothing is queued right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Samples discarded so far by the drop-oldest policy (a nonzero value
+    /// means the consumer fell behind the producer; the *freshest* samples
+    /// were kept).
+    pub fn dropped(&self) -> u64 {
+        self.shared.state.lock().unwrap().dropped
+    }
+}
+
+impl fmt::Debug for ProgressReceiver {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.shared.state.lock().unwrap();
+        f.debug_struct("ProgressReceiver")
+            .field("capacity", &st.capacity)
+            .field("queued", &st.queue.len())
+            .field("dropped", &st.dropped)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn sample(k: usize, residual: f64) -> Sample {
+        Sample { k, residual, reference_err: None, elapsed: Duration::from_millis(k as u64) }
+    }
+
+    #[test]
+    fn callback_sink_runs_inline() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let sink = ProgressSink::callback(move |s| {
+            assert!(s.residual >= 0.0);
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        for k in 0..5 {
+            sink.emit(sample(k, 1.0));
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn bounded_channel_delivers_in_order() {
+        let (sink, rx) = ProgressSink::bounded(8);
+        for k in 0..5 {
+            sink.emit(sample(k, k as f64));
+        }
+        let got = rx.drain();
+        assert_eq!(got.len(), 5);
+        assert!(got.windows(2).all(|w| w[0].k < w[1].k));
+        assert_eq!(rx.dropped(), 0);
+        assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn full_channel_drops_oldest_never_blocks() {
+        let (sink, rx) = ProgressSink::bounded(3);
+        for k in 0..10 {
+            sink.emit(sample(k, 0.0)); // never blocks, no consumer running
+        }
+        let got = rx.drain();
+        // Freshest three survive; seven oldest were dropped.
+        assert_eq!(got.iter().map(|s| s.k).collect::<Vec<_>>(), vec![7, 8, 9]);
+        assert_eq!(rx.dropped(), 7);
+    }
+
+    #[test]
+    fn recv_timeout_sees_cross_thread_samples() {
+        let (sink, rx) = ProgressSink::bounded(4);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            sink.emit(sample(1, 2.0));
+        });
+        let got = rx.recv_timeout(Duration::from_secs(5)).expect("sample must arrive");
+        assert_eq!(got.k, 1);
+        t.join().unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking() {
+        let (sink, rx) = ProgressSink::bounded(2);
+        assert_eq!(rx.try_recv(), None);
+        sink.emit(sample(3, 1.5));
+        assert_eq!(rx.try_recv().map(|s| s.k), Some(3));
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn cloned_sinks_feed_one_channel() {
+        let (sink, rx) = ProgressSink::bounded(8);
+        let clone = sink.clone();
+        sink.emit(sample(0, 1.0));
+        clone.emit(sample(1, 0.5));
+        assert_eq!(rx.len(), 2);
+    }
+
+    #[test]
+    fn debug_formats_do_not_panic() {
+        let (sink, rx) = ProgressSink::bounded(2);
+        sink.emit(sample(0, 1.0));
+        let _ = format!("{sink:?} {rx:?}");
+        let cb = ProgressSink::callback(|_| {});
+        assert!(format!("{cb:?}").contains("Callback"));
+    }
+}

@@ -101,7 +101,7 @@ impl Solver for AsyRkSolver {
                     // the HOGWILD workers are already mutating x, and a racy
                     // first snapshot would make the baseline, and thus the
                     // divergence threshold, scheduling-dependent).
-                    let (c, d) = stopper.check_now(&xbuf);
+                    let (c, d) = stopper.check_baseline(&xbuf);
                     converged = c;
                     diverged = d;
                 }
@@ -123,8 +123,10 @@ impl Solver for AsyRkSolver {
                     };
                     if !timed {
                         // Reuse the recorder's residual when it is also the
-                        // stopping metric (xbuf has not moved since).
-                        let (c, d) = stopper.check_now_reusing(&xbuf, recorded_residual_sq);
+                        // stopping metric (xbuf has not moved since). Under
+                        // residual stopping each poll is also a telemetry
+                        // checkpoint, labelled with the global update count.
+                        let (c, d) = stopper.check_now_reusing(done, &xbuf, recorded_residual_sq);
                         if c || d {
                             converged = c;
                             diverged = d;

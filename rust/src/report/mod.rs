@@ -51,6 +51,29 @@ impl Table {
         s
     }
 
+    /// Render as a JSON array of objects, one per row, keyed by column
+    /// header — the machine-readable form the perf-tracking CI lane
+    /// archives (`BENCH_micro.json`). Hand-rolled (no serde offline);
+    /// every value is emitted as a JSON string exactly as tabulated.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n  {");
+            for (j, (h, c)) in self.headers.iter().zip(r).enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                let _ = write!(s, "{}: {}", json_string(h), json_string(c));
+            }
+            s.push('}');
+        }
+        s.push_str("\n]");
+        s
+    }
+
     /// Render as CSV (headers first).
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
@@ -124,6 +147,29 @@ impl Report {
     }
 }
 
+/// Quote and escape a string for JSON output (quotes, backslashes, control
+/// characters). Used by [`Table::to_json`] and the bench harnesses'
+/// machine-readable emitters.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Format seconds adaptively (ns/µs/ms/s).
 pub fn fmt_seconds(s: f64) -> String {
     if !s.is_finite() {
@@ -173,6 +219,19 @@ mod tests {
         let csv = sample().to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("a,b"));
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let json = sample().to_json();
+        assert!(json.contains("{\"a\": \"1\", \"b\": \"2\"}"), "{json}");
+        assert!(json.contains("{\"a\": \"30\", \"b\": \"40\"}"), "{json}");
+        assert!(json.starts_with('[') && json.ends_with(']'));
+        assert_eq!(json_string("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
+        // Empty table: a valid, empty JSON array.
+        let t = Table::new("empty", &["a"]);
+        assert_eq!(t.to_json(), "[\n]");
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub use sampling::{RowSampler, SamplingScheme};
 use crate::data::LinearSystem;
 use crate::linalg::gemv_block_into;
 use crate::linalg::vector::dist_sq;
-use crate::metrics::History;
+use crate::metrics::{History, ProgressSink, Sample};
 
 /// What quantity the convergence test measures, and against what bound.
 ///
@@ -98,6 +98,18 @@ pub struct SolveOptions {
     /// `divergence_factor` x its initial value (used by the Fig. 10 α
     /// sweep, where RKAB can diverge).
     pub divergence_factor: f64,
+    /// Live telemetry sink: when set, the solve streams a
+    /// [`Sample`] (`k`, residual, optional reference error, elapsed) at
+    /// every checkpoint where the residual is already being computed —
+    /// history samples (`history_step`) and residual stopping checkpoints
+    /// (`check_every`) — so attaching a sink adds **zero new GEMVs** to the
+    /// hot path. Emission is non-blocking by construction (see
+    /// [`ProgressSink`]): a slow or absent consumer can never stall the
+    /// iterate, and the solved `x` is bitwise identical with or without a
+    /// sink. A solve with no such checkpoints (reference-error stopping or
+    /// a fixed budget, `history_step = 0`) emits nothing — pair the sink
+    /// with residual stopping or a history step.
+    pub progress: Option<ProgressSink>,
 }
 
 impl Default for SolveOptions {
@@ -108,6 +120,7 @@ impl Default for SolveOptions {
             fixed_iterations: None,
             history_step: 0,
             divergence_factor: 1e6,
+            progress: None,
         }
     }
 }
@@ -154,6 +167,13 @@ impl SolveOptions {
     /// Record history every `step` iterations.
     pub fn with_history_step(mut self, step: usize) -> Self {
         self.history_step = step;
+        self
+    }
+
+    /// Stream live [`Sample`]s to `sink` at the solve's amortized
+    /// checkpoints (see [`SolveOptions::progress`]).
+    pub fn with_progress(mut self, sink: ProgressSink) -> Self {
+        self.progress = Some(sink);
         self
     }
 
@@ -228,7 +248,14 @@ pub trait Solver {
 ///   Recording is dual-channel: the residual channel always, the
 ///   reference-error channel only when the system carries a reference —
 ///   a reference-free history costs one amortized `gemv_block_into` per
-///   sample instead of an `error_sq` panic.
+///   sample instead of an `error_sq` panic;
+/// - the **telemetry stream** — when the options carry a
+///   [`ProgressSink`], every checkpoint that computes the residual anyway
+///   (history samples, residual stopping evaluations) also pushes a live
+///   [`Sample`] to the sink, reusing the just-computed value: streaming
+///   adds zero GEMVs, and the sink flavors are non-blocking by
+///   construction, so the iterate sequence is bit-identical with or
+///   without one.
 ///
 /// Under [`StoppingCriterion::ReferenceError`] the decision sequence —
 /// metric every iteration, tolerance then divergence then budget — is
@@ -249,6 +276,8 @@ pub(crate) struct StopCheck<'a> {
     /// Whether history samples carry the reference-error channel (decided
     /// once per solve: does the system have a reference solution?).
     record_reference: bool,
+    /// Solve start time — the `elapsed` clock of streamed [`Sample`]s.
+    start: std::time::Instant,
 }
 
 impl<'a> StopCheck<'a> {
@@ -267,6 +296,7 @@ impl<'a> StopCheck<'a> {
             ax,
             history: History::every(opts.history_step),
             record_reference: system.reference_solution().is_some(),
+            start: std::time::Instant::now(),
         }
     }
 
@@ -327,7 +357,33 @@ impl<'a> StopCheck<'a> {
             None
         };
         self.history.record(k, error, residual_sq.sqrt());
+        // The history sample doubles as a telemetry checkpoint: stream the
+        // values just computed (no extra GEMV, no extra error_sq).
+        if let Some(sink) = &self.opts.progress {
+            sink.emit(Sample {
+                k,
+                residual: residual_sq.sqrt(),
+                reference_err: error,
+                elapsed: self.start.elapsed(),
+            });
+        }
         residual_sq
+    }
+
+    /// Stream a telemetry sample from a residual stopping checkpoint (the
+    /// residual was just computed as the stopping metric; the reference
+    /// error, when the system carries one, costs only `O(n)` on top).
+    fn emit_checkpoint(&self, k: usize, residual_sq: f64, x: &[f64]) {
+        if let Some(sink) = &self.opts.progress {
+            let reference_err =
+                if self.record_reference { Some(self.system.error_sq(x).sqrt()) } else { None };
+            sink.emit(Sample {
+                k,
+                residual: residual_sq.sqrt(),
+                reference_err,
+                elapsed: self.start.elapsed(),
+            });
+        }
     }
 
     /// The recorded convergence curve (call once, after the solve loop).
@@ -350,7 +406,7 @@ impl<'a> StopCheck<'a> {
             return (k >= fixed, false, false);
         }
         if self.evaluates_at(k) {
-            let (converged, diverged) = self.check_now_reusing(x, recorded_residual_sq);
+            let (converged, diverged) = self.check_now_reusing(k, x, recorded_residual_sq);
             if converged || diverged {
                 return (true, converged, diverged);
             }
@@ -358,22 +414,32 @@ impl<'a> StopCheck<'a> {
         (k >= self.opts.max_iterations, false, false)
     }
 
-    /// Cadence-free convergence/divergence test: `(converged, diverged)`.
-    /// [`StopCheck::check`] runs this on its cadence; the AsyRK monitor
-    /// (which has no iteration boundary to hang `check_every` off of, and
-    /// handles the budget itself) runs it per poll.
-    pub(crate) fn check_now(&mut self, x: &[f64]) -> (bool, bool) {
-        self.check_now_reusing(x, None)
+    /// Baseline evaluation at the true `x^(0)` (the AsyRK monitor, before
+    /// its polling loop): pins the lazy initial metric and applies the
+    /// tolerance/divergence decision like a poll would, but streams **no**
+    /// telemetry — the first poll emits its own `k = 0` sample, and a
+    /// baseline emission on the same iterate count would duplicate it,
+    /// desyncing the stream from the recorded history.
+    pub(crate) fn check_baseline(&mut self, x: &[f64]) -> (bool, bool) {
+        let m = self.metric(x);
+        self.decide(m)
     }
 
-    /// [`StopCheck::check_now`] with residual reuse: when the stopping
-    /// metric *is* the residual and [`StopCheck::record_sample`] just
-    /// computed it for this same iterate, the caller passes it back here
-    /// and the O(m·n) GEMV is not paid a second time (bit-equal — same
-    /// computation on the same `x`). Falls back to evaluating the metric
-    /// in every other case.
+    /// Cadence-free convergence/divergence test with residual reuse:
+    /// [`StopCheck::check`] runs it on its cadence, the AsyRK monitor
+    /// (which has no iteration boundary to hang `check_every` off of, and
+    /// handles the budget itself) runs it per poll with `k` set to its
+    /// global update count. When the stopping metric *is* the residual and
+    /// [`StopCheck::record_sample`] just computed it for this same
+    /// iterate, the caller passes it back here and the O(m·n) GEMV is not
+    /// paid a second time (bit-equal — same computation on the same `x`);
+    /// it falls back to evaluating the metric in every other case.
+    /// Residual evaluations double as telemetry checkpoints: a freshly
+    /// computed residual metric is streamed to the progress sink (a reused
+    /// one was already streamed by the history sample that computed it).
     pub(crate) fn check_now_reusing(
         &mut self,
+        k: usize,
         x: &[f64],
         recorded_residual_sq: Option<f64>,
     ) -> (bool, bool) {
@@ -381,6 +447,11 @@ impl<'a> StopCheck<'a> {
             (StoppingCriterion::Residual { .. }, Some(r)) => r,
             _ => self.metric(x),
         };
+        if recorded_residual_sq.is_none()
+            && matches!(self.opts.stopping, StoppingCriterion::Residual { .. })
+        {
+            self.emit_checkpoint(k, m, x);
+        }
         self.decide(m)
     }
 
@@ -569,6 +640,89 @@ mod tests {
         assert!(!sc.evaluates_at(6));
         assert!(sc.needs_iterate_at(6));
         assert!(!sc.needs_iterate_at(5));
+    }
+
+    #[test]
+    fn sink_streams_history_checkpoints_mid_solve() {
+        let sys = identity_system();
+        let (sink, rx) = crate::metrics::ProgressSink::bounded(16);
+        let opts = SolveOptions::default()
+            .with_fixed_iterations(10)
+            .with_history_step(5)
+            .with_progress(sink);
+        let mut sc = StopCheck::new(&sys, &opts);
+        for k in 0..=10 {
+            sc.check(k, &[1.0, 1.0]);
+        }
+        let h = sc.into_history();
+        let samples = rx.drain();
+        // One streamed sample per recorded history sample, same k, same
+        // residual value (the sink reuses the recorder's GEMV).
+        assert_eq!(samples.len(), h.len());
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(s.k, h.iterations[i]);
+            assert_eq!(s.residual.to_bits(), h.residuals[i].to_bits());
+            assert_eq!(s.reference_err.map(f64::to_bits), Some(h.errors[i].to_bits()));
+        }
+    }
+
+    #[test]
+    fn sink_streams_residual_stopping_checkpoints_without_history() {
+        // No reference, no history: emission piggybacks on the residual
+        // stopping metric alone (and never touches error_sq — the system
+        // has none to touch).
+        let a = Matrix::identity(2);
+        let sys = LinearSystem::new(a, vec![3.0, 4.0], None, true);
+        let (sink, rx) = crate::metrics::ProgressSink::bounded(16);
+        let opts = SolveOptions::default()
+            .with_residual_stopping(1e-9, 4)
+            .with_max_iterations(8)
+            .with_progress(sink);
+        let mut sc = StopCheck::new(&sys, &opts);
+        for k in 0..=8 {
+            if sc.check(k, &[0.0, 0.0]).0 {
+                break;
+            }
+        }
+        let ks: Vec<usize> = rx.drain().iter().map(|s| s.k).collect();
+        assert_eq!(ks, vec![0, 4, 8]); // exactly the check_every cadence
+        // History recording stayed off: the sink is observability-only.
+        assert!(sc.into_history().is_empty());
+    }
+
+    #[test]
+    fn sink_does_not_double_emit_when_history_and_metric_coincide() {
+        let sys = identity_system();
+        let (sink, rx) = crate::metrics::ProgressSink::bounded(32);
+        // history_step == check_every: every checkpoint is both.
+        let opts = SolveOptions::default()
+            .with_residual_stopping(1e-30, 4)
+            .with_history_step(4)
+            .with_max_iterations(8)
+            .with_progress(sink);
+        let mut sc = StopCheck::new(&sys, &opts);
+        for k in 0..=8 {
+            if sc.check(k, &[0.0, 0.0]).0 {
+                break;
+            }
+        }
+        let ks: Vec<usize> = rx.drain().iter().map(|s| s.k).collect();
+        assert_eq!(ks, vec![0, 4, 8], "one sample per checkpoint, not two");
+    }
+
+    #[test]
+    fn sink_emits_nothing_without_amortized_checkpoints() {
+        // Reference-error stopping computes no residual, and with
+        // history_step = 0 there is no other checkpoint: the sink stays
+        // silent (documented behavior) rather than paying new GEMVs.
+        let sys = identity_system();
+        let (sink, rx) = crate::metrics::ProgressSink::bounded(8);
+        let opts = SolveOptions::default().with_tolerance(1e-20).with_progress(sink);
+        let mut sc = StopCheck::new(&sys, &opts);
+        for k in 0..5 {
+            sc.check(k, &[1.0, 1.0]);
+        }
+        assert!(rx.is_empty());
     }
 
     #[test]
