@@ -15,9 +15,9 @@
 //! too noisy to fail on perf numbers alone).
 
 use kaczmarz::batch::{BatchJob, BatchSolver};
-use kaczmarz::data::{DatasetBuilder, LinearSystem};
+use kaczmarz::data::{DatasetBuilder, LinearSystem, SparseDatasetBuilder};
 use kaczmarz::linalg::vector::{axpy, dot};
-use kaczmarz::linalg::{gemv, gemv_block_into, Matrix};
+use kaczmarz::linalg::{gemv, gemv_block_into, Matrix, Storage};
 use kaczmarz::metrics::{ProgressSink, Stopwatch};
 use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::parallel::WorkerPool;
@@ -198,6 +198,90 @@ fn main() {
                 && v_base.iter().zip(&v_fused).all(|(a, b)| a.to_bits() == b.to_bits());
             println!("[rkab-sweep] fused bitwise-equal to row loop = {bitwise} (must be true)");
             checks.push(("rkab fused sweep bitwise vs row loop".into(), bitwise));
+        }
+    }
+
+    // Storage-generic row kernels: the fused row_axpy_dot (projection j's
+    // update + projection j+1's residual dot, the RKAB in-block hot op) on
+    // CSR storage at 1%/10%/50% density vs the same matrix densified. The
+    // sparse op touches only stored coordinates, so its ns/op should track
+    // nnz per row rather than n — the rows below are where the density
+    // break-even documented in the README is measured.
+    {
+        let (sm, sn) = if smoke { (400usize, 512usize) } else { (1000, 2048) };
+        for density in [0.01f64, 0.1, 0.5] {
+            let sparse = SparseDatasetBuilder::new(sm, sn, density).seed(61).consistent();
+            let csr = sparse.a.as_csr().expect("sparse builder yields CSR").clone();
+            let dense: Storage = csr.to_dense().into();
+            let nnz_row = csr.nnz() / sm;
+            let iters = (20_000_000 / shrink / sn).max(100);
+
+            // scale = 0.0 keeps the iterate bounded across millions of
+            // applications while performing the identical memory traffic
+            // and flops per stored entry.
+            let mut v = vec![0.5f64; sn];
+            let mut i = 0usize;
+            let t_sparse = bench(
+                || {
+                    let next = if i + 1 == sm { 0 } else { i + 1 };
+                    std::hint::black_box(sparse.a.row_axpy_dot(i, 0.0, next, &mut v));
+                    i = next;
+                },
+                iters,
+            );
+            let mut v = vec![0.5f64; sn];
+            let mut i = 0usize;
+            let t_dense = bench(
+                || {
+                    let next = if i + 1 == sm { 0 } else { i + 1 };
+                    std::hint::black_box(dense.row_axpy_dot(i, 0.0, next, &mut v));
+                    i = next;
+                },
+                iters,
+            );
+            let pct = (density * 100.0).round() as usize;
+            t.row(vec![
+                format!("axpy_dot csr {pct}% (nnz/row={nnz_row})"),
+                sn.to_string(),
+                format!("{:.1}", t_sparse * 1e9),
+                "-".into(),
+            ]);
+            t.row(vec![
+                format!("axpy_dot dense of {pct}% matrix"),
+                sn.to_string(),
+                format!("{:.1}", t_dense * 1e9),
+                "-".into(),
+            ]);
+            println!(
+                "[axpy_dot density={pct}%] csr/dense = {:.3} (should shrink with density)",
+                t_sparse / t_dense
+            );
+        }
+
+        // Dense Storage dispatch must reproduce the raw fused kernel bit for
+        // bit — this identity is what lets every dense solver keep its seed
+        // bits after the storage-generic refactor, so it gates the CI lane.
+        {
+            let d = DatasetBuilder::new(64, 96).seed(71).consistent();
+            let dense_m = d.a.as_dense().expect("generated systems are dense").clone();
+            let mut v1 = vec![0.25f64; 96];
+            let mut v2 = v1.clone();
+            let mut ok = true;
+            for i in 0..63 {
+                let f1 = d.a.row_axpy_dot(i, 0.37, i + 1, &mut v1);
+                let f2 = kaczmarz::linalg::axpy_dot(
+                    0.37,
+                    dense_m.row(i),
+                    dense_m.row(i + 1),
+                    &mut v2,
+                );
+                ok &= f1.to_bits() == f2.to_bits();
+            }
+            ok &= v1.iter().zip(&v2).all(|(a, b)| a.to_bits() == b.to_bits());
+            println!(
+                "[storage] dense Storage row_axpy_dot bitwise vs raw kernel = {ok} (must be true)"
+            );
+            checks.push(("dense storage row_axpy_dot bitwise vs raw kernel".into(), ok));
         }
     }
 

@@ -2,17 +2,23 @@
 
 use crate::error::{Error, Result};
 use crate::linalg::vector::dist_sq;
-use crate::linalg::{gemv, norm2, sub, Matrix};
+use crate::linalg::{gemv, norm2, sub, Storage};
 
 /// A (possibly inconsistent) linear system `Ax = b` plus reference solutions.
 ///
 /// `row_norms_sq` and `frobenius_sq` are precomputed once: every Kaczmarz
 /// variant needs `‖A^(i)‖²` per iteration and the sampling distribution
 /// needs all of them up front (paper eq. 4).
+///
+/// The matrix sits behind the two-variant [`Storage`] enum — dense
+/// ([`Matrix`](crate::linalg::Matrix), the paper's layout) or sparse
+/// ([`CsrMatrix`](crate::linalg::CsrMatrix)) — and every solver in the
+/// crate runs against either backend. Constructors take
+/// `impl Into<Storage>`, so existing call sites keep passing a bare matrix.
 #[derive(Clone, Debug)]
 pub struct LinearSystem {
     /// Coefficient matrix (m x n, m >= n in all paper experiments).
-    pub a: Matrix,
+    pub a: Storage,
     /// Right-hand side (len m).
     pub b: Vec<f64>,
     /// The unique solution for consistent systems (`x*`), if known.
@@ -36,7 +42,13 @@ impl LinearSystem {
     /// deterministic scanners (CK, AsyRK) skip them explicitly. Use
     /// [`LinearSystem::try_new`] on untrusted input to reject them up front
     /// with a typed error instead.
-    pub fn new(a: Matrix, b: Vec<f64>, x_true: Option<Vec<f64>>, consistent: bool) -> Self {
+    pub fn new(
+        a: impl Into<Storage>,
+        b: Vec<f64>,
+        x_true: Option<Vec<f64>>,
+        consistent: bool,
+    ) -> Self {
+        let a = a.into();
         assert_eq!(a.rows(), b.len(), "rhs length must equal row count");
         let row_norms_sq = a.row_norms_sq();
         let frobenius_sq = row_norms_sq.iter().sum();
@@ -50,11 +62,12 @@ impl LinearSystem {
     /// the whole iterate. This is the entry point for data read from disk
     /// or built by applications.
     pub fn try_new(
-        a: Matrix,
+        a: impl Into<Storage>,
         b: Vec<f64>,
         x_true: Option<Vec<f64>>,
         consistent: bool,
     ) -> Result<Self> {
+        let a = a.into();
         if a.rows() != b.len() {
             return Err(Error::Dimension(format!(
                 "rhs of len {} does not match {} rows",

@@ -1,7 +1,8 @@
-//! Data-set generation per §3.1 of the paper.
+//! Data-set generation per §3.1 of the paper, plus a sparse (CSR) variant
+//! for exercising the storage-generic solve loops.
 
 use super::dataset::LinearSystem;
-use crate::linalg::{gemv, Matrix};
+use crate::linalg::{gemv, CsrMatrix, Matrix};
 use crate::rng::{Mt19937, NormalSampler};
 
 /// Builder for the paper's synthetic overdetermined systems.
@@ -131,6 +132,105 @@ impl DatasetBuilder {
     }
 }
 
+/// Builder for deterministic sparse systems on CSR storage.
+///
+/// Each row gets `max(1, round(density * cols))` entries at distinct
+/// MT19937-chosen columns, with values from the same per-row gaussian family
+/// as [`DatasetBuilder`] (`μ_i ~ U[-5, 5]`, `σ_i ~ U[1, 20]`). The one-entry
+/// floor keeps every row norm positive, so the constructor's degenerate-row
+/// check never fires on generated data; it also means the effective density
+/// never drops below `1/cols`. Same seed ⇒ same system, independent of
+/// thread count or platform — exactly the discipline of the dense builder.
+pub struct SparseDatasetBuilder {
+    rows: usize,
+    cols: usize,
+    density: f64,
+    seed: u32,
+    mu_range: (f64, f64),
+    sigma_range: (f64, f64),
+    noise_sd: f64,
+}
+
+impl SparseDatasetBuilder {
+    /// A builder for an `m x n` system with the given fill fraction.
+    pub fn new(rows: usize, cols: usize, density: f64) -> Self {
+        assert!(rows > 0 && cols > 0, "empty system");
+        assert!(density > 0.0 && density <= 1.0, "density must be in (0, 1]");
+        SparseDatasetBuilder {
+            rows,
+            cols,
+            density,
+            seed: 2024,
+            mu_range: (-5.0, 5.0),
+            sigma_range: (1.0, 20.0),
+            noise_sd: 1.0,
+        }
+    }
+
+    /// Set the generator seed (distinct seeds give distinct systems).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Std-dev of the inconsistency noise ξ (default 1.0, as in §3.1).
+    pub fn noise_sd(mut self, sd: f64) -> Self {
+        assert!(sd > 0.0);
+        self.noise_sd = sd;
+        self
+    }
+
+    fn generate(&self) -> (CsrMatrix, Vec<f64>) {
+        let mut rng = Mt19937::new(self.seed);
+        let mut normal = NormalSampler::new();
+        let (mu_lo, mu_hi) = self.mu_range;
+        let (sg_lo, sg_hi) = self.sigma_range;
+        let per_row = ((self.density * self.cols as f64).round() as usize).clamp(1, self.cols);
+        let mut entries = Vec::with_capacity(self.rows * per_row);
+        let mut columns: Vec<usize> = (0..self.cols).collect();
+        for i in 0..self.rows {
+            // A different gaussian per row, like the dense §3.1 builder.
+            let mu = mu_lo + (mu_hi - mu_lo) * rng.next_f64();
+            let sd = sg_lo + (sg_hi - sg_lo) * rng.next_f64();
+            // Distinct columns via a fresh shuffle (Fisher–Yates on the RNG
+            // stream): the row pattern is deterministic in the seed.
+            rng.shuffle(&mut columns);
+            for &j in &columns[..per_row] {
+                entries.push((i, j, normal.sample(&mut rng, mu, sd)));
+            }
+        }
+        let a = CsrMatrix::from_triplets(self.rows, self.cols, &entries)
+            .expect("indices in range by construction");
+        let mu = mu_lo + (mu_hi - mu_lo) * rng.next_f64();
+        let sd = sg_lo + (sg_hi - sg_lo) * rng.next_f64();
+        let x: Vec<f64> = (0..self.cols).map(|_| normal.sample(&mut rng, mu, sd)).collect();
+        (a, x)
+    }
+
+    /// Consistent sparse system: `b = A x_true` exactly, CSR storage.
+    pub fn consistent(&self) -> LinearSystem {
+        let (a, x) = self.generate();
+        let b = gemv(&a, &x).expect("shapes by construction");
+        LinearSystem::new(a, b, Some(x), true)
+    }
+
+    /// Inconsistent sparse system: `b = A x + ξ`, `ξ ~ N(0, noise_sd)`.
+    ///
+    /// Uses an independent noise stream (`seed ^ 0xdead_beef`, matching the
+    /// dense builder) so the consistent and inconsistent systems share `A`
+    /// and `x_true` exactly.
+    pub fn inconsistent(&self) -> LinearSystem {
+        let mut sys = self.consistent();
+        let mut rng = Mt19937::new(self.seed ^ 0xdead_beef);
+        let mut normal = NormalSampler::new();
+        for bi in sys.b.iter_mut() {
+            *bi += normal.sample(&mut rng, 0.0, self.noise_sd);
+        }
+        sys.consistent = false;
+        sys
+    }
+}
+
 /// A highly coherent consistent system for the Fig. 1 demonstration:
 /// *consecutive* rows subtend a small angle (the matrix is "coherent" in the
 /// Wallace–Sekmen sense), which makes cyclic Kaczmarz crawl — each projection
@@ -219,6 +319,47 @@ mod tests {
         // And the cropped system is itself consistent.
         let x = small.x_true.clone().unwrap();
         assert!(small.residual_norm(&x) < 1e-9 * small.frobenius_sq.sqrt());
+    }
+
+    #[test]
+    fn sparse_builder_is_deterministic_and_sparse() {
+        let a = SparseDatasetBuilder::new(40, 20, 0.1).seed(5).consistent();
+        let b = SparseDatasetBuilder::new(40, 20, 0.1).seed(5).consistent();
+        let c = SparseDatasetBuilder::new(40, 20, 0.1).seed(6).consistent();
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.b, b.b);
+        assert_ne!(a.a, c.a);
+        let csr = a.a.as_csr().expect("sparse builder must produce CSR storage");
+        assert_eq!(csr.nnz(), 40 * 2, "10% of 20 cols = 2 entries per row");
+    }
+
+    #[test]
+    fn sparse_consistent_has_zero_residual_at_x_true() {
+        let sys = SparseDatasetBuilder::new(60, 12, 0.25).seed(3).consistent();
+        let x = sys.x_true.clone().unwrap();
+        assert!(sys.residual_norm(&x) < 1e-9 * sys.frobenius_sq.sqrt());
+        assert!(sys.consistent);
+    }
+
+    #[test]
+    fn sparse_inconsistent_shares_matrix_with_consistent() {
+        let b = SparseDatasetBuilder::new(30, 8, 0.4).seed(9);
+        let cons = b.consistent();
+        let inco = b.inconsistent();
+        assert_eq!(cons.a, inco.a);
+        assert!(!inco.consistent);
+        let diff: f64 = cons.b.iter().zip(&inco.b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn sparse_density_floor_keeps_rows_nondegenerate() {
+        // density far below 1/cols still yields one entry per row.
+        let sys = SparseDatasetBuilder::new(25, 50, 0.001).seed(2).consistent();
+        assert_eq!(sys.a.as_csr().unwrap().nnz(), 25);
+        for (i, &norm) in sys.row_norms_sq.iter().enumerate() {
+            assert!(norm > 0.0, "row {i} degenerate");
+        }
     }
 
     #[test]

@@ -1,13 +1,21 @@
-//! Binary persistence for generated systems.
+//! Persistence for generated systems.
 //!
-//! Benches regenerate multi-hundred-MB matrices otherwise; the format is a
-//! trivial little-endian dump with a magic header, no external serialization
-//! crates being available offline.
+//! Two formats live here:
+//!
+//! - the crate's own binary dump (magic header + little-endian f64s) for
+//!   round-tripping dense generated systems — benches regenerate
+//!   multi-hundred-MB matrices otherwise, and no external serialization
+//!   crates are available offline;
+//! - a Matrix Market coordinate reader ([`load_mtx`]) so real sparse test
+//!   matrices load straight into [`CsrMatrix`] storage, with the same
+//!   strictness discipline as the binary loader (typed errors, degenerate
+//!   rows rejected).
 
 use super::dataset::LinearSystem;
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
-use std::io::{BufReader, BufWriter, Read, Write};
+use crate::linalg::{CsrMatrix, Matrix};
+use crate::rng::{Mt19937, NormalSampler};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"KCZSYS01";
@@ -44,8 +52,13 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
 /// Degenerate (zero-norm) rows are rejected up front with
 /// [`Error::DegenerateRow`]: `load` refuses them (disk data is untrusted),
 /// so failing fast at write time keeps the save/load roundtrip symmetric —
-/// anything this function persists, `load` will accept.
+/// anything this function persists, `load` will accept. The binary format
+/// is a dense dump, so CSR-backed systems are rejected with
+/// [`Error::InvalidArgument`] rather than densified silently.
 pub fn save(sys: &LinearSystem, path: &Path) -> Result<()> {
+    let dense = sys.a.as_dense().ok_or_else(|| {
+        Error::InvalidArgument("binary save supports dense systems only".into())
+    })?;
     if let Some(row) = sys.degenerate_row() {
         return Err(Error::DegenerateRow { row });
     }
@@ -57,7 +70,7 @@ pub fn save(sys: &LinearSystem, path: &Path) -> Result<()> {
     write_u64(&mut w, sys.consistent as u64)?;
     write_u64(&mut w, sys.x_true.is_some() as u64)?;
     write_u64(&mut w, sys.x_ls.is_some() as u64)?;
-    write_f64s(&mut w, sys.a.as_slice())?;
+    write_f64s(&mut w, dense.as_slice())?;
     write_f64s(&mut w, &sys.b)?;
     if let Some(x) = &sys.x_true {
         write_f64s(&mut w, x)?;
@@ -95,6 +108,117 @@ pub fn load(path: &Path) -> Result<LinearSystem> {
     let mut sys = LinearSystem::try_new(a, b, x_true, consistent)?;
     sys.x_ls = x_ls;
     Ok(sys)
+}
+
+/// Load a Matrix Market coordinate file into CSR storage.
+///
+/// Only the plain `matrix coordinate real general` flavor is supported —
+/// anything else (pattern/complex fields, symmetric storage, dense `array`
+/// format) fails with a typed [`Error::InvalidArgument`] naming the file.
+/// Entries are 1-indexed per the format; duplicates are summed (the
+/// convention assemblers rely on); indices outside the declared shape are
+/// rejected with [`Error::Dimension`].
+pub fn load_mtx(path: &Path) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path)?;
+    parse_mtx(BufReader::new(f), &path.display().to_string())
+}
+
+fn parse_usize(tok: &str, origin: &str, what: &str) -> Result<usize> {
+    tok.parse().map_err(|_| Error::InvalidArgument(format!("{origin}: bad {what} {tok:?}")))
+}
+
+fn parse_mtx<R: BufRead>(r: R, origin: &str) -> Result<CsrMatrix> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::InvalidArgument(format!("{origin}: empty Matrix Market file")))??;
+    let head: Vec<String> = header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    let expect = ["%%matrixmarket", "matrix", "coordinate", "real", "general"];
+    if head.len() != 5 || head.iter().zip(expect).any(|(a, b)| a.as_str() != b) {
+        return Err(Error::InvalidArgument(format!(
+            "{origin}: unsupported header {header:?} (need \
+             \"%%MatrixMarket matrix coordinate real general\")"
+        )));
+    }
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+    for line in lines {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('%') {
+            continue; // comment lines may appear anywhere
+        }
+        let toks: Vec<&str> = s.split_whitespace().collect();
+        match dims {
+            None => {
+                if toks.len() != 3 {
+                    return Err(Error::InvalidArgument(format!(
+                        "{origin}: malformed size line {s:?} (need \"rows cols nnz\")"
+                    )));
+                }
+                let m = parse_usize(toks[0], origin, "row count")?;
+                let n = parse_usize(toks[1], origin, "column count")?;
+                let nnz = parse_usize(toks[2], origin, "entry count")?;
+                if m == 0 || n == 0 {
+                    return Err(Error::Dimension(format!("{origin}: empty {m}x{n} matrix")));
+                }
+                entries.reserve(nnz);
+                dims = Some((m, n, nnz));
+            }
+            Some((m, n, nnz)) => {
+                if entries.len() == nnz {
+                    return Err(Error::InvalidArgument(format!(
+                        "{origin}: more than the declared {nnz} entries"
+                    )));
+                }
+                if toks.len() != 3 {
+                    return Err(Error::InvalidArgument(format!(
+                        "{origin}: malformed entry {s:?} (need \"row col value\")"
+                    )));
+                }
+                let i = parse_usize(toks[0], origin, "entry row")?;
+                let j = parse_usize(toks[1], origin, "entry col")?;
+                let v: f64 = toks[2].parse().map_err(|_| {
+                    Error::InvalidArgument(format!("{origin}: bad value {:?}", toks[2]))
+                })?;
+                if i == 0 || i > m || j == 0 || j > n {
+                    return Err(Error::Dimension(format!(
+                        "{origin}: entry ({i}, {j}) outside 1..={m} x 1..={n}"
+                    )));
+                }
+                entries.push((i - 1, j - 1, v));
+            }
+        }
+    }
+    let (m, n, nnz) =
+        dims.ok_or_else(|| Error::InvalidArgument(format!("{origin}: missing size line")))?;
+    if entries.len() != nnz {
+        return Err(Error::InvalidArgument(format!(
+            "{origin}: {} entries but the header declares {nnz}",
+            entries.len()
+        )));
+    }
+    CsrMatrix::from_triplets(m, n, &entries)
+}
+
+/// Build a solvable consistent system from a Matrix Market file.
+///
+/// `.mtx` files carry only the matrix, so the right-hand side is
+/// manufactured the way the §3.1 generator does: a seeded solution `x_true`
+/// is drawn from the paper's entry distribution and `b = A x_true`, giving a
+/// consistent system with a known solution on CSR storage. Rows with no
+/// stored entries (or all-zero values) are rejected by the constructor with
+/// [`Error::DegenerateRow`] — such a row carries no constraint and would
+/// NaN-poison a projection.
+pub fn load_mtx_system(path: &Path, seed: u32) -> Result<LinearSystem> {
+    let a = load_mtx(path)?;
+    let mut rng = Mt19937::new(seed);
+    let mut normal = NormalSampler::new();
+    let mu = -5.0 + 10.0 * rng.next_f64();
+    let sd = 1.0 + 19.0 * rng.next_f64();
+    let x: Vec<f64> = (0..a.cols()).map(|_| normal.sample(&mut rng, mu, sd)).collect();
+    let b = crate::linalg::gemv(&a, &x)?;
+    LinearSystem::try_new(a, b, Some(x), true)
 }
 
 #[cfg(test)]
@@ -171,6 +295,89 @@ mod tests {
             w.flush().unwrap();
         }
         let err = load(&tmp).err().expect("degenerate row must be rejected");
+        std::fs::remove_file(&tmp).ok();
+        assert!(
+            matches!(err, crate::error::Error::DegenerateRow { row: 1 }),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn csr_systems_refuse_binary_save() {
+        let sys = crate::data::SparseDatasetBuilder::new(8, 4, 0.5).seed(3).consistent();
+        let tmp = std::env::temp_dir().join("kcz_io_test_csr_save.bin");
+        let err = save(&sys, &tmp).err().expect("CSR save must be rejected");
+        std::fs::remove_file(&tmp).ok();
+        assert!(matches!(err, Error::InvalidArgument(_)), "got {err:?}");
+    }
+
+    const MTX: &str = "%%MatrixMarket matrix coordinate real general\n\
+                       % a 3x4 test matrix\n\
+                       3 4 5\n\
+                       1 1 2.0\n\
+                       1 4 -1.5\n\
+                       2 2 3.0\n\
+                       3 3 4.0\n\
+                       3 3 1.0\n";
+
+    #[test]
+    fn mtx_parses_one_indexed_entries_and_sums_duplicates() {
+        let a = parse_mtx(MTX.as_bytes(), "test").unwrap();
+        assert_eq!((a.rows(), a.cols()), (3, 4));
+        assert_eq!(a.nnz(), 4); // the duplicate (3,3) pair merged
+        let d = a.to_dense();
+        assert_eq!(d.row(0), &[2.0, 0.0, 0.0, -1.5]);
+        assert_eq!(d.row(1), &[0.0, 3.0, 0.0, 0.0]);
+        assert_eq!(d.row(2), &[0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn mtx_file_roundtrip_builds_consistent_csr_system() {
+        let tmp = std::env::temp_dir().join("kcz_io_test.mtx");
+        std::fs::write(&tmp, MTX).unwrap();
+        let sys = load_mtx_system(&tmp, 7).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert!(sys.a.as_csr().is_some(), "mtx loads must stay sparse");
+        assert!(sys.consistent);
+        let x = sys.x_true.clone().unwrap();
+        assert!(sys.residual_norm(&x) < 1e-9 * sys.frobenius_sq.sqrt());
+    }
+
+    #[test]
+    fn mtx_rejects_wrong_header() {
+        let bad = "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n4.0\n";
+        let err = parse_mtx(bad.as_bytes(), "test").err().unwrap();
+        assert!(matches!(err, Error::InvalidArgument(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn mtx_rejects_entry_count_mismatch() {
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n2 2 1.0\n";
+        let err = parse_mtx(short.as_bytes(), "test").err().unwrap();
+        assert!(matches!(err, Error::InvalidArgument(_)), "got {err:?}");
+        let long =
+            "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 1.0\n1 1 2.0\n";
+        let err = parse_mtx(long.as_bytes(), "test").err().unwrap();
+        assert!(matches!(err, Error::InvalidArgument(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn mtx_rejects_out_of_range_indices() {
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        let err = parse_mtx(oob.as_bytes(), "test").err().unwrap();
+        assert!(matches!(err, Error::Dimension(_)), "got {err:?}");
+        let zero = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        let err = parse_mtx(zero.as_bytes(), "test").err().unwrap();
+        assert!(matches!(err, Error::Dimension(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn mtx_empty_row_rejected_as_degenerate() {
+        // Row 2 of the 3-row matrix has no stored entries: no constraint.
+        let mtx = "%%MatrixMarket matrix coordinate real general\n3 2 2\n1 1 1.0\n3 2 2.0\n";
+        let tmp = std::env::temp_dir().join("kcz_io_test_degenerate.mtx");
+        std::fs::write(&tmp, mtx).unwrap();
+        let err = load_mtx_system(&tmp, 1).err().expect("empty row must be rejected");
         std::fs::remove_file(&tmp).ok();
         assert!(
             matches!(err, crate::error::Error::DegenerateRow { row: 1 }),

@@ -7,11 +7,14 @@
 //!   the least-squares reference solution computed by CGLS;
 //! - highly coherent systems (small angles between consecutive rows) for the
 //!   Fig. 1 CK-vs-RK demonstration;
-//! - binary save/load so benches can reuse a generated data set.
+//! - deterministic sparse systems on CSR storage (density-parameterized) for
+//!   the storage-generic solve loops;
+//! - binary save/load so benches can reuse a generated data set, and a
+//!   Matrix Market reader for real sparse test matrices.
 
 pub mod dataset;
 pub mod generator;
 pub mod io;
 
 pub use dataset::LinearSystem;
-pub use generator::{coherent_system, DatasetBuilder};
+pub use generator::{coherent_system, DatasetBuilder, SparseDatasetBuilder};

@@ -18,7 +18,6 @@
 use super::cluster::{DistResult, RankStats, SimCluster};
 use super::comm::Communicator;
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::rka::Weights;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
@@ -132,9 +131,8 @@ impl DistRka {
             // Lines 2-5 of Algorithm 2 (measured as compute).
             let t0 = Stopwatch::start();
             let i = sampler.sample();
-            let row = system.a.row(i);
-            let scale = alpha * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-            axpy(scale, row, &mut x);
+            let scale = alpha * (system.b[i] - system.a.row_dot(i, &x)) / system.row_norms_sq[i];
+            system.a.row_axpy(i, scale, &mut x);
             for xi in x.iter_mut() {
                 *xi *= inv_np;
             }

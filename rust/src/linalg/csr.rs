@@ -1,0 +1,415 @@
+//! Compressed sparse row (CSR) matrix.
+//!
+//! The paper restricts itself to dense row-major systems, but Kaczmarz's
+//! real-world niche — tomography, signal recovery — is overwhelmingly
+//! sparse, and the strongest related work (block sparse Kaczmarz with
+//! averaging, arXiv 2203.10838) is exactly our RKAB shape on sparse data.
+//! [`CsrMatrix`] is the sparse counterpart of [`Matrix`]: the same
+//! row-centric contract (every Kaczmarz variant touches whole rows), stored
+//! as the classic values / column-indices / row-pointer triple.
+//!
+//! Storage follows the dense matrix's `Arc` discipline: all three arrays sit
+//! behind `Arc`s, so `clone()` is three refcount bumps and a 16-lane
+//! `BatchSolver` over a resident sparse system holds **one** copy of the
+//! entries. [`CsrMatrix::row_block`] goes further than the dense equivalent:
+//! because `row_ptr` entries are absolute offsets into the shared arrays, a
+//! row block is a *view* — it reuses the parent's `values`/`col_indices`
+//! `Arc`s outright and only materializes a `(rows + 1)`-long pointer slice.
+
+use super::matrix::Matrix;
+use super::vector::dot;
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// Sparse row-major matrix in compressed sparse row form (cheaply clonable;
+/// entry arrays are `Arc`-shared like dense [`Matrix`] storage).
+///
+/// Row `i`'s stored entries are `values[row_ptr[i]..row_ptr[i + 1]]` with
+/// matching column indices in `col_indices` (sorted, no duplicates).
+/// `row_ptr` offsets are *absolute* indices into the shared arrays, which is
+/// what lets [`CsrMatrix::row_block`] alias the parent's storage instead of
+/// copying it.
+///
+/// ```
+/// use kaczmarz::linalg::CsrMatrix;
+///
+/// // 2x4 system from (row, col, value) triplets; duplicates are summed.
+/// let a = CsrMatrix::from_triplets(
+///     2,
+///     4,
+///     &[(0, 1, 2.0), (1, 3, -1.0), (0, 1, 1.0), (1, 0, 4.0)],
+/// )
+/// .unwrap();
+/// assert_eq!(a.nnz(), 3);
+/// assert_eq!(a.row_cols(0), &[1]);
+/// assert_eq!(a.row_values(0), &[3.0]);
+/// assert_eq!(a.row_cols(1), &[0, 3]);
+/// assert_eq!(a.density(), 3.0 / 8.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    values: Arc<Vec<f64>>,
+    col_indices: Arc<Vec<usize>>,
+    row_ptr: Arc<Vec<usize>>,
+    rows: usize,
+    cols: usize,
+}
+
+impl CsrMatrix {
+    /// Build from `(row, col, value)` triplets in any order.
+    ///
+    /// Entries are sorted into CSR order and duplicate coordinates are
+    /// summed (the Matrix Market convention). Returns a dimension error if
+    /// any coordinate is out of range.
+    ///
+    /// ```
+    /// use kaczmarz::linalg::CsrMatrix;
+    /// let a = CsrMatrix::from_triplets(3, 3, &[(2, 0, 5.0), (0, 2, 1.0)]).unwrap();
+    /// assert_eq!(a.to_dense().row(2), &[5.0, 0.0, 0.0]);
+    /// assert!(CsrMatrix::from_triplets(3, 3, &[(3, 0, 1.0)]).is_err());
+    /// ```
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self> {
+        for &(r, c, _) in triplets {
+            if r >= rows || c >= cols {
+                return Err(Error::Dimension(format!(
+                    "triplet entry ({r}, {c}) out of range for a {rows}x{cols} matrix"
+                )));
+            }
+        }
+        let mut entries = triplets.to_vec();
+        entries.sort_by_key(|e| (e.0, e.1));
+        let mut values: Vec<f64> = Vec::with_capacity(entries.len());
+        let mut col_indices: Vec<usize> = Vec::with_capacity(entries.len());
+        let mut row_ptr: Vec<usize> = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        let mut cur = 0usize; // the row currently being filled
+        for (r, c, v) in entries {
+            while cur < r {
+                row_ptr.push(values.len());
+                cur += 1;
+            }
+            if values.len() > row_ptr[cur] && col_indices.last() == Some(&c) {
+                *values.last_mut().unwrap() += v; // duplicate coordinate: sum
+            } else {
+                col_indices.push(c);
+                values.push(v);
+            }
+        }
+        while cur < rows {
+            row_ptr.push(values.len());
+            cur += 1;
+        }
+        Ok(CsrMatrix {
+            values: Arc::new(values),
+            col_indices: Arc::new(col_indices),
+            row_ptr: Arc::new(row_ptr),
+            rows,
+            cols,
+        })
+    }
+
+    /// Compress a dense matrix, keeping every entry that is not exactly zero.
+    pub fn from_dense(a: &Matrix) -> Self {
+        let mut values = Vec::new();
+        let mut col_indices = Vec::new();
+        let mut row_ptr = Vec::with_capacity(a.rows() + 1);
+        row_ptr.push(0);
+        for i in 0..a.rows() {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_indices.push(j);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len());
+        }
+        CsrMatrix {
+            values: Arc::new(values),
+            col_indices: Arc::new(col_indices),
+            row_ptr: Arc::new(row_ptr),
+            rows: a.rows(),
+            cols: a.cols(),
+        }
+    }
+
+    /// Materialize as a dense [`Matrix`] (tests and oracles only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+                row[*j] = *v;
+            }
+        }
+        out
+    }
+
+    /// Number of rows (`m` in the paper).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (`n` in the paper).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry range of row `i` (absolute offsets into the shared
+    /// arrays — see the type docs).
+    #[inline]
+    fn range(&self, i: usize) -> std::ops::Range<usize> {
+        debug_assert!(i < self.rows);
+        self.row_ptr[i]..self.row_ptr[i + 1]
+    }
+
+    /// Column indices of row `i`'s stored entries (sorted ascending).
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[usize] {
+        &self.col_indices[self.range(i)]
+    }
+
+    /// Values of row `i`'s stored entries (matching [`CsrMatrix::row_cols`]).
+    #[inline]
+    pub fn row_values(&self, i: usize) -> &[f64] {
+        &self.values[self.range(i)]
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.row_ptr[self.rows] - self.row_ptr[0]
+    }
+
+    /// Fraction of positions that hold a stored entry, in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Do `self` and `other` share one set of entry arrays (`Arc::ptr_eq`)?
+    ///
+    /// True after a `clone()` and between a [`CsrMatrix::row_block`] view
+    /// and its parent — same observable copy-on-write contract as
+    /// [`Matrix::shares_storage`].
+    pub fn shares_storage(&self, other: &CsrMatrix) -> bool {
+        Arc::ptr_eq(&self.values, &other.values)
+    }
+
+    /// Squared Euclidean norm of every row: `‖A^(i)‖²`.
+    ///
+    /// Runs the same 8-lane [`dot`] kernel as the dense path over each row's
+    /// stored values, so a CSR matrix holding exactly the entries of a dense
+    /// one (no explicit zeros dropped) produces *bitwise identical* norms —
+    /// and therefore identical eq.-4 sampling sequences.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| dot(self.row_values(i), self.row_values(i))).collect()
+    }
+
+    /// Squared Frobenius norm `‖A‖²_F` over the stored entries.
+    pub fn frobenius_sq(&self) -> f64 {
+        let all = &self.values[self.row_ptr[0]..self.row_ptr[self.rows]];
+        dot(all, all)
+    }
+
+    /// Contiguous block of rows `[start, end)` as a zero-copy view: the
+    /// entry arrays are `Arc`-shared with the parent
+    /// ([`CsrMatrix::shares_storage`] holds); only the small row-pointer
+    /// slice is materialized.
+    pub fn row_block(&self, start: usize, end: usize) -> Result<CsrMatrix> {
+        if start > end || end > self.rows {
+            return Err(Error::Dimension(format!(
+                "row block [{start}, {end}) out of range for {} rows",
+                self.rows
+            )));
+        }
+        Ok(CsrMatrix {
+            values: Arc::clone(&self.values),
+            col_indices: Arc::clone(&self.col_indices),
+            row_ptr: Arc::new(self.row_ptr[start..=end].to_vec()),
+            rows: end - start,
+            cols: self.cols,
+        })
+    }
+
+    /// "Crop" the top-left `rows x cols` submatrix (the §3.1 derivation of
+    /// smaller systems from the largest one), filtering stored entries.
+    pub fn crop(&self, rows: usize, cols: usize) -> Result<CsrMatrix> {
+        if rows > self.rows || cols > self.cols {
+            return Err(Error::Dimension(format!(
+                "cannot crop {}x{} out of {}x{}",
+                rows, cols, self.rows, self.cols
+            )));
+        }
+        let mut values = Vec::new();
+        let mut col_indices = Vec::new();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        for i in 0..rows {
+            for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+                if *j < cols {
+                    col_indices.push(*j);
+                    values.push(*v);
+                }
+            }
+            row_ptr.push(values.len());
+        }
+        Ok(CsrMatrix {
+            values: Arc::new(values),
+            col_indices: Arc::new(col_indices),
+            row_ptr: Arc::new(row_ptr),
+            rows,
+            cols,
+        })
+    }
+
+    /// Gram matrix `AᵀA` (`n x n`, dense) accumulated from stored-entry
+    /// outer products — feeds the `alpha*` spectral bounds exactly like the
+    /// dense path.
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for r in 0..self.rows {
+            let cols = self.row_cols(r);
+            let vals = self.row_values(r);
+            // Entries are column-sorted, so the inner loop over `k >= idx`
+            // touches only the upper triangle; mirror at the end.
+            for (idx, (&i, &vi)) in cols.iter().zip(vals).enumerate() {
+                let grow = g.row_mut(i);
+                for (&j, &vj) in cols[idx..].iter().zip(&vals[idx..]) {
+                    grow[j] += vi * vj;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+}
+
+/// Structural equality: same shape and same stored entries per row.
+///
+/// Manual because [`CsrMatrix::row_block`] views keep *absolute* `row_ptr`
+/// offsets into the shared arrays — a view and an entry-identical freshly
+/// built matrix must compare equal even though their raw pointers differ.
+impl PartialEq for CsrMatrix {
+    fn eq(&self, other: &CsrMatrix) -> bool {
+        if self.rows != other.rows || self.cols != other.cols {
+            return false;
+        }
+        (0..self.rows).all(|i| {
+            self.row_cols(i) == other.row_cols(i) && self.row_values(i) == other.row_values(i)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2], [0, 0, 0], [0, 3, 4]] — includes an empty row.
+        CsrMatrix::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 1, 3.0), (2, 2, 4.0)])
+            .unwrap()
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_sums() {
+        let a = CsrMatrix::from_triplets(2, 3, &[(1, 2, 5.0), (0, 1, 1.0), (0, 1, 2.0)]).unwrap();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row_cols(0), &[1]);
+        assert_eq!(a.row_values(0), &[3.0]);
+        assert_eq!(a.row_cols(1), &[2]);
+    }
+
+    #[test]
+    fn from_triplets_rejects_out_of_range() {
+        assert!(CsrMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(CsrMatrix::from_triplets(2, 2, &[(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let d = Matrix::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, -3.0, 0.0]).unwrap();
+        let s = CsrMatrix::from_dense(&d);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn row_norms_match_dense_bitwise() {
+        let a = sample();
+        let dense_norms = a.to_dense().row_norms_sq();
+        for (s, d) in a.row_norms_sq().iter().zip(&dense_norms) {
+            assert_eq!(s.to_bits(), d.to_bits());
+        }
+        assert_eq!(a.row_norms_sq()[1], 0.0, "empty row has zero norm");
+    }
+
+    #[test]
+    fn frobenius_over_stored_entries() {
+        let a = sample();
+        assert_eq!(a.frobenius_sq(), 1.0 + 4.0 + 9.0 + 16.0);
+    }
+
+    #[test]
+    fn row_block_is_a_view() {
+        let a = sample();
+        let b = a.row_block(1, 3).unwrap();
+        assert_eq!(b.rows(), 2);
+        assert!(b.shares_storage(&a), "row block aliases the parent's entries");
+        assert_eq!(b.row_cols(1), &[1, 2]);
+        assert_eq!(b.row_values(1), &[3.0, 4.0]);
+        assert_eq!(b.nnz(), 2);
+        assert!(a.row_block(2, 4).is_err());
+    }
+
+    #[test]
+    fn view_equals_fresh_copy() {
+        let a = sample();
+        let view = a.row_block(2, 3).unwrap();
+        let fresh = CsrMatrix::from_triplets(1, 3, &[(0, 1, 3.0), (0, 2, 4.0)]).unwrap();
+        assert_eq!(view, fresh, "absolute row_ptr offsets must not leak into equality");
+    }
+
+    #[test]
+    fn crop_filters_entries() {
+        let a = sample();
+        let c = a.crop(2, 2).unwrap();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c.nnz(), 1); // only (0,0) survives
+        assert_eq!(c.row_values(0), &[1.0]);
+        assert!(a.crop(4, 1).is_err());
+    }
+
+    #[test]
+    fn gram_matches_dense_oracle() {
+        let a = sample();
+        let d = a.to_dense();
+        let expect = d.transpose().matmul(&d).unwrap();
+        let g = a.gram();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((g[(i, j)] - expect[(i, j)]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let a = sample();
+        let c = a.clone();
+        assert!(c.shares_storage(&a));
+        assert_eq!(c, a);
+    }
+}

@@ -8,15 +8,18 @@
 //! of being re-streamed from L2/L3 once per row.
 
 use super::matrix::Matrix;
-use super::vector::{axpy, dot};
+use super::storage::RowStorage;
+use super::vector::dot;
 use crate::error::{Error, Result};
 
 /// Column-panel width for [`gemv_block_into`]: 4096 f64 = 32 KiB, one L1d's
 /// worth of `x`, leaving the row stream the other half of the cache.
-const GEMV_PANEL: usize = 4096;
+pub(crate) const GEMV_PANEL: usize = 4096;
 
-/// `y = A x` (allocates the output).
-pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+/// `y = A x` (allocates the output). Storage-generic: accepts any
+/// [`RowStorage`] backend — dense, CSR, or the [`Storage`](super::Storage)
+/// enum a [`LinearSystem`](crate::data::LinearSystem) holds.
+pub fn gemv<S: RowStorage + ?Sized>(a: &S, x: &[f64]) -> Result<Vec<f64>> {
     if x.len() != a.cols() {
         return Err(Error::Dimension(format!(
             "gemv: A is {}x{}, x has len {}",
@@ -32,32 +35,26 @@ pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
 
 /// `y = A x` into a caller-provided buffer (no allocation; hot path).
 ///
-/// Delegates to the cache-blocked kernel when a row no longer fits L1
-/// alongside `x`; below that size blocking only adds loop overhead.
-pub fn gemv_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), a.cols());
-    debug_assert_eq!(y.len(), a.rows());
-    if a.cols() > GEMV_PANEL {
-        gemv_block_into(a, x, y);
-        return;
-    }
-    for (yi, row) in y.iter_mut().zip(a.rows_iter()) {
-        *yi = dot(row, x);
-    }
+/// The dense backend delegates to the cache-blocked kernel when a row no
+/// longer fits L1 alongside `x`; below that size blocking only adds loop
+/// overhead. Sparse rows already touch only their stored columns.
+pub fn gemv_into<S: RowStorage + ?Sized>(a: &S, x: &[f64], y: &mut [f64]) {
+    a.gemv_into(x, y);
 }
 
-/// Cache-blocked `y = A x`: columns are processed in panels of
-/// [`GEMV_PANEL`], each panel's slice of `x` staying L1-resident while every
-/// row's matching segment streams past it once.
+/// Cache-blocked `y = A x`: on dense storage, columns are processed in
+/// panels of [`GEMV_PANEL`], each panel's slice of `x` staying L1-resident
+/// while every row's matching segment streams past it once.
 ///
 /// Same 8-lane `dot` per (row, panel) pair; per-row partials are accumulated
 /// panel-major, so the summation associates as
 /// `(panel_0 + panel_1) + panel_2 + ...` rather than one long chain — the
 /// usual f64 reassociation caveat applies when comparing against
 /// [`gemv_into`] on narrow matrices (both are exact for the panel-sized
-/// case, where the two kernels coincide).
-pub fn gemv_block_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
-    gemv_block_into_with_panel(a, x, y, GEMV_PANEL);
+/// case, where the two kernels coincide). CSR storage has no panel to
+/// block, so this coincides with [`gemv_into`] there.
+pub fn gemv_block_into<S: RowStorage + ?Sized>(a: &S, x: &[f64], y: &mut [f64]) {
+    a.gemv_block_into(x, y);
 }
 
 /// Panel-width-parameterized body of [`gemv_block_into`] (exposed to tests
@@ -79,8 +76,8 @@ pub(crate) fn gemv_block_into_with_panel(a: &Matrix, x: &[f64], y: &mut [f64], p
     }
 }
 
-/// `y = Aᵀ x` (allocates the output).
-pub fn gemv_transpose(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+/// `y = Aᵀ x` (allocates the output). Storage-generic like [`gemv`].
+pub fn gemv_transpose<S: RowStorage + ?Sized>(a: &S, x: &[f64]) -> Result<Vec<f64>> {
     if x.len() != a.rows() {
         return Err(Error::Dimension(format!(
             "gemv_transpose: A is {}x{}, x has len {}",
@@ -97,15 +94,8 @@ pub fn gemv_transpose(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
 /// `y = Aᵀ x` into a caller-provided buffer.
 ///
 /// Walks A row-by-row (`y += x_i * A^(i)`), never touching a column stride.
-pub fn gemv_transpose_into(a: &Matrix, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), a.rows());
-    debug_assert_eq!(y.len(), a.cols());
-    y.fill(0.0);
-    for (xi, row) in x.iter().zip(a.rows_iter()) {
-        if *xi != 0.0 {
-            axpy(*xi, row, y);
-        }
-    }
+pub fn gemv_transpose_into<S: RowStorage + ?Sized>(a: &S, x: &[f64], y: &mut [f64]) {
+    a.gemv_transpose_into(x, y);
 }
 
 #[cfg(test)]

@@ -18,9 +18,17 @@ use crate::error::{Error, Result};
 use std::sync::Arc;
 
 /// Dense row-major matrix of `f64` (cheaply clonable, copy-on-write).
-#[derive(Clone, Debug, PartialEq)]
+///
+/// A `Matrix` may be a *window* into a larger shared buffer
+/// ([`Matrix::row_block`] and full-width [`Matrix::crop`] produce these
+/// without copying); `offset` locates the window's first element. Windows
+/// behave exactly like owned matrices — mutation detaches them onto their
+/// own buffer first (copy-on-write, observable via
+/// [`Matrix::shares_storage`]).
+#[derive(Clone, Debug)]
 pub struct Matrix {
     data: Arc<Vec<f64>>,
+    offset: usize,
     rows: usize,
     cols: usize,
 }
@@ -28,7 +36,7 @@ pub struct Matrix {
 impl Matrix {
     /// Zero matrix of shape `rows x cols`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { data: Arc::new(vec![0.0; rows * cols]), rows, cols }
+        Matrix { data: Arc::new(vec![0.0; rows * cols]), offset: 0, rows, cols }
     }
 
     /// Build from a flat row-major buffer.
@@ -43,15 +51,30 @@ impl Matrix {
                 cols
             )));
         }
-        Ok(Matrix { data: Arc::new(data), rows, cols })
+        Ok(Matrix { data: Arc::new(data), offset: 0, rows, cols })
+    }
+
+    /// The window of the shared buffer this matrix occupies.
+    #[inline]
+    fn buf(&self) -> &[f64] {
+        &self.data[self.offset..self.offset + self.rows * self.cols]
     }
 
     /// Copy-on-write access to the storage: clones the buffer first if (and
-    /// only if) it is shared with another `Matrix`. Single mutation
-    /// gateway — every `&mut` accessor funnels through here.
+    /// only if) it is shared with another `Matrix`, and detaches window
+    /// views onto their own exactly-sized buffer. Single mutation gateway —
+    /// every `&mut` accessor funnels through here.
     #[inline]
-    fn data_mut(&mut self) -> &mut Vec<f64> {
-        Arc::make_mut(&mut self.data)
+    fn data_mut(&mut self) -> &mut [f64] {
+        if self.offset != 0 || self.data.len() != self.rows * self.cols {
+            // A window into a larger shared buffer: mutating through
+            // `Arc::make_mut` would either copy the whole parent buffer or
+            // (worse, as sole owner) write into rows outside the window.
+            // Detach onto an owned, exactly-sized buffer instead.
+            self.data = Arc::new(self.buf().to_vec());
+            self.offset = 0;
+        }
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
     /// Do `self` and `other` share one storage buffer (`Arc::ptr_eq`)?
@@ -88,7 +111,7 @@ impl Matrix {
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         debug_assert!(i < self.rows);
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data[self.offset + i * self.cols..self.offset + (i + 1) * self.cols]
     }
 
     /// Mutable view of row `i` (copy-on-write if the storage is shared).
@@ -101,13 +124,13 @@ impl Matrix {
 
     /// Iterator over rows as slices.
     pub fn rows_iter(&self) -> impl Iterator<Item = &[f64]> {
-        self.data.chunks_exact(self.cols)
+        self.buf().chunks_exact(self.cols)
     }
 
-    /// Flat row-major buffer.
+    /// Flat row-major buffer (the window this matrix occupies).
     #[inline]
     pub fn as_slice(&self) -> &[f64] {
-        &self.data
+        self.buf()
     }
 
     /// Flat mutable row-major buffer (copy-on-write if shared).
@@ -126,7 +149,7 @@ impl Matrix {
 
     /// Squared Frobenius norm `‖A‖²_F = Σ ‖A^(i)‖²`.
     pub fn frobenius_sq(&self) -> f64 {
-        super::vector::norm2_sq(&self.data)
+        super::vector::norm2_sq(self.buf())
     }
 
     /// "Crop" the top-left `rows x cols` submatrix.
@@ -141,6 +164,17 @@ impl Matrix {
                 rows, cols, self.rows, self.cols
             )));
         }
+        if cols == self.cols {
+            // Full-width crop keeps the row-major layout intact: alias the
+            // shared buffer instead of copying ([`Matrix::shares_storage`]
+            // holds until the crop is mutated).
+            return Ok(Matrix {
+                data: Arc::clone(&self.data),
+                offset: self.offset,
+                rows,
+                cols,
+            });
+        }
         let mut out = Matrix::zeros(rows, cols);
         for i in 0..rows {
             out.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
@@ -148,7 +182,9 @@ impl Matrix {
         Ok(out)
     }
 
-    /// Contiguous block of rows `[start, end)` as a new matrix.
+    /// Contiguous block of rows `[start, end)` — a zero-copy window into the
+    /// shared buffer ([`Matrix::shares_storage`] holds; mutation detaches
+    /// the block copy-on-write, leaving the parent untouched).
     pub fn row_block(&self, start: usize, end: usize) -> Result<Matrix> {
         if start > end || end > self.rows {
             return Err(Error::Dimension(format!(
@@ -157,7 +193,8 @@ impl Matrix {
             )));
         }
         Ok(Matrix {
-            data: Arc::new(self.data[start * self.cols..end * self.cols].to_vec()),
+            data: Arc::clone(&self.data),
+            offset: self.offset + start * self.cols,
             rows: end - start,
             cols: self.cols,
         })
@@ -233,7 +270,20 @@ impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline]
     fn index(&self, (i, j): (usize, usize)) -> &f64 {
-        &self.data[i * self.cols + j]
+        &self.data[self.offset + i * self.cols + j]
+    }
+}
+
+/// Structural equality on shape and elements.
+///
+/// Manual because a window ([`Matrix::row_block`]) and an element-identical
+/// owned matrix must compare equal even though their offsets and buffer
+/// lengths differ.
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.as_slice() == other.as_slice()
     }
 }
 
@@ -361,5 +411,49 @@ mod tests {
     #[test]
     fn distinct_constructions_do_not_share() {
         assert!(!sample().shares_storage(&sample()));
+    }
+
+    #[test]
+    fn row_block_is_a_zero_copy_window() {
+        let m = sample();
+        let b = m.row_block(1, 2).unwrap();
+        assert!(b.shares_storage(&m), "row block aliases the parent buffer");
+        assert_eq!(b.as_slice(), &[4.0, 5.0, 6.0]);
+        assert_eq!(b[(0, 2)], 6.0);
+        assert_eq!(b.frobenius_sq(), 77.0);
+        assert_eq!(b, Matrix::from_vec(1, 3, vec![4.0, 5.0, 6.0]).unwrap());
+    }
+
+    #[test]
+    fn window_mutation_detaches_and_spares_parent() {
+        let m = sample();
+        let mut b = m.row_block(0, 1).unwrap();
+        b.row_mut(0)[1] = 99.0;
+        assert!(!b.shares_storage(&m), "mutation detaches the window");
+        assert_eq!(b.as_slice(), &[1.0, 99.0, 3.0]);
+        assert_eq!(m[(0, 1)], 2.0, "parent must be untouched");
+        assert_eq!(b.as_slice().len(), 3, "detached window owns an exactly-sized buffer");
+    }
+
+    #[test]
+    fn nested_windows_stay_consistent() {
+        let m = Matrix::from_vec(4, 2, (0..8).map(|i| i as f64).collect()).unwrap();
+        let b = m.row_block(1, 4).unwrap();
+        let bb = b.row_block(1, 3).unwrap();
+        assert!(bb.shares_storage(&m));
+        assert_eq!(bb.row(0), &[4.0, 5.0]);
+        assert_eq!(bb.row(1), &[6.0, 7.0]);
+        assert_eq!(bb.row_norms_sq(), vec![16.0 + 25.0, 36.0 + 49.0]);
+    }
+
+    #[test]
+    fn full_width_crop_shares_storage() {
+        let m = sample();
+        let c = m.crop(1, 3).unwrap();
+        assert!(c.shares_storage(&m), "full-width crop is a window");
+        assert_eq!(c.row(0), &[1.0, 2.0, 3.0]);
+        let narrower = m.crop(2, 2).unwrap();
+        assert!(!narrower.shares_storage(&m), "narrowing crop must re-pack rows");
+        assert_eq!(narrower.row(1), &[4.0, 5.0]);
     }
 }

@@ -1,23 +1,29 @@
-//! Dense linear-algebra substrate.
+//! Linear-algebra substrate.
 //!
 //! Everything the paper's experiments rely on, built from scratch (no BLAS
-//! available in this environment): a row-major dense matrix, vector kernels
-//! tuned for the Kaczmarz hot path (`dot`, `axpy`), matrix-vector products,
-//! a Cholesky factorization, and eigen/singular-value routines (power and
-//! inverse-power iteration, and a one-sided Jacobi SVD used as the test
-//! oracle) needed to compute the optimal RKA relaxation parameter
-//! `alpha*` (eq. 6 of the paper).
+//! available in this environment): a row-major dense matrix, a CSR sparse
+//! matrix behind the same row-access contract ([`RowStorage`], dispatched
+//! through the two-variant [`Storage`] enum every solver runs against),
+//! vector kernels tuned for the Kaczmarz hot path (`dot`, `axpy`),
+//! matrix-vector products, a Cholesky factorization, and
+//! eigen/singular-value routines (power and inverse-power iteration, and a
+//! one-sided Jacobi SVD used as the test oracle) needed to compute the
+//! optimal RKA relaxation parameter `alpha*` (eq. 6 of the paper).
 
 pub mod cholesky;
+pub mod csr;
 pub mod eig;
 pub mod gemv;
 pub mod matrix;
+pub mod storage;
 pub mod svd;
 pub mod vector;
 
 pub use cholesky::Cholesky;
+pub use csr::CsrMatrix;
 pub use eig::{inverse_power_iteration, power_iteration};
 pub use gemv::{gemv, gemv_block_into, gemv_into, gemv_transpose, gemv_transpose_into};
 pub use matrix::Matrix;
+pub use storage::{RowEntries, RowStorage, Storage};
 pub use svd::jacobi_singular_values;
 pub use vector::{axpy, axpy_dot, dot, norm2, norm2_sq, scale_in_place, sub};

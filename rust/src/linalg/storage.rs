@@ -1,0 +1,723 @@
+//! Storage-generic row access: one trait, two backends.
+//!
+//! Every Kaczmarz variant in this crate touches the matrix the same way —
+//! read a row, dot it against the iterate, axpy it back — so the whole
+//! solver stack can be made storage-agnostic with one small trait.
+//! [`RowStorage`] captures exactly the operations the 11 solve loops, the
+//! stopping/telemetry GEMVs, and the batch-serving layer perform:
+//!
+//! - row-scoped `dot` / `axpy` and the fused [`RowStorage::row_axpy_dot`]
+//!   (the RKAB block-sweep workhorse),
+//! - column-ranged flavors for the block-parallel column partitioning
+//!   (`block_seq`),
+//! - `(column, value)` iteration for scatter-style updates (`asyrk`),
+//! - the row-norm precomputation behind eq.-4 sampling, and the
+//!   matrix-vector products behind residual stopping and CGLS.
+//!
+//! Two backends implement it: the paper's Arc-backed dense [`Matrix`]
+//! (reference implementation — every dense trait method delegates to the
+//! exact kernels the solvers called before this abstraction existed, so
+//! dense results are *bitwise identical* to the pre-trait code) and the
+//! sparse [`CsrMatrix`], whose row operations touch only stored entries.
+//!
+//! [`Storage`] is the two-variant enum the crate's [`LinearSystem`] holds.
+//! Enum dispatch was chosen over generics deliberately: the solvers, the
+//! batch layer, and the distributed engines stay non-generic (no type
+//! parameter explosion through `Solver`/`BatchSolver`/`SimCluster`), the
+//! branch is per-*operation* on rows of length `n` (noise next to the
+//! `O(n)` kernel behind it), and heterogeneous queues of dense and sparse
+//! jobs need no trait objects.
+//!
+//! [`LinearSystem`]: crate::data::LinearSystem
+
+use super::csr::CsrMatrix;
+use super::gemv::{gemv_block_into_with_panel, GEMV_PANEL};
+use super::matrix::Matrix;
+use super::vector::{axpy, axpy_dot, dot, norm2_sq};
+use crate::error::Result;
+
+/// Iterator over one row's `(column, value)` entries, concrete so the trait
+/// stays object-safe-free of generics and builds on older toolchains.
+///
+/// The dense flavor yields **every** position — zeros included — which is
+/// what keeps scatter-style consumers (the asynchronous solver's per-entry
+/// atomic adds) bitwise identical to the pre-trait row loops. The sparse
+/// flavor yields stored entries only, column-sorted.
+pub enum RowEntries<'a> {
+    /// Dense row: every `(j, a_ij)` for `j in 0..cols`, zeros included.
+    Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
+    /// Sparse row: stored entries only, column-sorted.
+    Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
+}
+
+impl Iterator for RowEntries<'_> {
+    type Item = (usize, f64);
+
+    #[inline]
+    fn next(&mut self) -> Option<(usize, f64)> {
+        match self {
+            RowEntries::Dense(it) => it.next().map(|(j, &v)| (j, v)),
+            RowEntries::Sparse(it) => it.next().map(|(&j, &v)| (j, v)),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            RowEntries::Dense(it) => it.size_hint(),
+            RowEntries::Sparse(it) => it.size_hint(),
+        }
+    }
+}
+
+/// Row-access contract every Kaczmarz solve loop runs against.
+///
+/// Implementations must treat `i`/`next` as in-range row indices (callers
+/// sample them from the system's row distribution) and slices as full-length
+/// (`x`/`y` of length `cols`, GEMV outputs of length `rows`).
+pub trait RowStorage {
+    /// Number of rows (`m` in the paper).
+    fn rows(&self) -> usize;
+
+    /// Number of columns (`n` in the paper).
+    fn cols(&self) -> usize;
+
+    /// Squared Euclidean norm of every row: `‖A^(i)‖²` (the eq.-4 sampling
+    /// weights; precomputed once per system).
+    fn row_norms_sq(&self) -> Vec<f64>;
+
+    /// Residual dot product `<A^(i), x>` of row `i` against `x`.
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64;
+
+    /// Projection update `y += scale * A^(i)` along row `i`.
+    fn row_axpy(&self, i: usize, scale: f64, y: &mut [f64]);
+
+    /// Fused projection: `y += scale * A^(i)`, returning `<A^(next), y>`
+    /// over the *updated* `y` — the RKAB block-sweep workhorse. Dense
+    /// storage fuses the two passes over `y` into one; sparse storage
+    /// updates only row `i`'s stored coordinates of `y` before reading row
+    /// `next`'s.
+    fn row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> f64;
+
+    /// Column-ranged residual dot `<A^(i)[lo..hi], x[lo..hi]>` (`x` is the
+    /// full-length vector; the block-parallel engine hands each worker one
+    /// column chunk).
+    fn row_dot_range(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64;
+
+    /// Column-ranged projection update `y[j] += scale * a_ij` for
+    /// `j in lo..hi` (`y` is the full-length vector).
+    fn row_axpy_range(&self, i: usize, scale: f64, lo: usize, hi: usize, y: &mut [f64]);
+
+    /// Iterate row `i`'s `(column, value)` entries — all positions for
+    /// dense storage, stored entries for sparse (see [`RowEntries`]).
+    fn row_entries(&self, i: usize) -> RowEntries<'_>;
+
+    /// `y = A x` (no allocation; hot path behind residual stopping).
+    fn gemv_into(&self, x: &[f64], y: &mut [f64]);
+
+    /// Cache-blocked `y = A x` for wide dense matrices; sparse storage has
+    /// no panel to block (rows already touch only their stored columns), so
+    /// it coincides with [`RowStorage::gemv_into`].
+    fn gemv_block_into(&self, x: &[f64], y: &mut [f64]);
+
+    /// `y = Aᵀ x` without materializing `Aᵀ` (row-scaled accumulation).
+    fn gemv_transpose_into(&self, x: &[f64], y: &mut [f64]);
+}
+
+impl RowStorage for Matrix {
+    #[inline]
+    fn rows(&self) -> usize {
+        Matrix::rows(self)
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        Matrix::cols(self)
+    }
+
+    fn row_norms_sq(&self) -> Vec<f64> {
+        self.rows_iter().map(norm2_sq).collect()
+    }
+
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        dot(self.row(i), x)
+    }
+
+    #[inline]
+    fn row_axpy(&self, i: usize, scale: f64, y: &mut [f64]) {
+        axpy(scale, self.row(i), y);
+    }
+
+    #[inline]
+    fn row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> f64 {
+        axpy_dot(scale, self.row(i), self.row(next), y)
+    }
+
+    #[inline]
+    fn row_dot_range(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64 {
+        dot(&self.row(i)[lo..hi], &x[lo..hi])
+    }
+
+    #[inline]
+    fn row_axpy_range(&self, i: usize, scale: f64, lo: usize, hi: usize, y: &mut [f64]) {
+        let row = self.row(i);
+        for j in lo..hi {
+            y[j] += scale * row[j];
+        }
+    }
+
+    #[inline]
+    fn row_entries(&self, i: usize) -> RowEntries<'_> {
+        RowEntries::Dense(self.row(i).iter().enumerate())
+    }
+
+    fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), Matrix::cols(self));
+        debug_assert_eq!(y.len(), Matrix::rows(self));
+        if Matrix::cols(self) > GEMV_PANEL {
+            gemv_block_into_with_panel(self, x, y, GEMV_PANEL);
+            return;
+        }
+        for (yi, row) in y.iter_mut().zip(self.rows_iter()) {
+            *yi = dot(row, x);
+        }
+    }
+
+    fn gemv_block_into(&self, x: &[f64], y: &mut [f64]) {
+        gemv_block_into_with_panel(self, x, y, GEMV_PANEL);
+    }
+
+    fn gemv_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), Matrix::rows(self));
+        debug_assert_eq!(y.len(), Matrix::cols(self));
+        y.fill(0.0);
+        for (xi, row) in x.iter().zip(self.rows_iter()) {
+            if *xi != 0.0 {
+                axpy(*xi, row, y);
+            }
+        }
+    }
+}
+
+impl RowStorage for CsrMatrix {
+    #[inline]
+    fn rows(&self) -> usize {
+        CsrMatrix::rows(self)
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        CsrMatrix::cols(self)
+    }
+
+    fn row_norms_sq(&self) -> Vec<f64> {
+        CsrMatrix::row_norms_sq(self)
+    }
+
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+            acc += v * x[*j];
+        }
+        acc
+    }
+
+    #[inline]
+    fn row_axpy(&self, i: usize, scale: f64, y: &mut [f64]) {
+        for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+            y[*j] += scale * v;
+        }
+    }
+
+    #[inline]
+    fn row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> f64 {
+        // Sparse fused flavor: the update touches only row `i`'s stored
+        // coordinates of `y`; the dot then reads only row `next`'s.
+        self.row_axpy(i, scale, y);
+        self.row_dot(next, y)
+    }
+
+    #[inline]
+    fn row_dot_range(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+            if lo <= *j && *j < hi {
+                acc += v * x[*j];
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    fn row_axpy_range(&self, i: usize, scale: f64, lo: usize, hi: usize, y: &mut [f64]) {
+        for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+            if lo <= *j && *j < hi {
+                y[*j] += scale * v;
+            }
+        }
+    }
+
+    #[inline]
+    fn row_entries(&self, i: usize) -> RowEntries<'_> {
+        RowEntries::Sparse(self.row_cols(i).iter().zip(self.row_values(i).iter()))
+    }
+
+    fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), CsrMatrix::cols(self));
+        debug_assert_eq!(y.len(), CsrMatrix::rows(self));
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = self.row_dot(i, x);
+        }
+    }
+
+    fn gemv_block_into(&self, x: &[f64], y: &mut [f64]) {
+        // No column panel to block: each sparse row already touches only its
+        // stored columns of `x`.
+        self.gemv_into(x, y);
+    }
+
+    fn gemv_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), CsrMatrix::rows(self));
+        debug_assert_eq!(y.len(), CsrMatrix::cols(self));
+        y.fill(0.0);
+        for (i, xi) in x.iter().enumerate() {
+            if *xi != 0.0 {
+                self.row_axpy(i, *xi, y);
+            }
+        }
+    }
+}
+
+/// The storage a [`LinearSystem`](crate::data::LinearSystem) holds: dense or
+/// CSR, behind one enum so every solver, the batch layer, and the simulated
+/// cluster accept either backend without growing a type parameter.
+///
+/// Constructors take `impl Into<Storage>`, so call sites keep passing a bare
+/// [`Matrix`] (or now a [`CsrMatrix`]) and conversion is implicit.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    /// Dense row-major backend (the paper's native layout).
+    Dense(Matrix),
+    /// Compressed sparse row backend.
+    Csr(CsrMatrix),
+}
+
+impl From<Matrix> for Storage {
+    fn from(m: Matrix) -> Storage {
+        Storage::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for Storage {
+    fn from(m: CsrMatrix) -> Storage {
+        Storage::Csr(m)
+    }
+}
+
+impl Storage {
+    /// Number of rows (`m` in the paper).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Storage::Dense(m) => m.rows(),
+            Storage::Csr(m) => m.rows(),
+        }
+    }
+
+    /// Number of columns (`n` in the paper).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Storage::Dense(m) => m.cols(),
+            Storage::Csr(m) => m.cols(),
+        }
+    }
+
+    /// The dense backend, if that is what this storage holds.
+    #[inline]
+    pub fn as_dense(&self) -> Option<&Matrix> {
+        match self {
+            Storage::Dense(m) => Some(m),
+            Storage::Csr(_) => None,
+        }
+    }
+
+    /// The CSR backend, if that is what this storage holds.
+    #[inline]
+    pub fn as_csr(&self) -> Option<&CsrMatrix> {
+        match self {
+            Storage::Dense(_) => None,
+            Storage::Csr(m) => Some(m),
+        }
+    }
+
+    /// Contiguous view of row `i` — **dense backend only**.
+    ///
+    /// # Panics
+    ///
+    /// Panics on CSR storage, which has no contiguous row slice; iterate
+    /// [`Storage::row_entries`] instead (dense-only callers — tests,
+    /// oracles — use this knowingly).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        match self {
+            Storage::Dense(m) => m.row(i),
+            Storage::Csr(_) => {
+                panic!("Storage::row is dense-only; iterate row_entries for CSR")
+            }
+        }
+    }
+
+    /// Mutable view of row `i` — **dense backend only** (copy-on-write).
+    ///
+    /// # Panics
+    ///
+    /// Panics on CSR storage (sparse rows cannot be rewritten in place).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        match self {
+            Storage::Dense(m) => m.row_mut(i),
+            Storage::Csr(_) => {
+                panic!("Storage::row_mut is dense-only; rebuild the CsrMatrix instead")
+            }
+        }
+    }
+
+    /// Do `self` and `other` share one storage buffer?
+    ///
+    /// Delegates to the backend's `Arc::ptr_eq` check; storages of different
+    /// kinds never share. The batch layer's "one resident `A` across all
+    /// lanes" guarantee is asserted through this.
+    pub fn shares_storage(&self, other: &Storage) -> bool {
+        match (self, other) {
+            (Storage::Dense(a), Storage::Dense(b)) => a.shares_storage(b),
+            (Storage::Csr(a), Storage::Csr(b)) => a.shares_storage(b),
+            _ => false,
+        }
+    }
+
+    /// Squared Euclidean norm of every row (eq.-4 sampling weights).
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Storage::Dense(m) => RowStorage::row_norms_sq(m),
+            Storage::Csr(m) => RowStorage::row_norms_sq(m),
+        }
+    }
+
+    /// Squared Frobenius norm `‖A‖²_F`.
+    pub fn frobenius_sq(&self) -> f64 {
+        match self {
+            Storage::Dense(m) => m.frobenius_sq(),
+            Storage::Csr(m) => m.frobenius_sq(),
+        }
+    }
+
+    /// Residual dot product `<A^(i), x>` (see [`RowStorage::row_dot`]).
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        match self {
+            Storage::Dense(m) => RowStorage::row_dot(m, i, x),
+            Storage::Csr(m) => RowStorage::row_dot(m, i, x),
+        }
+    }
+
+    /// Projection update `y += scale * A^(i)` (see [`RowStorage::row_axpy`]).
+    #[inline]
+    pub fn row_axpy(&self, i: usize, scale: f64, y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => RowStorage::row_axpy(m, i, scale, y),
+            Storage::Csr(m) => RowStorage::row_axpy(m, i, scale, y),
+        }
+    }
+
+    /// Fused projection + next-row dot (see [`RowStorage::row_axpy_dot`]).
+    #[inline]
+    pub fn row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> f64 {
+        match self {
+            Storage::Dense(m) => RowStorage::row_axpy_dot(m, i, scale, next, y),
+            Storage::Csr(m) => RowStorage::row_axpy_dot(m, i, scale, next, y),
+        }
+    }
+
+    /// Column-ranged residual dot (see [`RowStorage::row_dot_range`]).
+    #[inline]
+    pub fn row_dot_range(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64 {
+        match self {
+            Storage::Dense(m) => RowStorage::row_dot_range(m, i, lo, hi, x),
+            Storage::Csr(m) => RowStorage::row_dot_range(m, i, lo, hi, x),
+        }
+    }
+
+    /// Column-ranged projection update (see [`RowStorage::row_axpy_range`]).
+    #[inline]
+    pub fn row_axpy_range(&self, i: usize, scale: f64, lo: usize, hi: usize, y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => RowStorage::row_axpy_range(m, i, scale, lo, hi, y),
+            Storage::Csr(m) => RowStorage::row_axpy_range(m, i, scale, lo, hi, y),
+        }
+    }
+
+    /// Iterate row `i`'s `(column, value)` entries (see
+    /// [`RowStorage::row_entries`]).
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> RowEntries<'_> {
+        match self {
+            Storage::Dense(m) => RowStorage::row_entries(m, i),
+            Storage::Csr(m) => RowStorage::row_entries(m, i),
+        }
+    }
+
+    /// Contiguous block of rows `[start, end)` in the same backend. Dense
+    /// blocks and CSR blocks both alias the parent's `Arc` storage
+    /// ([`Storage::shares_storage`] holds until a dense block is mutated).
+    pub fn row_block(&self, start: usize, end: usize) -> Result<Storage> {
+        match self {
+            Storage::Dense(m) => Ok(Storage::Dense(m.row_block(start, end)?)),
+            Storage::Csr(m) => Ok(Storage::Csr(m.row_block(start, end)?)),
+        }
+    }
+
+    /// Top-left `rows x cols` submatrix in the same backend (§3.1 cropping).
+    pub fn crop(&self, rows: usize, cols: usize) -> Result<Storage> {
+        match self {
+            Storage::Dense(m) => Ok(Storage::Dense(m.crop(rows, cols)?)),
+            Storage::Csr(m) => Ok(Storage::Csr(m.crop(rows, cols)?)),
+        }
+    }
+
+    /// Gram matrix `AᵀA` (always dense: it is `n x n` and feeds the dense
+    /// spectral-bound machinery).
+    pub fn gram(&self) -> Matrix {
+        match self {
+            Storage::Dense(m) => m.gram(),
+            Storage::Csr(m) => m.gram(),
+        }
+    }
+}
+
+impl RowStorage for Storage {
+    fn rows(&self) -> usize {
+        Storage::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Storage::cols(self)
+    }
+
+    fn row_norms_sq(&self) -> Vec<f64> {
+        Storage::row_norms_sq(self)
+    }
+
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        Storage::row_dot(self, i, x)
+    }
+
+    fn row_axpy(&self, i: usize, scale: f64, y: &mut [f64]) {
+        Storage::row_axpy(self, i, scale, y);
+    }
+
+    fn row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> f64 {
+        Storage::row_axpy_dot(self, i, scale, next, y)
+    }
+
+    fn row_dot_range(&self, i: usize, lo: usize, hi: usize, x: &[f64]) -> f64 {
+        Storage::row_dot_range(self, i, lo, hi, x)
+    }
+
+    fn row_axpy_range(&self, i: usize, scale: f64, lo: usize, hi: usize, y: &mut [f64]) {
+        Storage::row_axpy_range(self, i, scale, lo, hi, y);
+    }
+
+    fn row_entries(&self, i: usize) -> RowEntries<'_> {
+        Storage::row_entries(self, i)
+    }
+
+    fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => RowStorage::gemv_into(m, x, y),
+            Storage::Csr(m) => RowStorage::gemv_into(m, x, y),
+        }
+    }
+
+    fn gemv_block_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => RowStorage::gemv_block_into(m, x, y),
+            Storage::Csr(m) => RowStorage::gemv_block_into(m, x, y),
+        }
+    }
+
+    fn gemv_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => RowStorage::gemv_transpose_into(m, x, y),
+            Storage::Csr(m) => RowStorage::gemv_transpose_into(m, x, y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_sample(m: usize, n: usize) -> Matrix {
+        let data: Vec<f64> = (0..m * n).map(|i| ((i * 13 % 17) as f64) - 8.0).collect();
+        Matrix::from_vec(m, n, data).unwrap()
+    }
+
+    #[test]
+    fn dense_row_ops_are_bitwise_the_kernels() {
+        let a = dense_sample(5, 11);
+        let x: Vec<f64> = (0..11).map(|i| (i as f64 * 0.37).sin()).collect();
+        for i in 0..5 {
+            let d_trait = RowStorage::row_dot(&a, i, &x);
+            let d_kernel = dot(a.row(i), &x);
+            assert_eq!(d_trait.to_bits(), d_kernel.to_bits());
+
+            let mut y1 = x.clone();
+            let mut y2 = x.clone();
+            RowStorage::row_axpy(&a, i, 0.731, &mut y1);
+            axpy(0.731, a.row(i), &mut y2);
+            assert_eq!(y1, y2);
+
+            let next = (i + 1) % 5;
+            let mut v1 = x.clone();
+            let mut v2 = x.clone();
+            let f1 = RowStorage::row_axpy_dot(&a, i, -0.2, next, &mut v1);
+            let f2 = axpy_dot(-0.2, a.row(i), a.row(next), &mut v2);
+            assert_eq!(f1.to_bits(), f2.to_bits());
+            assert_eq!(v1, v2);
+        }
+    }
+
+    #[test]
+    fn dense_ranged_ops_match_slicing() {
+        let a = dense_sample(3, 10);
+        let x: Vec<f64> = (0..10).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let (lo, hi) = (3, 8);
+        let d = RowStorage::row_dot_range(&a, 1, lo, hi, &x);
+        assert_eq!(d.to_bits(), dot(&a.row(1)[lo..hi], &x[lo..hi]).to_bits());
+
+        let mut y1 = x.clone();
+        RowStorage::row_axpy_range(&a, 1, 2.0, lo, hi, &mut y1);
+        for j in 0..10 {
+            let expect = if (lo..hi).contains(&j) { x[j] + 2.0 * a.row(1)[j] } else { x[j] };
+            assert_eq!(y1[j].to_bits(), expect.to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn dense_row_entries_include_zeros() {
+        let a = Matrix::from_vec(1, 4, vec![0.0, 2.0, 0.0, -1.0]).unwrap();
+        let entries: Vec<(usize, f64)> = RowStorage::row_entries(&a, 0).collect();
+        assert_eq!(entries, vec![(0, 0.0), (1, 2.0), (2, 0.0), (3, -1.0)]);
+    }
+
+    #[test]
+    fn csr_row_ops_match_dense_within_tolerance() {
+        let d = dense_sample(6, 9);
+        let s = CsrMatrix::from_dense(&d);
+        let x: Vec<f64> = (0..9).map(|i| (i as f64 * 0.11).cos()).collect();
+        for i in 0..6 {
+            let dd = RowStorage::row_dot(&d, i, &x);
+            let ds = RowStorage::row_dot(&s, i, &x);
+            assert!((dd - ds).abs() < 1e-12, "row {i}: {dd} vs {ds}");
+
+            let mut y1 = x.clone();
+            let mut y2 = x.clone();
+            RowStorage::row_axpy(&d, i, 0.4, &mut y1);
+            RowStorage::row_axpy(&s, i, 0.4, &mut y2);
+            for (u, v) in y1.iter().zip(&y2) {
+                assert!((u - v).abs() < 1e-12);
+            }
+
+            let r = RowStorage::row_dot_range(&s, i, 2, 7, &x);
+            let rd = RowStorage::row_dot_range(&d, i, 2, 7, &x);
+            assert!((r - rd).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csr_axpy_touches_only_stored_coordinates() {
+        let s = CsrMatrix::from_triplets(2, 5, &[(0, 1, 3.0), (0, 3, -2.0)]).unwrap();
+        let sentinel = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        let mut y = sentinel.clone();
+        RowStorage::row_axpy(&s, 0, 2.0, &mut y);
+        assert_eq!(y, vec![10.0, 26.0, 30.0, 36.0, 50.0]);
+        let mut z = sentinel.clone();
+        // Empty row 1: the update is a no-op and the dot over row 0 reads
+        // only coordinates 1 and 3.
+        let f = RowStorage::row_axpy_dot(&s, 1, 7.0, 0, &mut z);
+        assert_eq!(z, sentinel);
+        assert_eq!(f, 3.0 * 20.0 + (-2.0) * 40.0);
+    }
+
+    #[test]
+    fn sparse_row_entries_are_sorted_stored_only() {
+        let s = CsrMatrix::from_triplets(1, 6, &[(0, 4, 1.5), (0, 2, -3.0)]).unwrap();
+        let entries: Vec<(usize, f64)> = RowStorage::row_entries(&s, 0).collect();
+        assert_eq!(entries, vec![(2, -3.0), (4, 1.5)]);
+    }
+
+    #[test]
+    fn storage_enum_dispatches_both_backends() {
+        let d = dense_sample(4, 6);
+        let s: Storage = CsrMatrix::from_dense(&d).into();
+        let dense: Storage = d.clone().into();
+        assert_eq!(dense.rows(), 4);
+        assert_eq!(s.cols(), 6);
+        assert!(dense.as_dense().is_some() && dense.as_csr().is_none());
+        assert!(s.as_csr().is_some() && s.as_dense().is_none());
+        for (a, b) in dense.row_norms_sq().iter().zip(&s.row_norms_sq()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "no explicit zeros: norms are bitwise");
+        }
+        assert!((dense.frobenius_sq() - s.frobenius_sq()).abs() < 1e-12);
+        let x: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let mut yd = vec![0.0; 4];
+        let mut ys = vec![0.0; 4];
+        RowStorage::gemv_into(&dense, &x, &mut yd);
+        RowStorage::gemv_into(&s, &x, &mut ys);
+        for (u, v) in yd.iter().zip(&ys) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn storage_sharing_is_per_backend() {
+        let d = dense_sample(3, 3);
+        let sd: Storage = d.clone().into();
+        let sd2 = sd.clone();
+        assert!(sd.shares_storage(&sd2));
+        let sc: Storage = CsrMatrix::from_dense(&d).into();
+        let sc2 = sc.clone();
+        assert!(sc.shares_storage(&sc2));
+        assert!(!sd.shares_storage(&sc), "different backends never share");
+        let block = sc.row_block(1, 3).unwrap();
+        assert!(block.shares_storage(&sc), "CSR row blocks alias the parent");
+    }
+
+    #[test]
+    fn storage_row_block_and_crop_stay_in_backend() {
+        let d = dense_sample(4, 4);
+        let sd: Storage = d.clone().into();
+        let sc: Storage = CsrMatrix::from_dense(&d).into();
+        assert!(sd.row_block(1, 3).unwrap().as_dense().is_some());
+        assert!(sc.row_block(1, 3).unwrap().as_csr().is_some());
+        assert!(sd.crop(2, 2).unwrap().as_dense().is_some());
+        assert!(sc.crop(2, 2).unwrap().as_csr().is_some());
+        assert!(sc.row_block(3, 5).is_err());
+    }
+
+    #[test]
+    fn gemv_transpose_agrees_across_backends() {
+        let d = dense_sample(5, 4);
+        let s = CsrMatrix::from_dense(&d);
+        let x: Vec<f64> = (0..5).map(|i| (i as f64).sqrt() - 1.0).collect();
+        let mut yd = vec![0.0; 4];
+        let mut ys = vec![0.0; 4];
+        RowStorage::gemv_transpose_into(&d, &x, &mut yd);
+        RowStorage::gemv_transpose_into(&s, &x, &mut ys);
+        for (u, v) in yd.iter().zip(&ys) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+}

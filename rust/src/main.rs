@@ -6,8 +6,12 @@
 //!                                run one experiment (fig1..fig14, table1/2)
 //!   all [--scale f] [--out dir]  run the full evaluation suite
 //!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n]
-//!         [--residual [--check-every k]] [--history step] [--watch] ...
-//!                                one-off solve on a generated system;
+//!         [--mtx file] [--residual [--check-every k]] [--history step]
+//!         [--watch] ...
+//!                                one-off solve on a generated system, or —
+//!                                with --mtx — on a Matrix Market file
+//!                                loaded into CSR sparse storage (b = A x
+//!                                for a seeded x, so the solution is known);
 //!                                --residual stops on ‖Ax-b‖² instead of
 //!                                the reference error; --history records
 //!                                the convergence curve every `step`
@@ -117,22 +121,56 @@ fn print_result(name: &str, sys_err: f64, r: &SolveResult) {
 }
 
 fn cmd_solve(args: &Args) {
-    let m = args.get_parse("rows", 2000usize);
-    let n = args.get_parse("cols", 200usize);
     let q = args.get_parse("q", 4usize);
-    let bs = args.get_parse("bs", n);
     let alpha = args.get_parse("alpha", 1.0f64);
     let seed = args.get_parse("seed", 1u32);
     let method = args.get("method", "rk");
     let inconsistent = args.has("inconsistent");
+    let mtx = args.get("mtx", "");
 
-    eprintln!("generating {m} x {n} {} system...", if inconsistent { "inconsistent" } else { "consistent" });
-    let builder = DatasetBuilder::new(m, n).seed(seed);
-    let mut sys = if inconsistent { builder.inconsistent() } else { builder.consistent() };
-    if inconsistent {
-        kaczmarz::solvers::cgls::attach_least_squares(&mut sys, 1e-12, 100_000)
-            .expect("CGLS failed");
-    }
+    let sys = if mtx.is_empty() {
+        let m = args.get_parse("rows", 2000usize);
+        let n = args.get_parse("cols", 200usize);
+        eprintln!(
+            "generating {m} x {n} {} system...",
+            if inconsistent { "inconsistent" } else { "consistent" }
+        );
+        let builder = DatasetBuilder::new(m, n).seed(seed);
+        let mut sys = if inconsistent { builder.inconsistent() } else { builder.consistent() };
+        if inconsistent {
+            kaczmarz::solvers::cgls::attach_least_squares(&mut sys, 1e-12, 100_000)
+                .expect("CGLS failed");
+        }
+        sys
+    } else {
+        // A Matrix Market file carries only A; the loader draws a seeded
+        // x_true and sets b = A x_true, so the system is consistent and the
+        // solve runs on CSR sparse storage end to end.
+        if inconsistent {
+            eprintln!("--mtx builds a consistent system; ignoring --inconsistent");
+        }
+        eprintln!("loading sparse system from {mtx}...");
+        match kaczmarz::data::io::load_mtx_system(std::path::Path::new(&mtx), seed) {
+            Ok(sys) => {
+                let a = sys.a.as_csr().expect("mtx loads are CSR");
+                eprintln!(
+                    "loaded {} x {} system, {} stored entries ({:.2}% dense)",
+                    sys.rows(),
+                    sys.cols(),
+                    a.nnz(),
+                    100.0 * a.density()
+                );
+                sys
+            }
+            Err(e) => {
+                eprintln!("failed to load {mtx}: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    // Defaults that depend on the system shape come after it exists.
+    let n = sys.cols();
+    let bs = args.get_parse("bs", n);
 
     // --residual stops on ‖Ax - b‖² (the reference-free serving criterion,
     // checked every --check-every iterations); default is the paper's

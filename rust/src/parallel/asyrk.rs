@@ -174,13 +174,15 @@ impl Solver for AsyRkSolver {
                         }
                         let i = order[pos];
                         pos += 1;
-                        let row = system.a.row(i);
                         // Racy read of x (the HOGWILD ingredient).
                         x.snapshot_into(&mut xbuf);
-                        let scale = self.step * (system.b[i] - crate::linalg::dot(row, &xbuf))
+                        let scale = self.step * (system.b[i] - system.a.row_dot(i, &xbuf))
                             / system.row_norms_sq[i];
-                        // Lock-free update: per-entry atomic adds.
-                        for (j, &rj) in row.iter().enumerate() {
+                        // Lock-free update: per-entry atomic adds. On CSR
+                        // storage only the stored coordinates are touched —
+                        // the regime AsyRK was actually designed for, where
+                        // concurrent updates rarely collide.
+                        for (j, rj) in system.a.row_entries(i) {
                             x.add(j, scale * rj);
                         }
                         total_updates.fetch_add(1, Ordering::Relaxed);

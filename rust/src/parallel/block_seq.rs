@@ -13,7 +13,6 @@
 
 use super::shared::{SharedSlice, SpinBarrier};
 use crate::data::LinearSystem;
-use crate::linalg::vector::dot;
 use crate::metrics::{History, Stopwatch};
 use crate::rng::{AliasTable, Mt19937};
 use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
@@ -144,14 +143,16 @@ impl BlockSequentialRk {
                 break;
             }
             let i = region.row.load(Ordering::SeqCst);
-            let row = system.a.row(i);
 
-            // Parallel dot: chunked partial sums (`omp reduce`).
+            // Parallel dot: chunked partial sums (`omp reduce`). The
+            // column-ranged storage op keeps the dense path on the exact
+            // `dot(&row[lo..hi], &x[lo..hi])` kernel; on CSR it sums only the
+            // stored entries that fall in the chunk.
             {
                 // SAFETY: x read-only here; partials slot t is thread-private.
                 let x = unsafe { region.x.as_ref_unchecked() };
                 let partials = unsafe { region.partials.as_mut_unchecked() };
-                partials[t * PAD] = dot(&row[lo..hi], &x[lo..hi]);
+                partials[t * PAD] = system.a.row_dot_range(i, lo, hi, x);
             }
             region.barrier.wait(); // (C) partials ready
             if t == 0 {
@@ -170,9 +171,7 @@ impl BlockSequentialRk {
                 // Parallel update: disjoint chunks (`omp for`).
                 // SAFETY: chunks disjoint.
                 let x = unsafe { region.x.as_mut_unchecked() };
-                for j in lo..hi {
-                    x[j] += scale * row[j];
-                }
+                system.a.row_axpy_range(i, scale, lo, hi, x);
             }
             k += 1;
         }

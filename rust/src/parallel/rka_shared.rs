@@ -24,7 +24,6 @@
 
 use super::shared::{AtomicF64Vec, SharedSlice, SpinBarrier};
 use crate::data::LinearSystem;
-use crate::linalg::vector::dot;
 use crate::metrics::{History, Stopwatch};
 use crate::solvers::rka::Weights;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
@@ -236,34 +235,68 @@ impl ParallelRka {
             // SAFETY: x_prev is read-only until the next barrier (A).
             let x_prev = unsafe { region.x_prev.as_ref_unchecked() };
             let i = sampler.sample();
-            let row = system.a.row(i);
-            let scale = weights.get(t) * (system.b[i] - dot(row, x_prev))
+            let scale = weights.get(t) * (system.b[i] - system.a.row_dot(i, x_prev))
                 / (q as f64 * system.row_norms_sq[i]);
+            // Dense storage keeps the exact historical gather loops (bitwise
+            // identical); CSR gathers only the row's stored coordinates.
+            let dense_row = system.a.as_dense().map(|m| m.row(i));
 
             match self.strategy {
                 AveragingStrategy::Critical => {
                     // Lines 7-9: sequential gather under the critical section.
                     let _guard = region.critical.lock().unwrap();
-                    for j in 0..n {
-                        region.x.set(j, region.x.get(j) + scale * row[j]);
+                    match dense_row {
+                        Some(row) => {
+                            for j in 0..n {
+                                region.x.set(j, region.x.get(j) + scale * row[j]);
+                            }
+                        }
+                        None => {
+                            for (j, rj) in system.a.row_entries(i) {
+                                region.x.set(j, region.x.get(j) + scale * rj);
+                            }
+                        }
                     }
                 }
                 AveragingStrategy::Atomic => {
                     // Staggered start offsets; per-entry atomic adds. The
                     // cache-line invalidation storm this causes is the
                     // paper's explanation for it losing to Critical.
-                    let start = t * n / q;
-                    for d in 0..n {
-                        let j = if start + d < n { start + d } else { start + d - n };
-                        region.x.add(j, scale * row[j]);
+                    match dense_row {
+                        Some(row) => {
+                            let start = t * n / q;
+                            for d in 0..n {
+                                let j = if start + d < n { start + d } else { start + d - n };
+                                region.x.add(j, scale * row[j]);
+                            }
+                        }
+                        None => {
+                            // A sparse row touches few entries; staggering
+                            // start offsets buys nothing, so walk in order.
+                            for (j, rj) in system.a.row_entries(i) {
+                                region.x.add(j, scale * rj);
+                            }
+                        }
                     }
                 }
                 AveragingStrategy::Reduce => {
                     // Private partial result: x_prev/q + scale*row (sums over
                     // threads reconstruct eq. 7 after x was zeroed above).
                     let inv_q = 1.0 / q as f64;
-                    for j in 0..n {
-                        local[j] = x_prev[j] * inv_q + scale * row[j];
+                    match dense_row {
+                        Some(row) => {
+                            for j in 0..n {
+                                local[j] = x_prev[j] * inv_q + scale * row[j];
+                            }
+                        }
+                        None => {
+                            for j in 0..n {
+                                local[j] = x_prev[j] * inv_q;
+                            }
+                            for (j, rj) in system.a.row_entries(i) {
+                                local[j] += scale * rj;
+                            }
+                        }
                     }
                     let _guard = region.critical.lock().unwrap();
                     for j in 0..n {
@@ -279,8 +312,18 @@ impl ParallelRka {
                         let g = unsafe { region.gather.as_mut_unchecked() };
                         let mine = &mut g[t * n..(t + 1) * n];
                         let full_scale = q as f64 * scale;
-                        for j in 0..n {
-                            mine[j] = x_prev[j] + full_scale * row[j];
+                        match dense_row {
+                            Some(row) => {
+                                for j in 0..n {
+                                    mine[j] = x_prev[j] + full_scale * row[j];
+                                }
+                            }
+                            None => {
+                                mine.copy_from_slice(x_prev);
+                                for (j, rj) in system.a.row_entries(i) {
+                                    mine[j] += full_scale * rj;
+                                }
+                            }
                         }
                     }
                     // Extra synchronization point the paper calls out.

@@ -14,7 +14,7 @@
 use super::engine::PjrtEngine;
 use super::manifest::ArtifactKind;
 use crate::data::LinearSystem;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Stopwatch;
 use crate::solvers::sampling::{RowSampler, SamplingScheme};
 use crate::solvers::{SolveOptions, SolveResult, StopCheck};
@@ -70,7 +70,14 @@ impl PjrtRkabSolver {
     }
 
     /// Run RKAB with the PJRT-executed inner update.
+    ///
+    /// The AOT `rkab_round` artifact consumes contiguous row blocks, so the
+    /// gather below requires dense storage; CSR systems fail fast with
+    /// `InvalidArgument` instead of densifying silently.
     pub fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> Result<SolveResult> {
+        let dense = system.a.as_dense().ok_or_else(|| {
+            Error::InvalidArgument("PJRT RKAB requires dense storage (CSR not supported)".into())
+        })?;
         let n = system.cols();
         let q = self.q;
         let bs = self.block_size;
@@ -104,7 +111,7 @@ impl PjrtRkabSolver {
                 for j in 0..bs {
                     let i = sampler.sample();
                     let dst = (t * bs + j) * n;
-                    a_blocks[dst..dst + n].copy_from_slice(system.a.row(i));
+                    a_blocks[dst..dst + n].copy_from_slice(dense.row(i));
                     b_blocks[t * bs + j] = system.b[i];
                     inv_norms[t * bs + j] = 1.0 / system.row_norms_sq[i];
                 }

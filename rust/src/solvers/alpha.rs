@@ -110,7 +110,7 @@ mod tests {
     fn bounds_match_jacobi_svd() {
         let sys = DatasetBuilder::new(60, 6).seed(10).consistent();
         let b = spectral_bounds(&sys, 0, 60).unwrap();
-        let sv = jacobi_singular_values(&sys.a, 1e-13, 200).unwrap();
+        let sv = jacobi_singular_values(sys.a.as_dense().unwrap(), 1e-13, 200).unwrap();
         let smax = sv[0] * sv[0] / sys.frobenius_sq;
         let smin = sv[5] * sv[5] / sys.frobenius_sq;
         assert!((b.s_max - smax).abs() / smax < 1e-6);

@@ -6,7 +6,6 @@
 
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
 use crate::metrics::Stopwatch;
 
 /// Cyclic Kaczmarz solver.
@@ -65,10 +64,9 @@ impl Solver for CkSolver {
             // `i = k mod m` keeps its meaning.
             let i = k % m;
             if system.row_norms_sq[i] > 0.0 {
-                let row = system.a.row(i);
-                let scale =
-                    self.relaxation * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-                axpy(scale, row, &mut x);
+                let residual = system.b[i] - system.a.row_dot(i, &x);
+                let scale = self.relaxation * residual / system.row_norms_sq[i];
+                system.a.row_axpy(i, scale, &mut x);
             }
             k += 1;
         }

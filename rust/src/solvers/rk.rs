@@ -6,7 +6,6 @@
 
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
 use crate::metrics::Stopwatch;
 use crate::rng::{AliasTable, Mt19937};
 
@@ -56,9 +55,11 @@ impl Solver for RkSolver {
                 break;
             }
             let i = dist.sample(&mut rng);
-            let row = system.a.row(i);
-            let scale = self.relaxation * (system.b[i] - dot(row, &x)) / system.row_norms_sq[i];
-            axpy(scale, row, &mut x);
+            // Storage-generic row ops: bitwise the old dot/axpy on dense,
+            // stored-entries-only on CSR.
+            let residual = system.b[i] - system.a.row_dot(i, &x);
+            let scale = self.relaxation * residual / system.row_norms_sq[i];
+            system.a.row_axpy(i, scale, &mut x);
             k += 1;
         }
 

@@ -16,7 +16,7 @@
 use super::sampling::{RowSampler, SamplingScheme};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, dot};
+use crate::linalg::vector::axpy;
 use crate::metrics::Stopwatch;
 
 /// Per-worker relaxation weights.
@@ -118,10 +118,9 @@ impl Solver for RkaSolver {
             delta.fill(0.0);
             for (t, sampler) in samplers.iter_mut().enumerate() {
                 let i = sampler.sample();
-                let row = system.a.row(i);
-                let scale = self.weights.get(t) * (system.b[i] - dot(row, &x))
+                let scale = self.weights.get(t) * (system.b[i] - system.a.row_dot(i, &x))
                     / (q as f64 * system.row_norms_sq[i]);
-                axpy(scale, row, &mut delta);
+                system.a.row_axpy(i, scale, &mut delta);
             }
             axpy(1.0, &delta, &mut x);
             k += 1;

@@ -15,7 +15,7 @@
 use super::sampling::{RowSampler, SamplingScheme};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
-use crate::linalg::vector::{axpy, axpy_dot, dot};
+use crate::linalg::vector::axpy;
 use crate::metrics::Stopwatch;
 
 /// One worker's in-block sweep: `block_size` sequential Kaczmarz projections
@@ -26,12 +26,14 @@ use crate::metrics::Stopwatch;
 /// (`parallel::rkab_shared`) and the simulated cluster
 /// (`distributed::rkab_dist`). The `block_size` row indices are drawn up
 /// front (same sampler stream as drawing them one-by-one), then the sweep
-/// runs on the fused [`axpy_dot`] kernel: projection `j`'s update of `v` and
-/// projection `j+1`'s residual dot product execute in one pass over `v`,
-/// halving the traffic of the scalar dot-then-axpy formulation while
-/// producing bit-identical iterates (see `axpy_dot`'s lane-structure
-/// guarantee). `indices` is caller-owned scratch so the hot path allocates
-/// nothing.
+/// runs on the storage's fused `row_axpy_dot` flavor. On dense storage that
+/// is the [`axpy_dot`](crate::linalg::axpy_dot) kernel: projection `j`'s
+/// update of `v` and projection `j+1`'s residual dot product execute in one
+/// pass over `v`, halving the traffic of the scalar dot-then-axpy
+/// formulation while producing bit-identical iterates (see `axpy_dot`'s
+/// lane-structure guarantee). On CSR storage the update touches only the
+/// sampled row's stored coordinates of `v`. `indices` is caller-owned
+/// scratch so the hot path allocates nothing.
 ///
 /// Public so `bench_micro_hotpath` measures this exact function (not a
 /// drifting copy) against the row-loop baseline.
@@ -48,14 +50,14 @@ pub fn block_sweep(
     for _ in 0..block_size {
         indices.push(sampler.sample());
     }
-    let mut d = dot(system.a.row(indices[0]), v);
+    let mut d = system.a.row_dot(indices[0], v);
     for j in 0..block_size {
         let i = indices[j];
         let scale = alpha * (system.b[i] - d) / system.row_norms_sq[i];
         if j + 1 < block_size {
-            d = axpy_dot(scale, system.a.row(i), system.a.row(indices[j + 1]), v);
+            d = system.a.row_axpy_dot(i, scale, indices[j + 1], v);
         } else {
-            axpy(scale, system.a.row(i), v);
+            system.a.row_axpy(i, scale, v);
         }
     }
 }

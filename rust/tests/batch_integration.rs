@@ -5,7 +5,7 @@
 
 use kaczmarz::batch::{BatchJob, BatchSolver, SolveQueue};
 use kaczmarz::data::{DatasetBuilder, LinearSystem};
-use kaczmarz::linalg::{gemv, Matrix};
+use kaczmarz::linalg::{gemv, Storage};
 use kaczmarz::metrics::History;
 use kaczmarz::parallel::WorkerPool;
 use kaczmarz::solvers::rk::RkSolver;
@@ -155,9 +155,10 @@ fn batch_layer_reuses_pool_workers_across_calls() {
 
 /// A `Solver` that counts how many of the systems handed to it hold
 /// pointer-identical matrix storage with a designated original
-/// (`Matrix::shares_storage`, i.e. `Arc::ptr_eq` on the row buffer).
+/// (`Storage::shares_storage`, i.e. `Arc::ptr_eq` on the backing buffer of
+/// whichever backend the system uses).
 struct StorageProbe {
-    original: Matrix,
+    original: Storage,
     shared: Arc<AtomicUsize>,
     solves: Arc<AtomicUsize>,
 }

@@ -1,0 +1,195 @@
+//! Storage-backend properties of the solver core: every solve loop —
+//! sequential, shared-memory, distributed, batch — must accept CSR sparse
+//! storage; a CSR matrix holding exactly the entries of a dense one must
+//! agree with it (bitwise on row metadata, to accumulation-order tolerance
+//! on iterates); degenerate sparse rows must be rejected up front; and the
+//! Arc-sharing discipline must hold across backends and views.
+
+use kaczmarz::batch::{BatchJob, BatchSolver, SolveQueue};
+use kaczmarz::data::{DatasetBuilder, LinearSystem, SparseDatasetBuilder};
+use kaczmarz::distributed::{DistRka, DistRkab, Placement, SimCluster};
+use kaczmarz::linalg::{gemv, CsrMatrix};
+use kaczmarz::parallel::{
+    AsyRkSolver, AveragingStrategy, BlockSequentialRk, ParallelRka, ParallelRkab,
+};
+use kaczmarz::rng::Mt19937;
+use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::RkabSolver;
+use kaczmarz::solvers::{SolveOptions, Solver};
+use kaczmarz::Error;
+
+/// A dense system and its exact CSR twin: same `b` / `x_true`, `A`
+/// compressed entry-for-entry (gaussian entries are never exactly zero, so
+/// nothing is dropped). Row norms come off the same 8-lane kernel over the
+/// same contiguous values, so sampling weights — and therefore every row
+/// sequence a seeded sampler draws — are bitwise-identical between the two.
+fn twins(m: usize, n: usize, seed: u32) -> (LinearSystem, LinearSystem) {
+    let dense = DatasetBuilder::new(m, n).seed(seed).consistent();
+    let csr = CsrMatrix::from_dense(dense.a.as_dense().expect("generator yields dense"));
+    let sparse = LinearSystem::new(csr, dense.b.clone(), dense.x_true.clone(), true);
+    (dense, sparse)
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn csr_twin_matches_dense_row_metadata_bitwise() {
+    let (d, s) = twins(60, 9, 2);
+    assert_eq!(d.frobenius_sq.to_bits(), s.frobenius_sq.to_bits());
+    for (i, (a, b)) in d.row_norms_sq.iter().zip(&s.row_norms_sq).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row {i} norm");
+    }
+    // gemv agreement: the dense 8-lane kernel and the stored-entry loop sum
+    // in different orders, so this is a tolerance claim, not a bitwise one.
+    let x: Vec<f64> = (0..9).map(|j| 0.3 * j as f64 - 1.0).collect();
+    let yd = gemv(&d.a, &x).unwrap();
+    let ys = gemv(&s.a, &x).unwrap();
+    assert!(max_abs_diff(&yd, &ys) < 1e-10, "gemv drift {}", max_abs_diff(&yd, &ys));
+}
+
+fn assert_twin_agreement<S: Solver>(name: &str, solver: S, d: &LinearSystem, s: &LinearSystem) {
+    // Fixed budget: both runs execute the same iterations whether or not
+    // they converge early, so the trajectories stay comparable end to end.
+    let opts = SolveOptions::default().with_fixed_iterations(600);
+    let rd = solver.solve(d, &opts);
+    let rs = solver.solve(s, &opts);
+    assert_eq!(rd.iterations, rs.iterations, "{name}: iteration mismatch");
+    assert_eq!(rd.rows_used, rs.rows_used, "{name}: rows_used mismatch");
+    // Identical row sequences, projection sums in different orders: the
+    // iterates may differ in the last bits but nowhere above rounding.
+    let drift = max_abs_diff(&rd.x, &rs.x);
+    assert!(drift < 1e-8, "{name}: dense/CSR drift {drift}");
+}
+
+#[test]
+fn sequential_solvers_agree_between_dense_and_csr_twins() {
+    let (d, s) = twins(240, 12, 3);
+    assert_twin_agreement("rk", RkSolver::new(7), &d, &s);
+    assert_twin_agreement("ck", CkSolver::new(), &d, &s);
+    assert_twin_agreement("rka", RkaSolver::new(7, 4, 1.0), &d, &s);
+    assert_twin_agreement("rkab", RkabSolver::new(7, 4, 6, 1.0), &d, &s);
+}
+
+#[test]
+fn shared_memory_engines_converge_on_csr_storage() {
+    // Threaded gathers accumulate in scheduler-dependent order, so the
+    // cross-backend claim here is convergence to the known solution, not a
+    // trajectory match (that is pinned by the sequential test above).
+    let (_, s) = twins(300, 10, 4);
+    let opts = SolveOptions::default();
+    for strategy in [
+        AveragingStrategy::Critical,
+        AveragingStrategy::Atomic,
+        AveragingStrategy::Reduce,
+        AveragingStrategy::MatrixGather,
+    ] {
+        let r = ParallelRka::new(3, 4, 1.0).with_strategy(strategy).solve(&s, &opts);
+        assert!(r.converged, "ParallelRka {strategy:?} on CSR");
+        assert!(s.error_sq(&r.x) < 1e-8, "ParallelRka {strategy:?} err {}", s.error_sq(&r.x));
+    }
+    let r = ParallelRkab::new(3, 4, 8, 1.0).solve(&s, &opts);
+    assert!(r.converged && s.error_sq(&r.x) < 1e-8, "ParallelRkab on CSR");
+    let r = BlockSequentialRk::new(13, 4).solve(&s, &opts);
+    assert!(r.converged && s.error_sq(&r.x) < 1e-8, "BlockSequentialRk on CSR");
+    let asy_opts = SolveOptions::default().with_tolerance(1e-6).with_max_iterations(3_000_000);
+    let r = AsyRkSolver::new(3, 4).solve(&s, &asy_opts);
+    assert!(r.converged, "AsyRk on CSR");
+    assert!(s.error_sq(&r.x) < 1e-4, "AsyRk err {}", s.error_sq(&r.x));
+}
+
+#[test]
+fn distributed_solves_accept_csr_and_sparse_systems() {
+    let cluster = SimCluster::new(3, Placement::two_per_node());
+    let opts = SolveOptions::default();
+
+    let (_, s) = twins(240, 8, 5);
+    let r = DistRka::new(3, 1.0).solve(&s, &opts, &cluster);
+    assert!(r.converged, "DistRka on CSR twin");
+    assert!(s.error_sq(&r.x) < 1e-8, "DistRka err {}", s.error_sq(&r.x));
+    let r = DistRkab::new(5, 6, 1.0).solve(&s, &opts, &cluster);
+    assert!(r.converged, "DistRkab on CSR twin");
+    assert!(s.error_sq(&r.x) < 1e-8, "DistRkab err {}", s.error_sq(&r.x));
+
+    // A genuinely sparse generator-built system end to end through the
+    // simulated cluster: partitioned sampling, rank-local projections, and
+    // allreduce all running on stored-entry row kernels.
+    let sparse = SparseDatasetBuilder::new(240, 12, 0.5).seed(9).consistent();
+    assert!(sparse.a.as_csr().is_some(), "sparse builder must yield CSR storage");
+    let r = DistRka::new(7, 1.0).solve(&sparse, &opts, &cluster);
+    assert!(r.converged, "DistRka on sparse system");
+    assert!(sparse.error_sq(&r.x) < 1e-8, "DistRka sparse err {}", sparse.error_sq(&r.x));
+    let r = DistRkab::new(7, 4, 1.0).solve(&sparse, &opts, &cluster);
+    assert!(r.converged, "DistRkab on sparse system");
+    assert!(sparse.error_sq(&r.x) < 1e-8, "DistRkab sparse err {}", sparse.error_sq(&r.x));
+}
+
+#[test]
+fn batch_solver_and_queue_accept_csr_storage() {
+    let (_, s) = twins(200, 8, 6);
+    // Six rhs with known solutions, built through the CSR-backed gemv.
+    let mut rng = Mt19937::new(31);
+    let jobs: Vec<BatchJob> = (0..6)
+        .map(|_| {
+            let x: Vec<f64> = (0..s.cols()).map(|_| rng.next_f64() - 0.5).collect();
+            BatchJob::new(gemv(&s.a, &x).unwrap()).with_reference(x)
+        })
+        .collect();
+    let reports = BatchSolver::new(&s, RkSolver::new(7))
+        .with_workers(3)
+        .solve_many(&jobs, &SolveOptions::default())
+        .unwrap();
+    assert_eq!(reports.len(), 6);
+    for (j, report) in reports.iter().enumerate() {
+        assert!(report.result.converged, "batch job {j} on CSR");
+    }
+
+    // A queue mixing sparse and dense systems in one dispatch: storage is
+    // per-job, so heterogeneous backends must coexist in a single run.
+    let mut queue = SolveQueue::new().with_workers(3);
+    let id_sparse = queue.push(
+        SparseDatasetBuilder::new(160, 8, 0.5).seed(12).consistent(),
+        SolveOptions::default(),
+    );
+    let id_dense =
+        queue.push(DatasetBuilder::new(160, 8).seed(13).consistent(), SolveOptions::default());
+    let reports = queue.run(&RkSolver::new(3)).unwrap();
+    assert!(reports[id_sparse].result.converged, "queued sparse job");
+    assert!(reports[id_dense].result.converged, "queued dense job");
+}
+
+#[test]
+fn empty_csr_row_is_rejected_as_degenerate() {
+    // Row 1 of 3 stores nothing: ‖A^(1)‖² = 0 and every projection against
+    // it would divide by zero, so the strict constructor must refuse it.
+    let a = CsrMatrix::from_triplets(3, 4, &[(0, 0, 1.0), (2, 3, 2.0)]).unwrap();
+    let err = LinearSystem::try_new(a, vec![1.0; 3], None, true).unwrap_err();
+    match err {
+        Error::DegenerateRow { row } => assert_eq!(row, 1),
+        other => panic!("expected DegenerateRow, got {other:?}"),
+    }
+    // An explicitly stored zero degenerates the row just the same.
+    let a = CsrMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 0.0)]).unwrap();
+    let err = LinearSystem::try_new(a, vec![1.0; 2], None, true).unwrap_err();
+    assert!(matches!(err, Error::DegenerateRow { row: 1 }), "stored zero row");
+}
+
+#[test]
+fn clones_and_row_blocks_share_storage_in_both_backends() {
+    let sparse = SparseDatasetBuilder::new(40, 10, 0.3).seed(8).consistent();
+    assert!(sparse.clone().a.shares_storage(&sparse.a), "CSR clone must be refcount bumps");
+    let block = sparse.a.row_block(8, 24).unwrap();
+    assert_eq!(block.rows(), 16);
+    assert!(block.shares_storage(&sparse.a), "CSR row block must alias parent entries");
+
+    let dense = DatasetBuilder::new(40, 10).seed(8).consistent();
+    let block = dense.a.row_block(8, 24).unwrap();
+    assert_eq!(block.rows(), 16);
+    assert!(block.shares_storage(&dense.a), "dense row block must alias parent buffer");
+
+    // Dense and CSR never alias each other, whatever their contents.
+    assert!(!sparse.a.shares_storage(&dense.a), "cross-backend sharing is impossible");
+}

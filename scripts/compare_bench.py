@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_micro.json against the committed baseline.
+
+Usage: compare_bench.py BASELINE FRESH [--band RATIO]
+
+Two very different kinds of comparison happen here, with very different
+teeth:
+
+- **Timing rows** (per-op ns/iter from the bench table) are advisory.
+  Rows whose ns/op drifts beyond the noise band (default 3x either way
+  — CI runners wobble hugely on micro timings) are printed as warnings
+  so a human can spot a real regression in the job log, but they never
+  fail the job.
+- **Equivalence flags** (the bitwise-exactness checks) gate hard: a
+  check that passes in the baseline and fails — or disappears — in the
+  fresh run exits nonzero. These are deterministic claims, not timings.
+
+Refresh the baseline by downloading the BENCH_micro artifact from a
+green main run and committing it as BENCH_baseline.json.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except OSError as e:
+        sys.exit(f"compare_bench: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"compare_bench: {path} is not valid JSON: {e}")
+
+
+def row_key(row):
+    return (row.get("operation", ""), row.get("n", ""))
+
+
+def ns_per_op(row):
+    try:
+        v = float(row.get("ns/op", ""))
+    except ValueError:
+        return None
+    return v if v > 0 else None
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--band")]
+    band = 3.0
+    for a in argv[1:]:
+        if a.startswith("--band="):
+            band = float(a.split("=", 1)[1])
+    if len(args) != 2:
+        sys.exit(__doc__)
+    base, fresh = load(args[0]), load(args[1])
+
+    base_rows = {row_key(r): r for r in base.get("rows", [])}
+    warned = 0
+    for r in fresh.get("rows", []):
+        op, n = row_key(r)
+        b = base_rows.get((op, n))
+        if b is None:
+            print(f"note: no baseline for {op!r} (n={n})")
+            continue
+        fresh_ns, base_ns = ns_per_op(r), ns_per_op(b)
+        if fresh_ns is None or base_ns is None:
+            continue
+        ratio = fresh_ns / base_ns
+        if ratio > band or ratio < 1.0 / band:
+            direction = "slower" if ratio > 1 else "faster"
+            print(
+                f"WARN: {op!r} (n={n}) {ratio:.2f}x {direction} than baseline "
+                f"({fresh_ns:.1f} vs {base_ns:.1f} ns/op; band {band}x, advisory only)"
+            )
+            warned += 1
+    if warned:
+        print(f"{warned} timing row(s) outside the noise band (advisory, not failing)")
+
+    fresh_checks = {c.get("name"): bool(c.get("pass")) for c in fresh.get("checks", [])}
+    regressions = []
+    for c in base.get("checks", []):
+        name, passed = c.get("name"), bool(c.get("pass"))
+        if not passed:
+            continue  # a baseline that records a failure gates nothing
+        if name not in fresh_checks:
+            regressions.append(f"{name} (missing from fresh run)")
+        elif not fresh_checks[name]:
+            regressions.append(name)
+    if regressions:
+        print("EQUIVALENCE REGRESSIONS vs baseline:")
+        for name in regressions:
+            print(f"  - {name}")
+        sys.exit(1)
+    print(f"equivalence flags: {len(fresh_checks)} fresh, no regressions vs baseline")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
