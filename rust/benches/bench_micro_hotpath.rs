@@ -23,9 +23,11 @@ use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::parallel::WorkerPool;
 use kaczmarz::report::{json_string, Table};
 use kaczmarz::rng::{AliasTable, DiscreteDistribution, Mt19937};
+use kaczmarz::solvers::rek::RekSolver;
 use kaczmarz::solvers::rk::RkSolver;
-use kaczmarz::solvers::rkab::block_sweep;
-use kaczmarz::solvers::{RowSampler, SamplingScheme, SolveOptions, Solver};
+use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rkab::{block_sweep, RkabSolver};
+use kaczmarz::solvers::{GreedySelector, RowSampler, SamplingScheme, SolveOptions, Solver};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -104,6 +106,63 @@ fn main() {
         format!("{:.1}", r.seconds / r.iterations as f64 * 1e9),
         format!("{:.1}", 16.0 * proj_n as f64 / (r.seconds / r.iterations as f64) / 1e9),
     ]);
+
+    // REK's column-space step (col_dot + col_axpy over the m-vector z) and
+    // the full REK iteration (one column + one row projection): the zoo's
+    // per-iteration cost next to the plain RK projection above. The column
+    // kernels stride down the dense row-major buffer, so their effective
+    // bandwidth is the cache-unfriendly bound, not the streaming one.
+    {
+        let cnorms = sys.a.col_norms_sq();
+        let mut z = sys.b.clone();
+        let mut j = 0usize;
+        let col_iters = (20_000_000 / shrink / proj_m).max(100);
+        let tc = bench(
+            || {
+                let d = sys.a.col_dot(j, &z) / cnorms[j];
+                sys.a.col_axpy(j, -d, &mut z);
+                j = if j + 1 == proj_n { 0 } else { j + 1 };
+                std::hint::black_box(&mut z);
+            },
+            col_iters,
+        );
+        t.row(vec![
+            format!("REK column projection ({proj_m}x{proj_n})"),
+            proj_m.to_string(),
+            format!("{:.1}", tc * 1e9),
+            format!("{:.1}", 32.0 * proj_m as f64 / tc / 1e9),
+        ]);
+        let r = RekSolver::new(1)
+            .solve(&sys, &SolveOptions::default().with_fixed_iterations(proj_iters / 2));
+        t.row(vec![
+            format!("REK iteration ({proj_m}x{proj_n} system)"),
+            proj_n.to_string(),
+            format!("{:.1}", r.seconds / r.iterations as f64 * 1e9),
+            "-".into(),
+        ]);
+    }
+
+    // Greedy Motzkin selection: every pick scans the full residual (one
+    // gemv_block_into pass + an m-length argmax) where the randomized
+    // sampler pays one O(1) alias draw — this row is that price, per
+    // selected row, for the README's "when is greedy worth it" paragraph.
+    {
+        let mut g = GreedySelector::new(&sys);
+        let x = vec![0.0f64; sys.cols()];
+        let scan_iters = (200_000_000 / shrink / (proj_m * proj_n)).max(10);
+        let tg = bench(
+            || {
+                std::hint::black_box(g.select(&sys, &x, 1));
+            },
+            scan_iters,
+        );
+        t.row(vec![
+            format!("greedy Motzkin scan ({proj_m}x{proj_n})"),
+            proj_m.to_string(),
+            format!("{:.0}", tg * 1e9),
+            format!("{:.1}", 8.0 * (proj_m * proj_n) as f64 / tg / 1e9),
+        ]);
+    }
 
     // RKAB in-block sweep: the real fused kernel (solvers::rkab::block_sweep,
     // the exact function on the solver hot path) vs the seed's scalar
@@ -488,6 +547,64 @@ fn main() {
             t_batch / t_loop
         );
         checks.push(("batch serve bitwise vs looped solves".into(), bitwise));
+    }
+
+    // Solver-zoo equivalence gates: `Weights::Uniform` must not be a new
+    // code path. Hand-roll the pre-zoo RKA / RKAB update loops (rows drawn
+    // per worker, projections against x^(k), plain alpha/q and 1/q
+    // averaging) and require today's solvers to reproduce them bit for bit
+    // at a fixed budget — any drift is a silent numerics change in the
+    // default paths every paper experiment runs on.
+    {
+        let zsys = DatasetBuilder::new(200, 24).seed(53).consistent();
+        let (q, alpha, seed, iters) = (4usize, 1.0f64, 13u32, 150usize);
+
+        let mut samplers: Vec<RowSampler> = (0..q)
+            .map(|t| RowSampler::new(&zsys, SamplingScheme::FullMatrix, t, q, seed))
+            .collect();
+        let mut x = vec![0.0f64; zsys.cols()];
+        let mut delta = vec![0.0f64; zsys.cols()];
+        for _ in 0..iters {
+            delta.fill(0.0);
+            for sampler in samplers.iter_mut() {
+                let i = sampler.sample();
+                let scale = alpha * (zsys.b[i] - zsys.a.row_dot(i, &x))
+                    / (q as f64 * zsys.row_norms_sq[i]);
+                zsys.a.row_axpy(i, scale, &mut delta);
+            }
+            axpy(1.0, &delta, &mut x);
+        }
+        let r = RkaSolver::new(seed, q, alpha)
+            .solve(&zsys, &SolveOptions::default().with_fixed_iterations(iters));
+        let ok = r.x.iter().zip(&x).all(|(a, b)| a.to_bits() == b.to_bits());
+        println!("[zoo] uniform-weight RKA bitwise vs pre-zoo loop = {ok} (must be true)");
+        checks.push(("uniform-weight rka bitwise vs pre-zoo loop".into(), ok));
+
+        let bs = 8usize;
+        let mut samplers: Vec<RowSampler> = (0..q)
+            .map(|t| RowSampler::new(&zsys, SamplingScheme::FullMatrix, t, q, seed))
+            .collect();
+        let mut x = vec![0.0f64; zsys.cols()];
+        let mut v = vec![0.0f64; zsys.cols()];
+        let mut acc = vec![0.0f64; zsys.cols()];
+        let mut idx: Vec<usize> = Vec::with_capacity(bs);
+        for _ in 0..iters {
+            acc.fill(0.0);
+            for sampler in samplers.iter_mut() {
+                v.copy_from_slice(&x);
+                block_sweep(&zsys, sampler, bs, alpha, &mut v, &mut idx);
+                axpy(1.0, &v, &mut acc);
+            }
+            let inv = 1.0 / q as f64;
+            for (xi, ai) in x.iter_mut().zip(&acc) {
+                *xi = ai * inv;
+            }
+        }
+        let r = RkabSolver::new(seed, q, bs, alpha)
+            .solve(&zsys, &SolveOptions::default().with_fixed_iterations(iters));
+        let ok = r.x.iter().zip(&x).all(|(a, b)| a.to_bits() == b.to_bits());
+        println!("[zoo] uniform-weight RKAB bitwise vs pre-zoo loop = {ok} (must be true)");
+        checks.push(("uniform-weight rkab bitwise vs pre-zoo loop".into(), ok));
     }
 
     // Stopping-test and telemetry-sink overhead on a serving-sized system.

@@ -80,6 +80,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(experiments::fig12_14::Fig12),
         Box::new(experiments::fig12_14::Fig13),
         Box::new(experiments::fig12_14::Fig14),
+        Box::new(experiments::fig12_14::SolverZoo),
         Box::new(experiments::ablations::AblationAveraging),
         Box::new(experiments::ablations::AblationSampling),
         Box::new(experiments::ablations::AblationAutotune),
@@ -100,7 +101,7 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
         for want in [
             "fig1", "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-            "fig10", "table2", "fig11", "fig12", "fig13", "fig14",
+            "fig10", "table2", "fig11", "fig12", "fig13", "fig14", "zoo",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

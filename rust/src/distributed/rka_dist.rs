@@ -37,8 +37,14 @@ impl DistRka {
         DistRka { seed, weights: Weights::Uniform(alpha) }
     }
 
-    /// Use per-rank weights.
+    /// Use per-rank weights. [`Weights::InverseRowNorm`] is rejected: its
+    /// per-iteration normalization needs every rank's sampled row before
+    /// the allreduce (use the sequential `RkaSolver`).
     pub fn with_weights(mut self, weights: Weights) -> Self {
+        assert!(
+            !matches!(weights, Weights::InverseRowNorm(_)),
+            "inverse-row-norm weights are sequential-only (RkaSolver/RkabSolver)"
+        );
         self.weights = weights;
         self
     }

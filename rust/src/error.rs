@@ -50,6 +50,15 @@ pub enum Error {
         row: usize,
     },
 
+    /// A sampling strategy the chosen engine cannot run. The greedy Motzkin
+    /// scan needs the current iterate at every selection, which only the
+    /// sequential solvers (RK/RKA/RKAB) hold — parallel, asynchronous, and
+    /// distributed engines draw rows without it.
+    UnsupportedSampling {
+        /// Engine that rejected the strategy.
+        engine: String,
+    },
+
     /// Missing AOT artifact (run `make artifacts`).
     ArtifactMissing(String),
 
@@ -81,6 +90,11 @@ impl fmt::Display for Error {
             Error::DegenerateRow { row } => write!(
                 f,
                 "degenerate system: row {row} has zero norm (cannot be projected against)"
+            ),
+            Error::UnsupportedSampling { engine } => write!(
+                f,
+                "unsupported sampling: '{engine}' cannot run the greedy Motzkin scan \
+                 (sequential rk/rka/rkab only)"
             ),
             Error::ArtifactMissing(what) => {
                 write!(f, "artifact not found: {what} (run `make artifacts`)")
@@ -146,6 +160,14 @@ mod tests {
         assert!(s.contains("0 of 5"));
         assert!(s.contains("3 diverged"));
         assert!(s.contains("2 hit the iteration cap"));
+    }
+
+    #[test]
+    fn error_display_unsupported_sampling() {
+        let e = Error::UnsupportedSampling { engine: "rka-par".into() };
+        let s = e.to_string();
+        assert!(s.contains("rka-par"));
+        assert!(s.contains("greedy"));
     }
 
     #[test]

@@ -218,6 +218,51 @@ impl CsrMatrix {
         dot(all, all)
     }
 
+    /// Squared Euclidean norm of every column over the stored entries — the
+    /// column dual of [`CsrMatrix::row_norms_sq`], precomputed once per
+    /// solve by REK's column sampling.
+    ///
+    /// Accumulates in row order, the same per-column order as the dense
+    /// pass, so a CSR matrix holding exactly a dense one's entries yields
+    /// bitwise-identical column norms.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        let mut norms = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, v) in self.row_cols(i).iter().zip(self.row_values(i)) {
+                norms[*j] += v * v;
+            }
+        }
+        norms
+    }
+
+    /// Column dot product `<A_(j), y>` (`y` of length `rows`): binary-search
+    /// each row's sorted column list for `j`. Columns are the one axis CSR
+    /// cannot slice, so REK's column projections pay an
+    /// `O(m·log(nnz/row))` scan here instead of a transpose copy.
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert!(j < self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        let mut acc = 0.0;
+        for (i, yi) in y.iter().enumerate() {
+            if let Ok(k) = self.row_cols(i).binary_search(&j) {
+                acc += self.row_values(i)[k] * yi;
+            }
+        }
+        acc
+    }
+
+    /// Column update `y += scale * A_(j)` (`y` of length `rows`), touching
+    /// only rows that store column `j`.
+    pub fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        debug_assert!(j < self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            if let Ok(k) = self.row_cols(i).binary_search(&j) {
+                *yi += scale * self.row_values(i)[k];
+            }
+        }
+    }
+
     /// Contiguous block of rows `[start, end)` as a zero-copy view: the
     /// entry arrays are `Arc`-shared with the parent
     /// ([`CsrMatrix::shares_storage`] holds); only the small row-pointer
@@ -359,6 +404,28 @@ mod tests {
     fn frobenius_over_stored_entries() {
         let a = sample();
         assert_eq!(a.frobenius_sq(), 1.0 + 4.0 + 9.0 + 16.0);
+    }
+
+    #[test]
+    fn column_ops_match_dense_oracle() {
+        // sample() is [[1, 0, 2], [0, 0, 0], [0, 3, 4]]: column 0 is only
+        // stored in row 0, column 1 only in row 2 — the binary-search skips
+        // must behave exactly like dense zeros.
+        let a = sample();
+        assert_eq!(a.col_norms_sq(), vec![1.0, 9.0, 4.0 + 16.0]);
+        let y = [2.0, -1.0, 0.5];
+        assert_eq!(a.col_dot(0, &y), 2.0);
+        assert_eq!(a.col_dot(1, &y), 1.5);
+        assert_eq!(a.col_dot(2, &y), 4.0 + 2.0);
+        let mut z = y;
+        a.col_axpy(2, 10.0, &mut z);
+        assert_eq!(z, [22.0, -1.0, 40.5]);
+
+        let d = a.to_dense();
+        assert_eq!(d.col_norms_sq(), a.col_norms_sq());
+        for j in 0..3 {
+            assert_eq!(d.col_dot(j, &y).to_bits(), a.col_dot(j, &y).to_bits(), "col {j}");
+        }
     }
 
     #[test]

@@ -152,6 +152,45 @@ impl Matrix {
         super::vector::norm2_sq(self.buf())
     }
 
+    /// Squared Euclidean norm of every column: `‖A_(j)‖²` — the column dual
+    /// of [`Matrix::row_norms_sq`], precomputed once per solve by REK's
+    /// column sampling.
+    ///
+    /// One row-major pass: column `j`'s norm accumulates `a_ij²` in row
+    /// order, which is the same per-column accumulation order the CSR
+    /// backend uses over stored entries — a CSR twin holding exactly this
+    /// matrix's entries produces bitwise-identical column norms.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        let mut norms = vec![0.0; self.cols];
+        for row in self.rows_iter() {
+            for (acc, v) in norms.iter_mut().zip(row) {
+                *acc += v * v;
+            }
+        }
+        norms
+    }
+
+    /// Column dot product `<A_(j), y>` (`y` of length `rows`), accumulated
+    /// in row order — REK's column-projection residual.
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert!(j < self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        let mut acc = 0.0;
+        for (yi, row) in y.iter().zip(self.rows_iter()) {
+            acc += row[j] * yi;
+        }
+        acc
+    }
+
+    /// Column update `y += scale * A_(j)` (`y` of length `rows`).
+    pub fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        debug_assert!(j < self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for (yi, row) in y.iter_mut().zip(self.rows_iter()) {
+            *yi += scale * row[j];
+        }
+    }
+
     /// "Crop" the top-left `rows x cols` submatrix.
     ///
     /// The paper generates its largest matrix once and derives all smaller
@@ -330,6 +369,23 @@ mod tests {
         let mut m = sample();
         m.row_mut(1)[0] = -4.0;
         assert_eq!(m[(1, 0)], -4.0);
+    }
+
+    #[test]
+    fn column_ops() {
+        // sample() is [[1, 2, 3], [4, 5, 6]].
+        let m = sample();
+        assert_eq!(m.col_norms_sq(), vec![17.0, 29.0, 45.0]);
+        let y = [10.0, 0.5];
+        assert_eq!(m.col_dot(0, &y), 12.0);
+        assert_eq!(m.col_dot(2, &y), 33.0);
+        let mut z = y;
+        m.col_axpy(1, 2.0, &mut z);
+        assert_eq!(z, [14.0, 10.5]);
+        // Column ops must honor row-block windows, not the backing buffer.
+        let block = m.row_block(1, 2).unwrap();
+        assert_eq!(block.col_norms_sq(), vec![16.0, 25.0, 36.0]);
+        assert_eq!(block.col_dot(0, &[3.0]), 12.0);
     }
 
     #[test]

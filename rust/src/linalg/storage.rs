@@ -12,7 +12,9 @@
 //!   (`block_seq`),
 //! - `(column, value)` iteration for scatter-style updates (`asyrk`),
 //! - the row-norm precomputation behind eq.-4 sampling, and the
-//!   matrix-vector products behind residual stopping and CGLS.
+//!   matrix-vector products behind residual stopping and CGLS,
+//! - column access (`col_norms_sq` / `col_dot` / `col_axpy`) for the
+//!   Randomized Extended Kaczmarz column projections (`rek`).
 //!
 //! Two backends implement it: the paper's Arc-backed dense [`Matrix`]
 //! (reference implementation — every dense trait method delegates to the
@@ -111,6 +113,18 @@ pub trait RowStorage {
     /// dense storage, stored entries for sparse (see [`RowEntries`]).
     fn row_entries(&self, i: usize) -> RowEntries<'_>;
 
+    /// Squared Euclidean norm of every column: `‖A_(j)‖²` (REK's column
+    /// sampling weights; the column dual of [`RowStorage::row_norms_sq`],
+    /// precomputed once per solve).
+    fn col_norms_sq(&self) -> Vec<f64>;
+
+    /// Column dot product `<A_(j), y>` of column `j` against a
+    /// length-`rows` vector `y` (REK's column-projection residual).
+    fn col_dot(&self, j: usize, y: &[f64]) -> f64;
+
+    /// Column update `y += scale * A_(j)` (`y` of length `rows`).
+    fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]);
+
     /// `y = A x` (no allocation; hot path behind residual stopping).
     fn gemv_into(&self, x: &[f64], y: &mut [f64]);
 
@@ -169,6 +183,20 @@ impl RowStorage for Matrix {
     #[inline]
     fn row_entries(&self, i: usize) -> RowEntries<'_> {
         RowEntries::Dense(self.row(i).iter().enumerate())
+    }
+
+    fn col_norms_sq(&self) -> Vec<f64> {
+        Matrix::col_norms_sq(self)
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        Matrix::col_dot(self, j, y)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        Matrix::col_axpy(self, j, scale, y);
     }
 
     fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
@@ -261,6 +289,20 @@ impl RowStorage for CsrMatrix {
     #[inline]
     fn row_entries(&self, i: usize) -> RowEntries<'_> {
         RowEntries::Sparse(self.row_cols(i).iter().zip(self.row_values(i).iter()))
+    }
+
+    fn col_norms_sq(&self) -> Vec<f64> {
+        CsrMatrix::col_norms_sq(self)
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        CsrMatrix::col_dot(self, j, y)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        CsrMatrix::col_axpy(self, j, scale, y);
     }
 
     fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
@@ -468,6 +510,33 @@ impl Storage {
         }
     }
 
+    /// Squared Euclidean norm of every column (REK's column sampling
+    /// weights; see [`RowStorage::col_norms_sq`]).
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Storage::Dense(m) => m.col_norms_sq(),
+            Storage::Csr(m) => m.col_norms_sq(),
+        }
+    }
+
+    /// Column dot product `<A_(j), y>` (see [`RowStorage::col_dot`]).
+    #[inline]
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        match self {
+            Storage::Dense(m) => m.col_dot(j, y),
+            Storage::Csr(m) => m.col_dot(j, y),
+        }
+    }
+
+    /// Column update `y += scale * A_(j)` (see [`RowStorage::col_axpy`]).
+    #[inline]
+    pub fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        match self {
+            Storage::Dense(m) => m.col_axpy(j, scale, y),
+            Storage::Csr(m) => m.col_axpy(j, scale, y),
+        }
+    }
+
     /// Contiguous block of rows `[start, end)` in the same backend. Dense
     /// blocks and CSR blocks both alias the parent's `Arc` storage
     /// ([`Storage::shares_storage`] holds until a dense block is mutated).
@@ -531,6 +600,18 @@ impl RowStorage for Storage {
 
     fn row_entries(&self, i: usize) -> RowEntries<'_> {
         Storage::row_entries(self, i)
+    }
+
+    fn col_norms_sq(&self) -> Vec<f64> {
+        Storage::col_norms_sq(self)
+    }
+
+    fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        Storage::col_dot(self, j, y)
+    }
+
+    fn col_axpy(&self, j: usize, scale: f64, y: &mut [f64]) {
+        Storage::col_axpy(self, j, scale, y);
     }
 
     fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
@@ -679,6 +760,41 @@ mod tests {
         for (u, v) in yd.iter().zip(&ys) {
             assert!((u - v).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn column_ops_are_bitwise_across_backends_without_zeros() {
+        // dense_sample hits zero at (i*13 % 17) == 8; shift the pattern so
+        // every entry is nonzero and the CSR twin stores the full matrix —
+        // then both backends run the same per-column accumulation sequence
+        // and the results must be bitwise equal, not just close.
+        let data: Vec<f64> = (0..5 * 7).map(|i| ((i * 13 % 17) as f64) - 8.25).collect();
+        let d = Matrix::from_vec(5, 7, data).unwrap();
+        let s = CsrMatrix::from_dense(&d);
+        assert_eq!(s.nnz(), 35, "twin must store every entry");
+        let y: Vec<f64> = (0..5).map(|i| (i as f64 * 0.53).cos()).collect();
+        for (a, b) in d.col_norms_sq().iter().zip(&s.col_norms_sq()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for j in 0..7 {
+            assert_eq!(
+                RowStorage::col_dot(&d, j, &y).to_bits(),
+                RowStorage::col_dot(&s, j, &y).to_bits(),
+                "col {j} dot"
+            );
+            let mut zd = y.clone();
+            let mut zs = y.clone();
+            RowStorage::col_axpy(&d, j, -0.375, &mut zd);
+            RowStorage::col_axpy(&s, j, -0.375, &mut zs);
+            for (u, v) in zd.iter().zip(&zs) {
+                assert_eq!(u.to_bits(), v.to_bits(), "col {j} axpy");
+            }
+        }
+        // Enum dispatch reaches the same code.
+        let sd: Storage = d.clone().into();
+        let sc: Storage = s.into();
+        assert_eq!(sd.col_dot(3, &y).to_bits(), sc.col_dot(3, &y).to_bits());
+        assert_eq!(sd.col_norms_sq(), sc.col_norms_sq());
     }
 
     #[test]

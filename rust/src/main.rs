@@ -5,13 +5,22 @@
 //!   experiment <id> [--scale f] [--seeds k] [--out dir]
 //!                                run one experiment (fig1..fig14, table1/2)
 //!   all [--scale f] [--out dir]  run the full evaluation suite
-//!   solve [--method rk|ck|rka|rkab|asyrk|pjrt] [--rows m] [--cols n]
+//!   solve [--method rk|ck|rka|rkab|rek|asyrk|pjrt] [--rows m] [--cols n]
+//!         [--sampling random|greedy] [--weights uniform|norm]
 //!         [--mtx file] [--residual [--check-every k]] [--history step]
 //!         [--watch] ...
 //!                                one-off solve on a generated system, or —
 //!                                with --mtx — on a Matrix Market file
 //!                                loaded into CSR sparse storage (b = A x
 //!                                for a seeded x, so the solution is known);
+//!                                --solver is an alias for --method; `rek`
+//!                                runs Randomized Extended Kaczmarz (least
+//!                                squares on inconsistent systems);
+//!                                --sampling greedy swaps eq. 4 row draws
+//!                                for the max-residual Motzkin scan
+//!                                (sequential rk/rka/rkab only);
+//!                                --weights norm averages RKA/RKAB workers
+//!                                by inverse row norms instead of uniformly;
 //!                                --residual stops on ‖Ax-b‖² instead of
 //!                                the reference error; --history records
 //!                                the convergence curve every `step`
@@ -27,10 +36,11 @@ use kaczmarz::data::DatasetBuilder;
 use kaczmarz::parallel::{AsyRkSolver, ParallelRka, ParallelRkab};
 use kaczmarz::runtime::{default_artifacts_dir, Manifest, PjrtRkabSolver};
 use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rek::RekSolver;
 use kaczmarz::solvers::rk::RkSolver;
-use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rka::{RkaSolver, Weights};
 use kaczmarz::solvers::rkab::RkabSolver;
-use kaczmarz::solvers::{SolveOptions, SolveResult, Solver};
+use kaczmarz::solvers::{require_randomized, SamplingStrategy, SolveOptions, SolveResult, Solver};
 use std::path::PathBuf;
 
 fn main() {
@@ -124,9 +134,46 @@ fn cmd_solve(args: &Args) {
     let q = args.get_parse("q", 4usize);
     let alpha = args.get_parse("alpha", 1.0f64);
     let seed = args.get_parse("seed", 1u32);
-    let method = args.get("method", "rk");
+    // --solver is an alias for --method (solver-zoo phrasing).
+    let method = args.get("solver", &args.get("method", "rk"));
     let inconsistent = args.has("inconsistent");
     let mtx = args.get("mtx", "");
+
+    // Row-selection rule: eq. 4 sampling (default) or the greedy Motzkin
+    // max-residual scan. Only the sequential solvers hold the iterate at
+    // selection time, so everything else rejects greedy with a typed error.
+    let sampling = match args.get("sampling", "random").as_str() {
+        "random" => SamplingStrategy::Randomized,
+        "greedy" => SamplingStrategy::Greedy,
+        other => {
+            eprintln!("unknown --sampling '{other}'; try: random, greedy");
+            std::process::exit(2);
+        }
+    };
+    if !matches!(method.as_str(), "rk" | "rka" | "rkab") {
+        if let Err(e) = require_randomized(&method, sampling) {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+
+    // Averaging weights for RKA/RKAB: uniform 1/q (default, the paper's
+    // eq. 7) or inverse-row-norm heterogeneous weights (--weights norm).
+    let norm_weights = match args.get("weights", "uniform").as_str() {
+        "uniform" => false,
+        "norm" => true,
+        other => {
+            eprintln!("unknown --weights '{other}'; try: uniform, norm");
+            std::process::exit(2);
+        }
+    };
+    if norm_weights && !matches!(method.as_str(), "rka" | "rkab") {
+        let e = kaczmarz::error::Error::InvalidArgument(format!(
+            "--weights norm reweights the averaging step of rka/rkab only (got '{method}')"
+        ));
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
 
     let sys = if mtx.is_empty() {
         let m = args.get_parse("rows", 2000usize);
@@ -217,9 +264,22 @@ fn cmd_solve(args: &Args) {
 
     let r = match method.as_str() {
         "ck" => CkSolver::new().solve(&sys, &opts),
-        "rk" => RkSolver::new(seed).solve(&sys, &opts),
-        "rka" => RkaSolver::new(seed, q, alpha).solve(&sys, &opts),
-        "rkab" => RkabSolver::new(seed, q, bs, alpha).solve(&sys, &opts),
+        "rk" => RkSolver::new(seed).with_sampling(sampling).solve(&sys, &opts),
+        "rka" => {
+            let mut solver = RkaSolver::new(seed, q, alpha).with_sampling(sampling);
+            if norm_weights {
+                solver = solver.with_weights(Weights::InverseRowNorm(alpha));
+            }
+            solver.solve(&sys, &opts)
+        }
+        "rkab" => {
+            let mut solver = RkabSolver::new(seed, q, bs, alpha).with_sampling(sampling);
+            if norm_weights {
+                solver = solver.with_weights(Weights::InverseRowNorm(alpha));
+            }
+            solver.solve(&sys, &opts)
+        }
+        "rek" => RekSolver::new(seed).solve(&sys, &opts),
         "rka-par" => ParallelRka::new(seed, q, alpha).solve(&sys, &opts),
         "rkab-par" => ParallelRkab::new(seed, q, bs, alpha).solve(&sys, &opts),
         "asyrk" => AsyRkSolver::new(seed, q).solve(&sys, &opts),
@@ -230,7 +290,10 @@ fn cmd_solve(args: &Args) {
             solver.solve(&sys, &opts).expect("PJRT solve")
         }
         other => {
-            eprintln!("unknown method '{other}'");
+            eprintln!(
+                "unknown method '{other}'; try: ck, rk, rka, rkab, rek, \
+                 rka-par, rkab-par, asyrk, pjrt"
+            );
             std::process::exit(2);
         }
     };

@@ -92,11 +92,17 @@ impl ParallelRka {
         self
     }
 
-    /// Use per-worker weights.
+    /// Use per-worker weights. [`Weights::InverseRowNorm`] is rejected: its
+    /// per-iteration normalization needs every worker's sampled row, which
+    /// the threaded workers never share (use the sequential `RkaSolver`).
     pub fn with_weights(mut self, weights: Weights) -> Self {
         if let Some(len) = weights.len() {
             assert_eq!(len, self.q, "need one weight per worker");
         }
+        assert!(
+            !matches!(weights, Weights::InverseRowNorm(_)),
+            "inverse-row-norm weights are sequential-only (RkaSolver/RkabSolver)"
+        );
         self.weights = weights;
         self
     }

@@ -7,6 +7,9 @@
 //!   sequential semantics of Algorithm 1;
 //! - [`rkab`] — the paper's new block-averaging variant (eqs. 8–9),
 //!   sequential semantics of Algorithm 3;
+//! - [`rek`] — Randomized Extended Kaczmarz (Zouzias–Freris), whose column
+//!   projections make the iterates converge to the least-squares solution
+//!   of *inconsistent* systems instead of stalling at a horizon;
 //! - [`cgls`] — Conjugate Gradient for Least Squares, the paper's oracle for
 //!   `x_LS` on inconsistent systems;
 //! - [`alpha`] — the optimal uniform weight `alpha*` (eq. 6), from the full
@@ -15,12 +18,15 @@
 pub mod alpha;
 pub mod cgls;
 pub mod ck;
+pub mod rek;
 pub mod rk;
 pub mod rka;
 pub mod rkab;
 pub mod sampling;
 
-pub use sampling::{RowSampler, SamplingScheme};
+pub use sampling::{
+    require_randomized, GreedySelector, RowSampler, SamplingScheme, SamplingStrategy,
+};
 
 use crate::data::LinearSystem;
 use crate::linalg::gemv_block_into;

@@ -1,0 +1,159 @@
+//! Randomized Extended Kaczmarz (Zouzias–Freris 2013).
+//!
+//! Plain RK on an inconsistent system stalls at a convergence horizon: the
+//! rows' hyperplanes have no common point, so the iterate orbits `x_LS` at a
+//! distance set by the noise (paper §2.2, and the survey Ferreira et al.,
+//! arXiv 2401.02842 §4). REK removes the wall with a second, *column*-space
+//! projection stream. It maintains `z ≈ the component of b outside
+//! range(A)`: each step projects `z` orthogonally to one column
+//! (`z ← z − (<A_(j), z> / ‖A_(j)‖²) A_(j)`, column `j` sampled
+//! `∝ ‖A_(j)‖²`), driving `z → b − A x_LS`. The row step is then ordinary
+//! RK against the *deflated* right-hand side `b − z`, whose system **is**
+//! consistent with solution `x_LS` — so the iterates converge to the
+//! least-squares solution itself.
+//!
+//! Practical consequence for stopping: the **reference-error** channel
+//! (`‖x − x_LS‖²`) now reaches any tolerance, where RK/RKA flatten out at
+//! their horizon. The **residual** channel still floors at the least-squares
+//! residual `‖b − A x_LS‖²` — that is a property of the system, not the
+//! solver — so residual stopping tolerances below the CGLS floor remain
+//! unreachable for REK too. Use reference stopping (or a residual tolerance
+//! above the floor) exactly as with every other solver here.
+
+use super::{SolveOptions, SolveResult, Solver, StopCheck};
+use crate::data::LinearSystem;
+use crate::metrics::Stopwatch;
+use crate::rng::{derive_seed, AliasTable, Mt19937};
+
+/// Randomized Extended Kaczmarz solver.
+///
+/// Runs on either storage backend: the dense column ops stride the row-major
+/// buffer, the CSR ones binary-search each row's stored columns (see
+/// [`RowStorage::col_dot`](crate::linalg::RowStorage::col_dot)).
+///
+/// ```
+/// use kaczmarz::data::DatasetBuilder;
+/// use kaczmarz::solvers::cgls::attach_least_squares;
+/// use kaczmarz::solvers::rek::RekSolver;
+/// use kaczmarz::solvers::{SolveOptions, Solver};
+///
+/// // Inconsistent system: plain RK stalls at a horizon away from x_LS;
+/// // REK converges to x_LS itself.
+/// let mut sys = DatasetBuilder::new(120, 6).seed(3).inconsistent();
+/// attach_least_squares(&mut sys, 1e-12, 20_000).unwrap();
+/// let r = RekSolver::new(7).solve(&sys, &SolveOptions::default().with_tolerance(1e-6));
+/// assert!(r.converged);
+/// assert!(sys.error_sq(&r.x) < 1e-6);
+/// ```
+pub struct RekSolver {
+    /// RNG seed. The row and column streams are derived sub-streams
+    /// (`derive_seed(seed, 0)` / `derive_seed(seed, 1)`), so one seed pins
+    /// the whole trajectory.
+    pub seed: u32,
+}
+
+impl RekSolver {
+    /// REK with the standard unit projections.
+    pub fn new(seed: u32) -> Self {
+        RekSolver { seed }
+    }
+}
+
+impl Solver for RekSolver {
+    fn name(&self) -> &'static str {
+        "REK"
+    }
+
+    fn solve(&self, system: &LinearSystem, opts: &SolveOptions) -> SolveResult {
+        let n = system.cols();
+        let mut x = vec![0.0; n];
+        // z starts at b and is driven toward b's out-of-range(A) component.
+        let mut z = system.b.clone();
+        let mut row_rng = Mt19937::new(derive_seed(self.seed, 0));
+        let mut col_rng = Mt19937::new(derive_seed(self.seed, 1));
+        let row_dist = AliasTable::new(system.sampling_weights());
+        // Column norms are this solver's one extra precomputation; zero
+        // columns get zero sampling probability, mirroring eq. 4 for rows.
+        let col_norms_sq = system.a.col_norms_sq();
+        let col_dist = AliasTable::new(&col_norms_sq);
+        let mut stopper = StopCheck::new(system, opts);
+
+        let sw = Stopwatch::start();
+        let mut k = 0usize;
+        let (mut converged, mut diverged);
+        loop {
+            let (stop, c, d) = stopper.check(k, &x);
+            converged = c;
+            diverged = d;
+            if stop {
+                break;
+            }
+            // Column step: project z orthogonally to column j, removing
+            // range(A) components from it.
+            let j = col_dist.sample(&mut col_rng);
+            let zscale = -system.a.col_dot(j, &z) / col_norms_sq[j];
+            system.a.col_axpy(j, zscale, &mut z);
+            // Row step: plain RK projection against the deflated rhs b − z.
+            let i = row_dist.sample(&mut row_rng);
+            let residual = system.b[i] - z[i] - system.a.row_dot(i, &x);
+            let scale = residual / system.row_norms_sq[i];
+            system.a.row_axpy(i, scale, &mut x);
+            k += 1;
+        }
+
+        SolveResult {
+            x,
+            iterations: k,
+            converged,
+            diverged,
+            seconds: sw.seconds(),
+            rows_used: k,
+            history: stopper.into_history(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::cgls::attach_least_squares;
+    use crate::solvers::rk::RkSolver;
+
+    #[test]
+    fn converges_on_consistent_system() {
+        // On a consistent system z → 0 and REK behaves like (deflated) RK.
+        let sys = DatasetBuilder::new(200, 10).seed(1).consistent();
+        let r = RekSolver::new(42).solve(&sys, &SolveOptions::default().with_tolerance(1e-12));
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-12);
+    }
+
+    #[test]
+    fn reaches_least_squares_solution_where_rk_stalls() {
+        let mut sys = DatasetBuilder::new(300, 5).seed(9).inconsistent();
+        attach_least_squares(&mut sys, 1e-12, 10_000).unwrap();
+        let opts = SolveOptions::default().with_tolerance(1e-10).with_max_iterations(200_000);
+        // Same system and tolerance as rk.rs's stall test: RK cannot hit
+        // 1e-10 of x_LS on a noisy system, REK must.
+        let rk = RkSolver::new(3).solve(&sys, &opts);
+        assert!(!rk.converged, "RK is expected to stall on this system");
+        let rek = RekSolver::new(3).solve(&sys, &opts);
+        assert!(rek.converged, "REK stalled: error {}", sys.error_sq(&rek.x));
+        assert!(sys.error_sq(&rek.x) < 1e-10);
+    }
+
+    #[test]
+    fn trajectory_is_seed_deterministic() {
+        let mut sys = DatasetBuilder::new(120, 6).seed(5).inconsistent();
+        attach_least_squares(&mut sys, 1e-12, 10_000).unwrap();
+        let opts = SolveOptions::default().with_fixed_iterations(500);
+        let a = RekSolver::new(11).solve(&sys, &opts);
+        let b = RekSolver::new(11).solve(&sys, &opts);
+        for (u, v) in a.x.iter().zip(&b.x) {
+            assert_eq!(u.to_bits(), v.to_bits(), "same seed, same trajectory");
+        }
+        let c = RekSolver::new(12).solve(&sys, &opts);
+        assert!(a.x.iter().zip(&c.x).any(|(u, v)| u != v), "different seed must differ");
+    }
+}

@@ -13,35 +13,60 @@
 //!
 //! With `q = 1` this is exactly RK.
 
-use super::sampling::{RowSampler, SamplingScheme};
+use super::sampling::{GreedySelector, RowSampler, SamplingScheme, SamplingStrategy};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::axpy;
 use crate::metrics::Stopwatch;
 
 /// Per-worker relaxation weights.
+///
+/// ```
+/// use kaczmarz::data::DatasetBuilder;
+/// use kaczmarz::solvers::rka::{RkaSolver, Weights};
+/// use kaczmarz::solvers::{SolveOptions, Solver};
+///
+/// let sys = DatasetBuilder::new(150, 8).seed(1).consistent();
+/// // Moorman-style inverse-row-norm weighting: each iteration's averaged
+/// // step leans toward the sampled rows with the smallest norms.
+/// let r = RkaSolver::new(5, 4, 1.0)
+///     .with_weights(Weights::InverseRowNorm(1.0))
+///     .solve(&sys, &SolveOptions::default());
+/// assert!(r.converged);
+/// ```
 #[derive(Clone, Debug)]
 pub enum Weights {
     /// One uniform `alpha` for all workers (the paper's main setting).
     Uniform(f64),
     /// A distinct `alpha` per worker — the partial-matrix variant of §3.3.1.
     PerWorker(Vec<f64>),
+    /// Moorman et al.'s heterogeneous averaging (arXiv 2002.04126 §3):
+    /// worker `t`'s update gets weight `λ_t ∝ 1/‖A^(i_t)‖²` over the rows
+    /// sampled *this iteration*, normalized so `Σ λ_t = 1`; the carried
+    /// `f64` is the overall relaxation `alpha` multiplying the combination.
+    /// Sequential RKA/RKAB only — the normalization needs every worker's
+    /// sampled row, which the parallel/distributed engines never share.
+    InverseRowNorm(f64),
 }
 
 impl Weights {
-    /// Weight for worker `t`.
+    /// Weight for worker `t`. For [`Weights::InverseRowNorm`] this is the
+    /// base `alpha`; the per-draw `λ_t` factor is applied at the update site
+    /// where the sampled rows are known.
     #[inline]
     pub fn get(&self, t: usize) -> f64 {
         match self {
             Weights::Uniform(a) => *a,
             Weights::PerWorker(v) => v[t],
+            Weights::InverseRowNorm(a) => *a,
         }
     }
 
-    /// Number of per-worker entries (None for uniform).
+    /// Number of per-worker entries (None for uniform and inverse-row-norm
+    /// weights, which apply to any worker count).
     pub fn len(&self) -> Option<usize> {
         match self {
-            Weights::Uniform(_) => None,
+            Weights::Uniform(_) | Weights::InverseRowNorm(_) => None,
             Weights::PerWorker(v) => Some(v.len()),
         }
     }
@@ -59,17 +84,25 @@ pub struct RkaSolver {
     pub seed: u32,
     /// Number of averaged updates per iteration (`q` in eq. 7).
     pub q: usize,
-    /// Row weights (uniform `alpha` or per-worker).
+    /// Row weights (uniform `alpha`, per-worker, or inverse-row-norm).
     pub weights: Weights,
     /// Row-sampling scheme (Full Matrix Access vs Distributed Approach).
     pub scheme: SamplingScheme,
+    /// Row-selection rule (randomized eq. 4 by default, or greedy Motzkin).
+    pub sampling: SamplingStrategy,
 }
 
 impl RkaSolver {
-    /// RKA with uniform weights and full-matrix sampling.
+    /// RKA with uniform weights and full-matrix randomized sampling.
     pub fn new(seed: u32, q: usize, alpha: f64) -> Self {
         assert!(q >= 1, "q must be >= 1");
-        RkaSolver { seed, q, weights: Weights::Uniform(alpha), scheme: SamplingScheme::FullMatrix }
+        RkaSolver {
+            seed,
+            q,
+            weights: Weights::Uniform(alpha),
+            scheme: SamplingScheme::FullMatrix,
+            sampling: SamplingStrategy::default(),
+        }
     }
 
     /// Override the sampling scheme.
@@ -78,12 +111,22 @@ impl RkaSolver {
         self
     }
 
-    /// Use per-worker weights (partial-matrix alphas).
+    /// Use per-worker weights (partial-matrix alphas) or inverse-row-norm
+    /// averaging.
     pub fn with_weights(mut self, weights: Weights) -> Self {
         if let Some(len) = weights.len() {
             assert_eq!(len, self.q, "need one weight per worker");
         }
         self.weights = weights;
+        self
+    }
+
+    /// Override the row-selection rule. Under
+    /// [`SamplingStrategy::Greedy`] each iteration projects against the `q`
+    /// *most violated* distinct rows at `x^(k)` instead of `q` random draws
+    /// (deterministic; the sampling scheme and seed become irrelevant).
+    pub fn with_sampling(mut self, sampling: SamplingStrategy) -> Self {
+        self.sampling = sampling;
         self
     }
 }
@@ -101,6 +144,9 @@ impl Solver for RkaSolver {
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
+        let mut greedy =
+            (self.sampling == SamplingStrategy::Greedy).then(|| GreedySelector::new(system));
+        let mut rows: Vec<usize> = Vec::with_capacity(q);
         // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
@@ -114,13 +160,34 @@ impl Solver for RkaSolver {
             if stop {
                 break;
             }
-            // All q projections against the same x^(k) (the x^(prev) rule).
+            // Pick this iteration's q rows up front (all projections use the
+            // same x^(k) — the x^(prev) rule — so draw order is irrelevant).
+            rows.clear();
+            match greedy.as_mut() {
+                Some(g) => rows.extend_from_slice(g.select(system, &x, q)),
+                None => rows.extend(samplers.iter_mut().map(RowSampler::sample)),
+            }
             delta.fill(0.0);
-            for (t, sampler) in samplers.iter_mut().enumerate() {
-                let i = sampler.sample();
-                let scale = self.weights.get(t) * (system.b[i] - system.a.row_dot(i, &x))
-                    / (q as f64 * system.row_norms_sq[i]);
-                system.a.row_axpy(i, scale, &mut delta);
+            match &self.weights {
+                Weights::InverseRowNorm(alpha) => {
+                    // λ_t = (1/‖A^(i_t)‖²) / Σ_s (1/‖A^(i_s)‖²): the scale
+                    // folds λ_t into the usual residual/norm projection.
+                    let inv_sum: f64 =
+                        rows.iter().map(|&i| 1.0 / system.row_norms_sq[i]).sum();
+                    for &i in &rows {
+                        let lambda = 1.0 / (system.row_norms_sq[i] * inv_sum);
+                        let scale = alpha * lambda * (system.b[i] - system.a.row_dot(i, &x))
+                            / system.row_norms_sq[i];
+                        system.a.row_axpy(i, scale, &mut delta);
+                    }
+                }
+                _ => {
+                    for (t, &i) in rows.iter().enumerate() {
+                        let scale = self.weights.get(t) * (system.b[i] - system.a.row_dot(i, &x))
+                            / (q as f64 * system.row_norms_sq[i]);
+                        system.a.row_axpy(i, scale, &mut delta);
+                    }
+                }
             }
             axpy(1.0, &delta, &mut x);
             k += 1;
@@ -189,8 +256,7 @@ mod tests {
         let opts = SolveOptions::default().with_fixed_iterations(500);
         let rka = RkaSolver::new(9, 1, 1.0).solve(&sys, &opts);
         // RK with the same derived stream:
-        let rk = RkSolver { seed: crate::rng::derive_seed(9, 0), relaxation: 1.0 }
-            .solve(&sys, &opts);
+        let rk = RkSolver::new(crate::rng::derive_seed(9, 0)).solve(&sys, &opts);
         for (a, b) in rka.x.iter().zip(&rk.x) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
@@ -213,6 +279,42 @@ mod tests {
             .with_weights(Weights::PerWorker(alphas))
             .solve(&sys, &SolveOptions::default());
         assert!(r.converged);
+    }
+
+    #[test]
+    fn inverse_row_norm_weights_converge_and_differ_from_uniform() {
+        let sys = DatasetBuilder::new(200, 10).seed(7).consistent();
+        let opts = SolveOptions::default();
+        let r = RkaSolver::new(3, 4, 1.0)
+            .with_weights(Weights::InverseRowNorm(1.0))
+            .solve(&sys, &opts);
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-8);
+        // Same seeds, different weighting: the trajectories must diverge
+        // (the generator draws per-row sigmas, so row norms are unequal).
+        let fixed = SolveOptions::default().with_fixed_iterations(50);
+        let u = RkaSolver::new(3, 4, 1.0).solve(&sys, &fixed);
+        let w = RkaSolver::new(3, 4, 1.0)
+            .with_weights(Weights::InverseRowNorm(1.0))
+            .solve(&sys, &fixed);
+        assert!(u.x.iter().zip(&w.x).any(|(a, b)| a != b), "weighting had no effect");
+    }
+
+    #[test]
+    fn greedy_sampling_converges_deterministically() {
+        let sys = DatasetBuilder::new(150, 8).seed(11).consistent();
+        let greedy = RkaSolver::new(3, 4, 1.0).with_sampling(SamplingStrategy::Greedy);
+        let r = greedy.solve(&sys, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(sys.error_sq(&r.x) < 1e-8);
+        // Greedy ignores the seed entirely: different seeds, same iterates.
+        let fixed = SolveOptions::default().with_fixed_iterations(80);
+        let a = RkaSolver::new(3, 4, 1.0).with_sampling(SamplingStrategy::Greedy);
+        let b = RkaSolver::new(99, 4, 1.0).with_sampling(SamplingStrategy::Greedy);
+        let (ra, rb) = (a.solve(&sys, &fixed), b.solve(&sys, &fixed));
+        for (u, v) in ra.x.iter().zip(&rb.x) {
+            assert_eq!(u.to_bits(), v.to_bits(), "greedy must be seed-independent");
+        }
     }
 
     #[test]

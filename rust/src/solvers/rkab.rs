@@ -12,7 +12,8 @@
 //! in-block updates apply `alpha` directly rather than `alpha/q`; for bs = 1
 //! the two coincide when weights are uniform — tested below).
 
-use super::sampling::{RowSampler, SamplingScheme};
+use super::rka::Weights;
+use super::sampling::{GreedySelector, RowSampler, SamplingScheme, SamplingStrategy};
 use super::{SolveOptions, SolveResult, Solver, StopCheck};
 use crate::data::LinearSystem;
 use crate::linalg::vector::axpy;
@@ -50,11 +51,21 @@ pub fn block_sweep(
     for _ in 0..block_size {
         indices.push(sampler.sample());
     }
+    sweep_indices(system, indices, alpha, v);
+}
+
+/// The fused projection sweep over an explicit, pre-selected index list —
+/// the inner core of [`block_sweep`], split out so the greedy path (which
+/// picks its block by Motzkin scan instead of drawing it) runs the exact
+/// same kernel chain. `indices` must be non-empty.
+pub fn sweep_indices(system: &LinearSystem, indices: &[usize], alpha: f64, v: &mut [f64]) {
+    debug_assert!(!indices.is_empty());
+    let len = indices.len();
     let mut d = system.a.row_dot(indices[0], v);
-    for j in 0..block_size {
+    for j in 0..len {
         let i = indices[j];
         let scale = alpha * (system.b[i] - d) / system.row_norms_sq[i];
-        if j + 1 < block_size {
+        if j + 1 < len {
             d = system.a.row_axpy_dot(i, scale, indices[j + 1], v);
         } else {
             system.a.row_axpy(i, scale, v);
@@ -70,22 +81,58 @@ pub struct RkabSolver {
     pub q: usize,
     /// Rows each worker processes between averagings (`bs`).
     pub block_size: usize,
-    /// Uniform relaxation weight `alpha` applied inside the block sweep.
-    pub alpha: f64,
+    /// In-block relaxation and block-averaging weights:
+    /// [`Weights::Uniform`] is the paper's single `alpha` with plain `1/q`
+    /// averaging (the pre-zoo solver, bitwise); [`Weights::PerWorker`]
+    /// gives worker `γ` its own in-block `alpha`; with
+    /// [`Weights::InverseRowNorm`] the in-block `alpha` stays uniform but
+    /// worker results are averaged with weights
+    /// `λ_γ ∝ 1/Σ_{i ∈ block_γ} ‖A^(i)‖²` (Moorman-style heterogeneous
+    /// averaging at block granularity).
+    pub weights: Weights,
     /// Row-sampling scheme.
     pub scheme: SamplingScheme,
+    /// Row-selection rule (randomized eq. 4 by default, or greedy Motzkin).
+    pub sampling: SamplingStrategy,
 }
 
 impl RkabSolver {
-    /// RKAB with full-matrix sampling.
+    /// RKAB with full-matrix sampling and a uniform in-block `alpha`.
     pub fn new(seed: u32, q: usize, block_size: usize, alpha: f64) -> Self {
         assert!(q >= 1 && block_size >= 1);
-        RkabSolver { seed, q, block_size, alpha, scheme: SamplingScheme::FullMatrix }
+        RkabSolver {
+            seed,
+            q,
+            block_size,
+            weights: Weights::Uniform(alpha),
+            scheme: SamplingScheme::FullMatrix,
+            sampling: SamplingStrategy::default(),
+        }
     }
 
     /// Override the sampling scheme.
     pub fn with_scheme(mut self, scheme: SamplingScheme) -> Self {
         self.scheme = scheme;
+        self
+    }
+
+    /// Use per-worker in-block alphas or inverse-row-norm block averaging.
+    pub fn with_weights(mut self, weights: Weights) -> Self {
+        if let Some(len) = weights.len() {
+            assert_eq!(len, self.q, "need one weight per worker");
+        }
+        self.weights = weights;
+        self
+    }
+
+    /// Override the row-selection rule. Under [`SamplingStrategy::Greedy`]
+    /// the block is the `block_size` most-violated distinct rows at `x^(k)`,
+    /// selected once per iteration and swept by every worker — so greedy
+    /// RKAB is deterministic, and with uniform weights all workers produce
+    /// the same block result (use [`Weights::PerWorker`] to differentiate
+    /// them).
+    pub fn with_sampling(mut self, sampling: SamplingStrategy) -> Self {
+        self.sampling = sampling;
         self
     }
 }
@@ -105,6 +152,9 @@ impl Solver for RkabSolver {
         let mut samplers: Vec<RowSampler> = (0..q)
             .map(|t| RowSampler::new(system, self.scheme, t, q, self.seed))
             .collect();
+        let mut greedy =
+            (self.sampling == SamplingStrategy::Greedy).then(|| GreedySelector::new(system));
+        let norm_weighted = matches!(self.weights, Weights::InverseRowNorm(_));
         // Stopping decisions and history recording both live in StopCheck.
         let mut stopper = StopCheck::new(system, opts);
 
@@ -118,18 +168,39 @@ impl Solver for RkabSolver {
             if stop {
                 break;
             }
+            // Greedy block: one Motzkin scan per iteration at x^(k); every
+            // worker sweeps the same most-violated rows.
+            if let Some(g) = greedy.as_mut() {
+                idx.clear();
+                idx.extend_from_slice(g.select(system, &x, self.block_size));
+            }
             acc.fill(0.0);
-            for sampler in samplers.iter_mut() {
+            // With inverse-row-norm weights: Σ_γ λ_raw_γ · v_γ, normalized
+            // after the loop by Σ λ_raw (so one pass suffices).
+            let mut raw_sum = 0.0;
+            for (t, sampler) in samplers.iter_mut().enumerate() {
                 // v_γ^(0) = x^(k); then bs sequential projections on v (eq. 8),
                 // via the shared fused-kernel sweep.
                 v.copy_from_slice(&x);
-                block_sweep(system, sampler, self.block_size, self.alpha, &mut v, &mut idx);
-                axpy(1.0, &v, &mut acc);
+                let alpha_t = self.weights.get(t);
+                if greedy.is_some() {
+                    sweep_indices(system, &idx, alpha_t, &mut v);
+                } else {
+                    block_sweep(system, sampler, self.block_size, alpha_t, &mut v, &mut idx);
+                }
+                if norm_weighted {
+                    let raw = 1.0 / idx.iter().map(|&i| system.row_norms_sq[i]).sum::<f64>();
+                    raw_sum += raw;
+                    axpy(raw, &v, &mut acc);
+                } else {
+                    axpy(1.0, &v, &mut acc);
+                }
             }
-            // x^(k+1) = (1/q) Σ v_γ (eq. 9).
-            let inv_q = 1.0 / q as f64;
+            // x^(k+1): plain 1/q average (eq. 9), or the λ-weighted
+            // combination when inverse-row-norm weighting is on.
+            let inv = if norm_weighted { 1.0 / raw_sum } else { 1.0 / q as f64 };
             for (xi, ai) in x.iter_mut().zip(&acc) {
-                *xi = ai * inv_q;
+                *xi = ai * inv;
             }
             k += 1;
         }

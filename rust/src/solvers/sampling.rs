@@ -8,8 +8,18 @@
 //! - **Distributed Approach** — the rows are partitioned
 //!   (`[⌊t·m/q⌋, ⌊(t+1)·m/q⌋)` for worker `t`) and each worker samples only
 //!   from its own block, so workers never collide.
+//!
+//! Orthogonal to *where* a worker may sample is *how* rows are picked:
+//! [`SamplingStrategy`] chooses between the paper's randomized eq.-4 rule
+//! and greedy Motzkin max-residual selection ([`GreedySelector`]), which the
+//! survey (Ferreira et al., arXiv 2401.02842) lists as the classic
+//! deterministic alternative. Greedy selection needs the current iterate at
+//! every draw, so only the sequential solvers support it — other engines
+//! reject it up front through [`require_randomized`].
 
 use crate::data::LinearSystem;
+use crate::error::{Error, Result};
+use crate::linalg::gemv_block_into;
 use crate::rng::{derive_seed, AliasTable, Mt19937};
 
 /// How workers pick rows.
@@ -19,6 +29,90 @@ pub enum SamplingScheme {
     FullMatrix,
     /// Worker `t` samples only from its row partition.
     Partitioned,
+}
+
+/// Row-*selection* rule, orthogonal to the [`SamplingScheme`] access
+/// pattern: the paper's randomized eq.-4 rule, or greedy Motzkin
+/// max-residual selection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SamplingStrategy {
+    /// Sample row `i` with probability `‖A^(i)‖² / ‖A‖²_F` (eq. 4).
+    #[default]
+    Randomized,
+    /// Deterministically take the row(s) with the largest squared hyperplane
+    /// distance at the current iterate (Motzkin's method). Each selection
+    /// costs a full residual scan, but every projection then removes the
+    /// worst constraint violation. Sequential RK/RKA/RKAB only — engines
+    /// whose workers draw rows without the shared iterate reject it with
+    /// [`Error::UnsupportedSampling`].
+    Greedy,
+}
+
+/// Gate for engines that cannot run the greedy scan: `Ok` for
+/// [`SamplingStrategy::Randomized`], [`Error::UnsupportedSampling`] naming
+/// `engine` for [`SamplingStrategy::Greedy`].
+pub fn require_randomized(engine: &str, strategy: SamplingStrategy) -> Result<()> {
+    match strategy {
+        SamplingStrategy::Randomized => Ok(()),
+        SamplingStrategy::Greedy => Err(Error::UnsupportedSampling { engine: engine.to_string() }),
+    }
+}
+
+/// Greedy Motzkin row selection (max-residual / maximal-distance rule):
+/// scan every row's squared hyperplane distance
+/// `(b_i - <A^(i), x>)² / ‖A^(i)‖²` at the current iterate and take the
+/// largest. One selection costs an `O(m·n)` blocked GEMV — `m` times an
+/// eq.-4 draw — but pays off on coherent or skewed-row-norm systems where
+/// randomized sampling keeps revisiting near-satisfied rows.
+///
+/// The selector owns its scan scratch, so steady-state selection allocates
+/// nothing, and it is fully deterministic: ties break toward the lowest row
+/// index.
+pub struct GreedySelector {
+    ax: Vec<f64>,
+    chosen: Vec<usize>,
+}
+
+impl GreedySelector {
+    /// Selector for `system` (allocates the length-`m` scan scratch).
+    pub fn new(system: &LinearSystem) -> Self {
+        GreedySelector { ax: vec![0.0; system.rows()], chosen: Vec::new() }
+    }
+
+    /// The `k` distinct rows with the largest squared hyperplane distances
+    /// at `x`, in non-increasing distance order (`k` is clamped to the row
+    /// count; ties break toward the lower index).
+    ///
+    /// The returned slice is valid until the next `select` call.
+    pub fn select(&mut self, system: &LinearSystem, x: &[f64], k: usize) -> &[usize] {
+        gemv_block_into(&system.a, x, &mut self.ax);
+        let m = system.rows();
+        self.chosen.clear();
+        for _ in 0..k.min(m) {
+            let mut best = usize::MAX;
+            let mut best_d = f64::NEG_INFINITY;
+            for i in 0..m {
+                if self.chosen.contains(&i) {
+                    continue;
+                }
+                let r = system.b[i] - self.ax[i];
+                let d = r * r / system.row_norms_sq[i];
+                if d > best_d {
+                    best_d = d;
+                    best = i;
+                }
+            }
+            self.chosen.push(best);
+        }
+        &self.chosen
+    }
+
+    /// The squared hyperplane distance of row `i` as of the last
+    /// [`GreedySelector::select`] scan (diagnostics and property tests).
+    pub fn last_distance_sq(&self, system: &LinearSystem, i: usize) -> f64 {
+        let r = system.b[i] - self.ax[i];
+        r * r / system.row_norms_sq[i]
+    }
 }
 
 /// Pre-flight check for per-worker samplers: under [`SamplingScheme::Partitioned`]
@@ -137,6 +231,44 @@ mod tests {
         assert_partitions_sampleable(&sys, SamplingScheme::Partitioned, 4);
         // FullMatrix never restricts, so even q > m is fine.
         assert_partitions_sampleable(&sys, SamplingScheme::FullMatrix, 100);
+    }
+
+    #[test]
+    fn greedy_selector_takes_most_violated_rows_in_order() {
+        let sys = DatasetBuilder::new(30, 5).seed(6).consistent();
+        let x = vec![0.0; 5];
+        let mut g = GreedySelector::new(&sys);
+        let chosen: Vec<usize> = g.select(&sys, &x, 3).to_vec();
+        assert_eq!(chosen.len(), 3);
+        // Oracle: rank all rows by distance at x = 0, i.e. b_i² / ‖A^(i)‖².
+        let mut ranked: Vec<(f64, usize)> = (0..30)
+            .map(|i| (sys.b[i] * sys.b[i] / sys.row_norms_sq[i], i))
+            .collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let expect: Vec<usize> = ranked[..3].iter().map(|&(_, i)| i).collect();
+        assert_eq!(chosen, expect, "top-3 by squared distance, descending");
+        // Distances must be reportable and non-increasing along the pick.
+        let d: Vec<f64> = chosen.iter().map(|&i| g.last_distance_sq(&sys, i)).collect();
+        assert!(d[0] >= d[1] && d[1] >= d[2]);
+    }
+
+    #[test]
+    fn greedy_selector_clamps_k_to_row_count() {
+        let sys = DatasetBuilder::new(4, 3).seed(6).consistent();
+        let mut g = GreedySelector::new(&sys);
+        let chosen = g.select(&sys, &[0.0; 3], 99);
+        assert_eq!(chosen.len(), 4);
+        let mut sorted = chosen.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "k > m returns each row once");
+    }
+
+    #[test]
+    fn require_randomized_gates_greedy_only() {
+        assert!(require_randomized("rka-par", SamplingStrategy::Randomized).is_ok());
+        let err = require_randomized("rka-par", SamplingStrategy::Greedy).unwrap_err();
+        assert!(matches!(err, Error::UnsupportedSampling { ref engine } if engine == "rka-par"));
+        assert_eq!(SamplingStrategy::default(), SamplingStrategy::Randomized);
     }
 
     #[test]

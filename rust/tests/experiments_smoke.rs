@@ -36,6 +36,18 @@ fn reports_write_to_disk() {
 }
 
 #[test]
+fn solver_zoo_head_to_head_smokes() {
+    // The zoo panel is the solver-menagerie head-to-head (RK / RKA /
+    // weighted RKA / REK at an equal row budget); its report must name the
+    // REK column the assertions in solver_zoo_properties.rs lock down.
+    let exp = find("zoo").expect("zoo experiment registered");
+    let md = exp.run(Scale::smoke()).to_markdown();
+    assert!(md.contains("REK"), "zoo report missing REK row:\n{md}");
+    assert!(md.contains("Head-to-head"), "zoo report missing its table:\n{md}");
+    assert!(md.contains("Shape check"), "zoo report missing shape-check note:\n{md}");
+}
+
+#[test]
 fn registry_ids_unique() {
     let mut ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
     let before = ids.len();

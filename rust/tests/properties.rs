@@ -178,8 +178,7 @@ fn prop_rka_q1_is_rk_for_any_seed() {
         let sys = random_system(9000 + case);
         let opts = SolveOptions::default().with_fixed_iterations(100);
         let rka = RkaSolver::new(case, 1, 1.0).solve(&sys, &opts);
-        let rk = RkSolver { seed: kaczmarz::rng::derive_seed(case, 0), relaxation: 1.0 }
-            .solve(&sys, &opts);
+        let rk = RkSolver::new(kaczmarz::rng::derive_seed(case, 0)).solve(&sys, &opts);
         for (a, b) in rka.x.iter().zip(&rk.x) {
             assert!((a - b).abs() < 1e-12, "case {case}");
         }

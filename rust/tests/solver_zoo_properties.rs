@@ -1,0 +1,302 @@
+//! Least-squares property suite for the solver zoo: REK (Randomized
+//! Extended Kaczmarz), greedy Motzkin sampling, and heterogeneous averaging
+//! weights.
+//!
+//! The claims locked down here:
+//!
+//! 1. on an inconsistent system, RK and RKA stall at a convergence horizon
+//!    (a positive error floor vs `x_LS`); REK, at the **same row budget**,
+//!    lands orders of magnitude below that self-calibrated floor — and at an
+//!    equal *iteration* budget it beats the best RKA configuration;
+//! 2. greedy Motzkin selection keeps the error monotone non-increasing on
+//!    consistent systems, collapses the scanned max distance, zeroes the
+//!    selected row's residual at each step, and out-iterates randomized
+//!    sampling where row norms are heavily skewed;
+//! 3. uniform weights are not a new code path: `Weights::Uniform` RKA and
+//!    RKAB are **bitwise identical** to a hand-rolled transcription of the
+//!    pre-zoo update loops;
+//! 4. every new path is reference-free: fixed-budget runs on a system with
+//!    no reference solution (where any `error_sq` consult panics) complete
+//!    cleanly, and the zoo serves through `BatchSolver` / `SolveQueue`.
+//!
+//! The dataset seed for the stall-floor and skewed-norm properties comes
+//! from `KACZMARZ_ZOO_SEED` (default 71); CI runs the suite under a small
+//! seed matrix. Margins below were validated offline for seeds 71 and 9
+//! with a bit-exact MT19937 replication of the generator and solvers; the
+//! observed REK-vs-floor separation exceeds 1e22, asserted at 1e6.
+
+use kaczmarz::batch::{BatchJob, BatchSolver, SolveQueue};
+use kaczmarz::data::{DatasetBuilder, LinearSystem};
+use kaczmarz::linalg::{axpy, gemv};
+use kaczmarz::solvers::cgls::attach_least_squares;
+use kaczmarz::solvers::rek::RekSolver;
+use kaczmarz::solvers::rk::RkSolver;
+use kaczmarz::solvers::rka::{RkaSolver, Weights};
+use kaczmarz::solvers::rkab::{block_sweep, RkabSolver};
+use kaczmarz::solvers::{
+    GreedySelector, RowSampler, SamplingScheme, SamplingStrategy, SolveOptions, Solver,
+};
+
+/// Dataset seed for the seed-matrixed properties (`KACZMARZ_ZOO_SEED`,
+/// default 71 — the CI matrix runs {71, 9}, both validated offline).
+fn zoo_seed() -> u32 {
+    std::env::var("KACZMARZ_ZOO_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(71)
+}
+
+/// The same system, stripped of every reference solution: any call to
+/// `error_sq` panics, so a run that completes proves zero consultations.
+fn strip_reference(sys: &LinearSystem) -> LinearSystem {
+    LinearSystem::new(sys.a.clone(), sys.b.clone(), None, true)
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: REK breaks the RK/RKA stall floor.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rek_lands_below_the_self_calibrated_stall_floor() {
+    let mut sys = DatasetBuilder::new(400, 8).seed(zoo_seed()).inconsistent();
+    attach_least_squares(&mut sys, 1e-12, 50_000).expect("CGLS");
+
+    // Self-calibration: where do RK and RKA actually plateau on THIS system
+    // at a 40k-row budget? (Fixed runs evaluate no metric; the error is read
+    // off the final iterate.) The floor is the best of the three.
+    const ROWS: usize = 40_000;
+    let rk_err = {
+        let r = RkSolver::new(3).solve(&sys, &SolveOptions::default().with_fixed_iterations(ROWS));
+        sys.error_sq(&r.x)
+    };
+    let rka_err = |q: usize| {
+        let opts = SolveOptions::default().with_fixed_iterations(ROWS / q);
+        sys.error_sq(&RkaSolver::new(3, q, 1.0).solve(&sys, &opts).x)
+    };
+    let floor = rk_err.min(rka_err(5)).min(rka_err(20));
+    assert!(floor > 1e-8, "stall floor {floor:.3e} suspiciously low — not inconsistent?");
+
+    // REK at the same row budget must land far below the floor (observed
+    // separation > 1e22 for the matrix seeds; 1e6 asserted).
+    let rek = RekSolver::new(3).solve(&sys, &SolveOptions::default().with_fixed_iterations(ROWS));
+    let rek_err = sys.error_sq(&rek.x);
+    assert!(
+        rek_err < floor / 1e6,
+        "REK {rek_err:.3e} not far enough below the RK/RKA floor {floor:.3e}"
+    );
+}
+
+#[test]
+fn rek_beats_best_rka_at_equal_iteration_budget() {
+    // The acceptance head-to-head: equal ITERATION budget, where each RKA
+    // iteration consumes q = 10 rows to REK's one row + one column.
+    let mut sys = DatasetBuilder::new(400, 8).seed(zoo_seed()).inconsistent();
+    attach_least_squares(&mut sys, 1e-12, 50_000).expect("CGLS");
+    let opts = SolveOptions::default().with_fixed_iterations(4_000);
+    let rka_err = sys.error_sq(&RkaSolver::new(3, 10, 1.0).solve(&sys, &opts).x);
+    let rek_err = sys.error_sq(&RekSolver::new(3).solve(&sys, &opts).x);
+    assert!(
+        rek_err < rka_err / 100.0,
+        "REK {rek_err:.3e} vs RKA(q=10) {rka_err:.3e} at 4000 iterations"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: greedy Motzkin selection.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn greedy_error_is_monotone_and_scan_distances_collapse() {
+    let sys = DatasetBuilder::new(200, 8).seed(zoo_seed()).consistent();
+
+    // Drive 400 greedy steps by hand through the public selector so the
+    // per-step scan distances are observable.
+    let mut selector = GreedySelector::new(&sys);
+    let mut x = vec![0.0; sys.cols()];
+    let mut distances = Vec::with_capacity(400);
+    let mut errors = Vec::with_capacity(400);
+    for _ in 0..400 {
+        let i = selector.select(&sys, &x, 1)[0];
+        distances.push(selector.last_distance_sq(&sys, i));
+        let scale = (sys.b[i] - sys.a.row_dot(i, &x)) / sys.row_norms_sq[i];
+        sys.a.row_axpy(i, scale, &mut x);
+        // A unit projection satisfies the selected row's equation exactly.
+        let resid = (sys.b[i] - sys.a.row_dot(i, &x)).abs();
+        assert!(resid < 1e-9 * sys.row_norms_sq[i].sqrt().max(1.0), "row {i} residual {resid}");
+        errors.push(sys.error_sq(&x));
+    }
+
+    // Unit projections never increase the distance to x* (exact-arithmetic
+    // contraction); in floating point the comparison is only meaningful
+    // above the machine floor — greedy hits ~1e-29 within ~60 steps here.
+    for (k, w) in errors.windows(2).enumerate() {
+        assert!(
+            w[1] <= w[0] * (1.0 + 1e-12) || w[1] < 1e-20,
+            "error rose at step {}: {:.3e} -> {:.3e}",
+            k + 1,
+            w[0],
+            w[1]
+        );
+    }
+    // The max-distance sequence is NOT pointwise monotone (obtuse-row
+    // counterexamples exist), but it collapses: the early scan maxima dwarf
+    // the late ones (observed ratio ~1e31; 1e6 asserted).
+    let early = distances[..50].iter().cloned().fold(0.0, f64::max);
+    let late = distances[350..].iter().cloned().fold(0.0, f64::max);
+    assert!(
+        late < early / 1e6,
+        "greedy scan distances did not collapse: early {early:.3e}, late {late:.3e}"
+    );
+    // And the trajectory really converged.
+    let err = errors.last().unwrap();
+    assert!(*err < 1e-16, "greedy stalled at {err:.3e}");
+}
+
+#[test]
+fn greedy_beats_randomized_sampling_on_skewed_row_norms() {
+    // Row sigmas spread over [1, 60] ⇒ squared row norms spread by >1e3:
+    // eq. 4 keeps revisiting heavy rows, the Motzkin scan goes straight for
+    // the most violated constraint (observed 110-134 vs 12-13 iterations
+    // for the matrix seeds; 2x margin asserted).
+    let sys =
+        DatasetBuilder::new(300, 6).seed(zoo_seed()).sigma_range(1.0, 60.0).consistent();
+    let opts = SolveOptions::default().with_tolerance(1e-8).with_max_iterations(2_000_000);
+    let rand = RkSolver::new(7).solve(&sys, &opts);
+    let greedy = RkSolver::new(7).with_sampling(SamplingStrategy::Greedy).solve(&sys, &opts);
+    assert!(rand.converged && greedy.converged);
+    assert!(
+        2 * greedy.iterations < rand.iterations,
+        "greedy {} vs randomized {}",
+        greedy.iterations,
+        rand.iterations
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: uniform weights are bitwise the pre-zoo solvers.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uniform_weight_rka_is_bitwise_the_pre_zoo_update_loop() {
+    let sys = DatasetBuilder::new(150, 8).seed(4).consistent();
+    let (q, alpha, seed, iters) = (4usize, 1.0f64, 9u32, 300usize);
+
+    // Hand-rolled transcription of the pre-zoo RKA iteration: sample one
+    // row per worker, project against x^(k), average with alpha/q.
+    let mut samplers: Vec<RowSampler> = (0..q)
+        .map(|t| RowSampler::new(&sys, SamplingScheme::FullMatrix, t, q, seed))
+        .collect();
+    let mut x = vec![0.0; sys.cols()];
+    let mut delta = vec![0.0; sys.cols()];
+    for _ in 0..iters {
+        delta.fill(0.0);
+        for sampler in samplers.iter_mut() {
+            let i = sampler.sample();
+            let scale =
+                alpha * (sys.b[i] - sys.a.row_dot(i, &x)) / (q as f64 * sys.row_norms_sq[i]);
+            sys.a.row_axpy(i, scale, &mut delta);
+        }
+        axpy(1.0, &delta, &mut x);
+    }
+
+    let r = RkaSolver::new(seed, q, alpha)
+        .solve(&sys, &SolveOptions::default().with_fixed_iterations(iters));
+    for (j, (a, b)) in r.x.iter().zip(&x).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "coordinate {j}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn uniform_weight_rkab_is_bitwise_the_pre_zoo_update_loop() {
+    let sys = DatasetBuilder::new(150, 8).seed(4).consistent();
+    let (q, bs, alpha, seed, iters) = (3usize, 6usize, 1.0f64, 9u32, 200usize);
+
+    // Hand-rolled transcription of the pre-zoo RKAB iteration: each worker
+    // sweeps its own sampled block from x^(k), results averaged by 1/q.
+    let mut samplers: Vec<RowSampler> = (0..q)
+        .map(|t| RowSampler::new(&sys, SamplingScheme::FullMatrix, t, q, seed))
+        .collect();
+    let mut x = vec![0.0; sys.cols()];
+    let mut v = vec![0.0; sys.cols()];
+    let mut acc = vec![0.0; sys.cols()];
+    let mut idx = Vec::with_capacity(bs);
+    for _ in 0..iters {
+        acc.fill(0.0);
+        for sampler in samplers.iter_mut() {
+            v.copy_from_slice(&x);
+            block_sweep(&sys, sampler, bs, alpha, &mut v, &mut idx);
+            axpy(1.0, &v, &mut acc);
+        }
+        let inv = 1.0 / q as f64;
+        for (xi, ai) in x.iter_mut().zip(&acc) {
+            *xi = ai * inv;
+        }
+    }
+
+    let r = RkabSolver::new(seed, q, bs, alpha)
+        .solve(&sys, &SolveOptions::default().with_fixed_iterations(iters));
+    for (j, (a, b)) in r.x.iter().zip(&x).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "coordinate {j}: {a} vs {b}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 4: reference-free runs and batch serving.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zoo_paths_run_reference_free_with_zero_reference_evaluations() {
+    // The probe: no reference solution anywhere, so a single error_sq
+    // consult panics. Fixed budgets must complete on every new path.
+    let sys = strip_reference(&DatasetBuilder::new(150, 8).seed(5).consistent());
+    let opts = SolveOptions::default().with_fixed_iterations(60);
+
+    let r = RekSolver::new(3).solve(&sys, &opts);
+    assert!(!r.converged && r.iterations == 60, "REK reference-free run");
+    let r = RkSolver::new(3).with_sampling(SamplingStrategy::Greedy).solve(&sys, &opts);
+    assert!(!r.converged && r.iterations == 60, "greedy RK reference-free run");
+    let r = RkaSolver::new(3, 4, 1.0)
+        .with_weights(Weights::InverseRowNorm(1.0))
+        .with_sampling(SamplingStrategy::Greedy)
+        .solve(&sys, &opts);
+    assert!(!r.converged && r.iterations == 60, "greedy weighted RKA reference-free run");
+    let r = RkabSolver::new(3, 4, 8, 1.0)
+        .with_weights(Weights::InverseRowNorm(1.0))
+        .with_sampling(SamplingStrategy::Greedy)
+        .solve(&sys, &opts);
+    assert!(!r.converged && r.iterations == 60, "greedy weighted RKAB reference-free run");
+}
+
+#[test]
+fn batch_solver_serves_rek_jobs() {
+    // Multiple right-hand sides over one matrix, solved by REK under
+    // residual stopping (consistent rhs ⇒ the residual reaches any
+    // tolerance; each job re-derives its own z = b stream).
+    let sys = DatasetBuilder::new(200, 8).seed(9).consistent();
+    let jobs: Vec<BatchJob> = (0..3)
+        .map(|j| {
+            let hidden: Vec<f64> = (0..sys.cols()).map(|i| (i + j) as f64 - 2.0).collect();
+            BatchJob::new(gemv(&sys.a, &hidden).unwrap())
+        })
+        .collect();
+    let opts = SolveOptions::default().with_residual_stopping(1e-6, 32);
+    let reports = BatchSolver::new(&sys, RekSolver::new(3))
+        .with_workers(2)
+        .solve_many(&jobs, &opts)
+        .unwrap();
+    for r in &reports {
+        assert!(r.result.converged, "REK batch job {}", r.job);
+        assert!(r.residual_norm * r.residual_norm < 1e-6, "job {}", r.job);
+    }
+}
+
+#[test]
+fn solve_queue_serves_greedy_jobs() {
+    let system = strip_reference(&DatasetBuilder::new(200, 8).seed(7).consistent());
+    let mut queue = SolveQueue::new();
+    queue.push(system, SolveOptions::default().with_residual_stopping(1e-6, 32));
+    let solver = RkSolver::new(3).with_sampling(SamplingStrategy::Greedy);
+    let reports = queue.run(&solver).unwrap();
+    assert!(reports[0].result.converged, "greedy queue job must certify via residual");
+    assert!(reports[0].residual_norm * reports[0].residual_norm < 1e-6);
+}

@@ -14,10 +14,11 @@ use kaczmarz::parallel::{
 };
 use kaczmarz::rng::Mt19937;
 use kaczmarz::solvers::ck::CkSolver;
+use kaczmarz::solvers::rek::RekSolver;
 use kaczmarz::solvers::rk::RkSolver;
-use kaczmarz::solvers::rka::RkaSolver;
+use kaczmarz::solvers::rka::{RkaSolver, Weights};
 use kaczmarz::solvers::rkab::RkabSolver;
-use kaczmarz::solvers::{SolveOptions, Solver};
+use kaczmarz::solvers::{SamplingStrategy, SolveOptions, Solver};
 use kaczmarz::Error;
 
 /// A dense system and its exact CSR twin: same `b` / `x_true`, `A`
@@ -72,6 +73,56 @@ fn sequential_solvers_agree_between_dense_and_csr_twins() {
     assert_twin_agreement("ck", CkSolver::new(), &d, &s);
     assert_twin_agreement("rka", RkaSolver::new(7, 4, 1.0), &d, &s);
     assert_twin_agreement("rkab", RkabSolver::new(7, 4, 6, 1.0), &d, &s);
+    // The zoo members ride the same row kernels plus (REK) the column ones;
+    // their trajectories must be backend-agnostic too. Greedy selection
+    // scans through gemv_block_into, whose dense panel kernel and CSR
+    // stored-entry loop sum in different orders — same argmax, drifting
+    // last bits — so these stay tolerance claims like the rest.
+    assert_twin_agreement("rek", RekSolver::new(7), &d, &s);
+    assert_twin_agreement(
+        "rk-greedy",
+        RkSolver::new(7).with_sampling(SamplingStrategy::Greedy),
+        &d,
+        &s,
+    );
+    assert_twin_agreement(
+        "rka-norm-weights",
+        RkaSolver::new(7, 4, 1.0).with_weights(Weights::InverseRowNorm(1.0)),
+        &d,
+        &s,
+    );
+    assert_twin_agreement(
+        "rkab-greedy",
+        RkabSolver::new(7, 4, 6, 1.0).with_sampling(SamplingStrategy::Greedy),
+        &d,
+        &s,
+    );
+}
+
+#[test]
+fn csr_twin_matches_dense_column_ops_bitwise() {
+    // REK's column kernels: both backends accumulate strictly in row order
+    // (dense reads row[j] per row, CSR binary-searches each row's column
+    // list), and the twin stores every entry — so unlike the lane-blocked
+    // row kernels this is a bitwise claim, not a tolerance one.
+    let (d, s) = twins(60, 9, 2);
+    for (j, (a, b)) in d.a.col_norms_sq().iter().zip(&s.a.col_norms_sq()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "col {j} norm");
+    }
+    let y: Vec<f64> = (0..60).map(|i| 0.1 * i as f64 - 2.5).collect();
+    for j in 0..9 {
+        assert_eq!(
+            d.a.col_dot(j, &y).to_bits(),
+            s.a.col_dot(j, &y).to_bits(),
+            "col_dot {j}"
+        );
+        let (mut yd, mut ys) = (y.clone(), y.clone());
+        d.a.col_axpy(j, 0.7, &mut yd);
+        s.a.col_axpy(j, 0.7, &mut ys);
+        for (i, (a, b)) in yd.iter().zip(&ys).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "col_axpy {j} row {i}");
+        }
+    }
 }
 
 #[test]
