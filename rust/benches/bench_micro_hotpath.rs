@@ -16,8 +16,12 @@
 
 use kaczmarz::batch::{BatchJob, BatchSolver};
 use kaczmarz::data::{DatasetBuilder, LinearSystem, SparseDatasetBuilder};
-use kaczmarz::linalg::vector::{axpy, dot};
-use kaczmarz::linalg::{gemv, gemv_block_into, Matrix, Storage};
+use kaczmarz::linalg::simd::{axpy_avx2, axpy_dot_avx2, dot_avx2};
+use kaczmarz::linalg::vector::{axpy, axpy_dot_scalar, axpy_scalar, dot, dot_scalar};
+use kaczmarz::linalg::{
+    active_flavor, detected_flavor, gemv, gemv_block_into, gemv_panel, KernelFlavor, Matrix,
+    Storage,
+};
 use kaczmarz::metrics::{ProgressSink, Stopwatch};
 use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::parallel::WorkerPool;
@@ -50,6 +54,18 @@ fn main() {
     let shrink = if smoke { 10 } else { 1 };
     if smoke {
         eprintln!("BENCH_SMOKE=1: reduced problem sizes (perf-tracking CI lane)");
+    }
+    // Which kernel flavor the *dispatched* rows below run under (recorded
+    // at the top level of BENCH_micro.json so compare_bench.py never
+    // mistakes a simd-vs-scalar timing delta for regression drift).
+    let have_simd = detected_flavor() == KernelFlavor::Avx2Fma;
+    eprintln!(
+        "kernels: dispatch={} host={}",
+        active_flavor().name(),
+        detected_flavor().name()
+    );
+    if !have_simd {
+        eprintln!("[kernels] host lacks AVX2+FMA: [simd] rows skipped, flavor gates pass trivially");
     }
 
     let mut t = Table::new(
@@ -92,6 +108,165 @@ fn main() {
             format!("{:.1}", ta * 1e9),
             format!("{:.1}", 24.0 * n as f64 / ta / 1e9),
         ]);
+    }
+
+    // Explicit kernel-flavor rows: the scalar 8-lane reference vs the
+    // AVX2+FMA kernels, timed side by side through the flavor-explicit
+    // entry points (`*_scalar` vs `simd::*_avx2`, independent of the
+    // process-wide dispatch). Cross-flavor agreement is a *relative
+    // tolerance* gate — FMA legally contracts `a*b + c` into one rounding,
+    // so bitwise comparison across flavors is meaningless; the bitwise
+    // gates elsewhere in this harness keep gating the scalar path.
+    {
+        const KERNEL_REL_TOL: f64 = 1e-11;
+        let rel_ok = |got: f64, reference: f64| {
+            (got - reference).abs() / reference.abs().max(1e-30) < KERNEL_REL_TOL
+        };
+        let mut dot_ok = true;
+        let mut axpy_ok = true;
+        let mut fused_ok = true;
+        let mut rngk = Mt19937::new(77);
+        for n in [1000usize, 10000] {
+            let a: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+            let b: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+            let z: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+            let mut y = vec![0.0f64; n];
+            let iters = (50_000_000 / shrink / n).max(100);
+
+            let td_s = bench(
+                || {
+                    std::hint::black_box(dot_scalar(
+                        std::hint::black_box(&a),
+                        std::hint::black_box(&b),
+                    ));
+                },
+                iters,
+            );
+            t.row(vec![
+                "dot [scalar]".into(),
+                n.to_string(),
+                format!("{:.1}", td_s * 1e9),
+                format!("{:.1}", 16.0 * n as f64 / td_s / 1e9),
+            ]);
+            let ta_s = bench(
+                || {
+                    axpy_scalar(1.0001, std::hint::black_box(&a), std::hint::black_box(&mut y));
+                },
+                iters,
+            );
+            t.row(vec![
+                "axpy [scalar]".into(),
+                n.to_string(),
+                format!("{:.1}", ta_s * 1e9),
+                format!("{:.1}", 24.0 * n as f64 / ta_s / 1e9),
+            ]);
+            // scale 0.0 keeps y bounded over millions of applications while
+            // doing identical memory traffic and flops.
+            let tf_s = bench(
+                || {
+                    std::hint::black_box(axpy_dot_scalar(
+                        0.0,
+                        std::hint::black_box(&a),
+                        std::hint::black_box(&z),
+                        std::hint::black_box(&mut y),
+                    ));
+                },
+                iters,
+            );
+            t.row(vec![
+                "axpy_dot [scalar]".into(),
+                n.to_string(),
+                format!("{:.1}", tf_s * 1e9),
+                format!("{:.1}", 32.0 * n as f64 / tf_s / 1e9),
+            ]);
+
+            if have_simd {
+                let td_v = bench(
+                    || {
+                        std::hint::black_box(
+                            dot_avx2(std::hint::black_box(&a), std::hint::black_box(&b)).unwrap(),
+                        );
+                    },
+                    iters,
+                );
+                t.row(vec![
+                    "dot [simd]".into(),
+                    n.to_string(),
+                    format!("{:.1}", td_v * 1e9),
+                    format!("{:.1}", 16.0 * n as f64 / td_v / 1e9),
+                ]);
+                let ta_v = bench(
+                    || {
+                        axpy_avx2(1.0001, std::hint::black_box(&a), std::hint::black_box(&mut y));
+                    },
+                    iters,
+                );
+                t.row(vec![
+                    "axpy [simd]".into(),
+                    n.to_string(),
+                    format!("{:.1}", ta_v * 1e9),
+                    format!("{:.1}", 24.0 * n as f64 / ta_v / 1e9),
+                ]);
+                let tf_v = bench(
+                    || {
+                        std::hint::black_box(
+                            axpy_dot_avx2(
+                                0.0,
+                                std::hint::black_box(&a),
+                                std::hint::black_box(&z),
+                                std::hint::black_box(&mut y),
+                            )
+                            .unwrap(),
+                        );
+                    },
+                    iters,
+                );
+                t.row(vec![
+                    "axpy_dot [simd]".into(),
+                    n.to_string(),
+                    format!("{:.1}", tf_v * 1e9),
+                    format!("{:.1}", 32.0 * n as f64 / tf_v / 1e9),
+                ]);
+                println!(
+                    "[kernels n={n}] simd/scalar: dot = {:.3}, axpy = {:.3}, axpy_dot = {:.3} \
+                     (< 1 means the simd kernel is faster)",
+                    td_v / td_s,
+                    ta_v / ta_s,
+                    tf_v / tf_s
+                );
+            }
+        }
+
+        // The tolerance gates, across every remainder length n mod 8: the
+        // two flavors must agree to KERNEL_REL_TOL on dot and the fused
+        // kernel's returned dot, and element-wise on both axpy outputs.
+        // On a host without AVX2+FMA the gates pass trivially (there is
+        // only one flavor to run).
+        if have_simd {
+            for n in [64usize, 65, 66, 67, 68, 69, 70, 71, 1003] {
+                let a: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+                let b: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+                let z: Vec<f64> = (0..n).map(|_| rngk.next_f64() - 0.5).collect();
+                dot_ok &= rel_ok(dot_avx2(&a, &b).unwrap(), dot_scalar(&a, &b));
+                let mut y_s = b.clone();
+                axpy_scalar(0.73, &a, &mut y_s);
+                let mut y_v = b.clone();
+                axpy_avx2(0.73, &a, &mut y_v);
+                axpy_ok &= y_s.iter().zip(&y_v).all(|(u, v)| rel_ok(*v, *u));
+                let mut y_s = b.clone();
+                let f_s = axpy_dot_scalar(0.41, &a, &z, &mut y_s);
+                let mut y_v = b.clone();
+                let f_v = axpy_dot_avx2(0.41, &a, &z, &mut y_v).unwrap();
+                fused_ok &= rel_ok(f_v, f_s) && y_s.iter().zip(&y_v).all(|(u, v)| rel_ok(*v, *u));
+            }
+        }
+        println!(
+            "[kernels] simd-vs-scalar tolerance gates: dot = {dot_ok}, axpy = {axpy_ok}, \
+             axpy_dot = {fused_ok} (must all be true)"
+        );
+        checks.push(("simd dot vs scalar (rel tol)".into(), dot_ok));
+        checks.push(("simd axpy vs scalar (rel tol)".into(), axpy_ok));
+        checks.push(("simd axpy_dot vs scalar (rel tol)".into(), fused_ok));
     }
 
     // Full projection on a real system (what CostModel::t_proj measures).
@@ -383,6 +558,52 @@ fn main() {
             format!("{:.0}", t_blocked * 1e9),
             format!("{:.1}", bytes / t_blocked / 1e9),
         ]);
+
+        // Flavor-explicit blocked gemv (same panel walk, inner dot pinned
+        // to one flavor) — the fourth kernel the tolerance gate covers.
+        let mut y_s = vec![0.0f64; m];
+        let t_gs = bench(
+            || {
+                gemv_flavored(&a, &x, &mut y_s, false);
+                std::hint::black_box(&mut y_s);
+            },
+            iters,
+        );
+        t.row(vec![
+            format!("gemv [scalar] ({m}x{n})"),
+            n.to_string(),
+            format!("{:.0}", t_gs * 1e9),
+            format!("{:.1}", bytes / t_gs / 1e9),
+        ]);
+        if have_simd {
+            let mut y_v = vec![0.0f64; m];
+            let t_gv = bench(
+                || {
+                    gemv_flavored(&a, &x, &mut y_v, true);
+                    std::hint::black_box(&mut y_v);
+                },
+                iters,
+            );
+            t.row(vec![
+                format!("gemv [simd] ({m}x{n})"),
+                n.to_string(),
+                format!("{:.0}", t_gv * 1e9),
+                format!("{:.1}", bytes / t_gv / 1e9),
+            ]);
+            println!(
+                "[kernels] gemv simd/scalar = {:.3} (< 1 means the simd kernel is faster)",
+                t_gv / t_gs
+            );
+            gemv_flavored(&a, &x, &mut y_s, false);
+            gemv_flavored(&a, &x, &mut y_v, true);
+            let ok = y_s.iter().zip(&y_v).all(|(u, v)| {
+                (v - u).abs() / u.abs().max(1e-30) < 1e-11
+            });
+            println!("[kernels] simd gemv vs scalar tolerance gate = {ok} (must be true)");
+            checks.push(("simd gemv vs scalar (rel tol)".into(), ok));
+        } else {
+            checks.push(("simd gemv vs scalar (rel tol)".into(), true));
+        }
     }
 
     // Row sampling: alias vs CDF binary search.
@@ -713,6 +934,10 @@ fn main() {
     let mut j = String::from("{\n");
     j.push_str(&format!("\"bench\": {},\n", json_string("bench_micro_hotpath")));
     j.push_str(&format!("\"smoke\": {},\n", smoke));
+    // Which flavor the dispatched (untagged) rows ran under; the
+    // flavor-explicit rows carry their flavor in the operation name
+    // ("dot [simd]" / "dot [scalar]").
+    j.push_str(&format!("\"kernel\": {},\n", json_string(active_flavor().name())));
     j.push_str(&format!("\"rows\": {},\n", t.to_json()));
     j.push_str("\"checks\": [");
     for (i, (name, pass)) in checks.iter().enumerate() {
@@ -730,5 +955,29 @@ fn main() {
     if !failed.is_empty() {
         eprintln!("EQUIVALENCE CHECK FAILURES: {failed:?}");
         std::process::exit(1);
+    }
+}
+
+/// Blocked `y = A x` with the inner dot pinned to one kernel flavor
+/// (`simd: true` requires a host with AVX2+FMA): the same panel-major
+/// walk as `gemv_block_into`, used for the flavor-explicit gemv rows and
+/// their tolerance gate.
+fn gemv_flavored(a: &Matrix, x: &[f64], y: &mut [f64], simd: bool) {
+    let panel = gemv_panel();
+    let n = a.cols();
+    y.iter_mut().for_each(|v| *v = 0.0);
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + panel).min(n);
+        let xp = &x[lo..hi];
+        for (k, yi) in y.iter_mut().enumerate() {
+            let row = &a.row(k)[lo..hi];
+            *yi += if simd {
+                dot_avx2(row, xp).expect("host has AVX2+FMA")
+            } else {
+                dot_scalar(row, xp)
+            };
+        }
+        lo = hi;
     }
 }

@@ -113,7 +113,7 @@ pub mod queue;
 pub mod solver;
 
 pub use queue::SolveQueue;
-pub use solver::{BatchJob, BatchSolver};
+pub use solver::{autotuned_rkab, BatchJob, BatchSolver};
 
 use crate::parallel::pool::WorkerPool;
 use crate::solvers::SolveResult;

@@ -1,10 +1,12 @@
 //! Many right-hand sides against one system ([`BatchSolver`]).
 
 use super::{default_workers, fan_out, SolveReport};
+use crate::coordinator::{autotune_block_size_residual, AutotuneConfig, CostModel};
 use crate::data::LinearSystem;
 use crate::error::{Error, Result};
 use crate::metrics::ProgressSink;
 use crate::parallel::pool::WorkerPool;
+use crate::solvers::rkab::RkabSolver;
 use crate::solvers::{SolveOptions, Solver};
 use std::sync::{Arc, Mutex};
 
@@ -178,6 +180,28 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
     }
 }
 
+/// Serving hook: size an [`RkabSolver`] for a *resident* system that has no
+/// reference solution, then build the solver at the picked block size.
+///
+/// Probes the system once with the reference-free scorer
+/// ([`autotune_block_size_residual`], residual decay per modeled second)
+/// over a freshly calibrated [`CostModel`]. A serving process that installs
+/// a long-lived system behind a [`BatchSolver`] calls this at install time;
+/// the probe cost is amortized over every subsequent right-hand side. When
+/// re-probing is undesirable, a block size persisted by `kaczmarz tune`
+/// ([`TunedParams::rkab_block`](crate::coordinator::TunedParams)) can be
+/// passed straight to [`RkabSolver::new`] instead.
+pub fn autotuned_rkab(
+    system: &LinearSystem,
+    seed: u32,
+    q: usize,
+    alpha: f64,
+) -> Result<(RkabSolver, usize)> {
+    let model = CostModel::calibrate(system);
+    let (bs, _probes) = autotune_block_size_residual(system, &model, &AutotuneConfig::new(q))?;
+    Ok((RkabSolver::new(seed, q, bs, alpha), bs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +296,30 @@ mod tests {
                 assert_eq!(s.k, *k, "job {j}");
                 assert_eq!(s.residual.to_bits(), r.to_bits(), "job {j}");
             }
+        }
+    }
+
+    #[test]
+    fn autotuned_rkab_serves_reference_free_jobs() {
+        let system = DatasetBuilder::new(120, 6).seed(7).consistent();
+        let (solver, bs) = autotuned_rkab(&system, 3, 2, 1.0).unwrap();
+        assert!(bs >= 1, "probe must pick a positive block size");
+        // The picked solver serves reference-free jobs straight away.
+        let jobs: Vec<BatchJob> = (0..3)
+            .map(|j| {
+                let x: Vec<f64> =
+                    (0..system.cols()).map(|i| ((i + j) as f64 * 0.4).sin()).collect();
+                BatchJob::new(gemv(&system.a, &x).unwrap())
+            })
+            .collect();
+        let opts = SolveOptions::default()
+            .with_residual_stopping(1e-8, 50)
+            .with_max_iterations(500_000);
+        let reports =
+            BatchSolver::new(&system, solver).solve_many(&jobs, &opts).unwrap();
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert!(r.result.converged, "job {}: residual {}", r.job, r.residual_norm);
         }
     }
 

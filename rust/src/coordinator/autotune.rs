@@ -40,6 +40,8 @@
 use super::timing::CostModel;
 use crate::data::LinearSystem;
 use crate::error::{Error, Result};
+use crate::linalg::gemv::gemv_block_into_with_panel;
+use crate::linalg::Matrix;
 use crate::solvers::rkab::RkabSolver;
 use crate::solvers::sampling::SamplingScheme;
 use crate::solvers::{SolveOptions, SolveResult, Solver};
@@ -199,6 +201,143 @@ pub fn autotune_block_size_residual(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Host-level kernel tuning: the blocked-GEMV panel width.
+// ---------------------------------------------------------------------------
+
+/// Timing probe for one blocked-GEMV panel-width candidate.
+#[derive(Clone, Debug)]
+pub struct GemvPanelProbe {
+    /// Candidate panel width (f64 elements).
+    pub panel: usize,
+    /// Best-of-reps wall time of one full `y = A x` at this width.
+    pub seconds: f64,
+}
+
+/// Panel widths [`autotune_gemv_panel`] probes: 8–64 KiB of `x` per
+/// panel, bracketing typical L1d sizes (the default is 4096 = 32 KiB).
+pub const GEMV_PANEL_CANDIDATES: [usize; 4] = [1024, 2048, 4096, 8192];
+
+/// Probe the blocked-GEMV panel width on this host: time a full
+/// `y = A x` over `a` at every candidate width (best of `reps` runs,
+/// after one warm-up) and return the fastest, plus every probe for
+/// reporting. NaN-safe argmin via `total_cmp`; `reps` is clamped to
+/// ≥ 1.
+///
+/// The pick feeds [`crate::linalg::set_gemv_panel`], which the residual
+/// stopping path, serving, and `gemv_block_into` all read — see the
+/// `kaczmarz tune` subcommand, which persists it via [`TunedParams`].
+/// The matrix should be wide enough that blocking matters (cols well
+/// past the largest candidate) for the timings to separate; smaller
+/// probes still return a valid, if noisy, pick.
+pub fn autotune_gemv_panel(a: &Matrix, reps: usize) -> (usize, Vec<GemvPanelProbe>) {
+    let reps = reps.max(1);
+    let n = a.cols();
+    let x: Vec<f64> = (0..n).map(|i| ((i % 64) as f64 - 31.5) * 0.031).collect();
+    let mut y = vec![0.0; a.rows()];
+    let mut probes = Vec::with_capacity(GEMV_PANEL_CANDIDATES.len());
+    for &panel in &GEMV_PANEL_CANDIDATES {
+        // Warm-up pass: fault pages and warm the cache hierarchy so the
+        // first timed rep is not charged for cold misses.
+        gemv_block_into_with_panel(a, &x, &mut y, panel);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            gemv_block_into_with_panel(a, &x, &mut y, panel);
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+        }
+        probes.push(GemvPanelProbe { panel, seconds: best });
+    }
+    let best_panel = probes
+        .iter()
+        .min_by(|u, v| u.seconds.total_cmp(&v.seconds))
+        .map(|p| p.panel)
+        .unwrap_or(GEMV_PANEL_CANDIDATES[2]);
+    (best_panel, probes)
+}
+
+/// Host-tuned parameters the `kaczmarz tune` subcommand persists and the
+/// CLI re-applies at startup (`KACZMARZ_TUNE_FILE`, or
+/// `./kaczmarz-tune.json`): the blocked-GEMV panel width for this host
+/// and the serving-shaped RKAB block size picked by the reference-free
+/// scorer ([`autotune_block_size_residual`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TunedParams {
+    /// Blocked-GEMV panel width (f64 elements), from
+    /// [`autotune_gemv_panel`].
+    pub gemv_panel: Option<usize>,
+    /// RKAB block size for serving solves, from
+    /// [`autotune_block_size_residual`].
+    pub rkab_block: Option<usize>,
+}
+
+impl TunedParams {
+    /// Serialize as the tune-file JSON (hand-rolled like every other
+    /// emitter in this offline crate; unset fields are `null`).
+    pub fn to_json(&self) -> String {
+        let field = |v: Option<usize>| v.map_or("null".to_string(), |p| p.to_string());
+        format!(
+            "{{\n  \"gemv_panel\": {},\n  \"rkab_block\": {}\n}}\n",
+            field(self.gemv_panel),
+            field(self.rkab_block)
+        )
+    }
+
+    /// Parse a tune file produced by [`TunedParams::to_json`]. The
+    /// scanner accepts only the flat `"key": <integer|null>` shape this
+    /// crate writes; a key that is present but malformed is a typed
+    /// [`Error::InvalidArgument`], a missing key is simply unset.
+    pub fn parse(text: &str) -> Result<TunedParams> {
+        fn field(text: &str, key: &str) -> Result<Option<usize>> {
+            let pat = format!("\"{key}\"");
+            let Some(at) = text.find(&pat) else {
+                return Ok(None);
+            };
+            let rest = &text[at + pat.len()..];
+            let rest = rest.trim_start();
+            let Some(rest) = rest.strip_prefix(':') else {
+                return Err(Error::InvalidArgument(format!("tune file: expected ':' after {pat}")));
+            };
+            let rest = rest.trim_start();
+            if rest.starts_with("null") {
+                return Ok(None);
+            }
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| Error::InvalidArgument(format!("tune file: bad value for {pat}")))
+        }
+        Ok(TunedParams {
+            gemv_panel: field(text, "gemv_panel")?,
+            rkab_block: field(text, "rkab_block")?,
+        })
+    }
+
+    /// Write the tune file (see [`TunedParams::to_json`]).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Read and parse a tune file.
+    pub fn load(path: &std::path::Path) -> Result<TunedParams> {
+        TunedParams::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply the host-level pieces to this process: pins the blocked-GEMV
+    /// panel via [`crate::linalg::set_gemv_panel`]. (`rkab_block` is
+    /// consumed per-solve by the CLI/serving layer, not pinned globally.)
+    pub fn apply(&self) {
+        if let Some(panel) = self.gemv_panel {
+            crate::linalg::set_gemv_panel(panel);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +426,57 @@ mod tests {
         let err =
             autotune_block_size_residual(&sys, &model, &cfg).err().expect("must be rejected");
         assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+    }
+
+    #[test]
+    fn gemv_panel_probe_covers_every_candidate() {
+        // A small matrix keeps this fast; timings are noisy there, but the
+        // contract under test is structural: every candidate probed once,
+        // positive times, and the pick is one of the candidates.
+        let sys = DatasetBuilder::new(64, 256).seed(13).consistent();
+        let (best, probes) = autotune_gemv_panel(&sys.a, 2);
+        assert_eq!(
+            probes.iter().map(|p| p.panel).collect::<Vec<_>>(),
+            GEMV_PANEL_CANDIDATES.to_vec()
+        );
+        assert!(probes.iter().all(|p| p.seconds >= 0.0 && p.seconds.is_finite()));
+        assert!(GEMV_PANEL_CANDIDATES.contains(&best));
+    }
+
+    #[test]
+    fn tuned_params_json_roundtrip() {
+        for params in [
+            TunedParams { gemv_panel: Some(2048), rkab_block: Some(100) },
+            TunedParams { gemv_panel: Some(8192), rkab_block: None },
+            TunedParams::default(),
+        ] {
+            let text = params.to_json();
+            assert_eq!(TunedParams::parse(&text).unwrap(), params, "{text}");
+        }
+        // Malformed values are typed errors, missing keys are unset.
+        assert!(TunedParams::parse("{\"gemv_panel\": x}").is_err());
+        assert_eq!(TunedParams::parse("{}").unwrap(), TunedParams::default());
+    }
+
+    #[test]
+    fn tuned_params_save_load_apply() {
+        let _guard =
+            crate::linalg::gemv::PANEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("kaczmarz-tune-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune.json");
+        let params = TunedParams { gemv_panel: Some(8192), rkab_block: Some(64) };
+        params.save(&path).unwrap();
+        let loaded = TunedParams::load(&path).unwrap();
+        assert_eq!(loaded, params);
+        // Only values >= the default panel are applied in tests (smaller
+        // ones could change blocked-GEMV rounding for concurrently running
+        // wide-matrix tests); restore the default afterwards.
+        loaded.apply();
+        assert_eq!(crate::linalg::gemv_panel(), 8192);
+        crate::linalg::set_gemv_panel(4096);
+        assert!(TunedParams::load(&dir.join("missing.json")).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

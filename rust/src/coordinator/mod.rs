@@ -18,7 +18,10 @@ pub mod calibrate;
 pub mod experiments;
 pub mod timing;
 
-pub use autotune::{autotune_block_size, autotune_block_size_residual, AutotuneConfig};
+pub use autotune::{
+    autotune_block_size, autotune_block_size_residual, autotune_gemv_panel, AutotuneConfig,
+    TunedParams,
+};
 pub use calibrate::{calibrate_iterations, calibrate_iterations_residual, Calibration};
 pub use timing::CostModel;
 

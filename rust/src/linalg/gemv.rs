@@ -11,10 +11,51 @@ use super::matrix::Matrix;
 use super::storage::RowStorage;
 use super::vector::dot;
 use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Column-panel width for [`gemv_block_into`]: 4096 f64 = 32 KiB, one L1d's
-/// worth of `x`, leaving the row stream the other half of the cache.
+/// Default column-panel width for [`gemv_block_into`]: 4096 f64 = 32 KiB,
+/// one L1d's worth of `x`, leaving the row stream the other half of the
+/// cache. [`gemv_panel`] may override this per host.
 pub(crate) const GEMV_PANEL: usize = 4096;
+
+/// Host-tuned panel override; 0 means "unset, fall back to env/default".
+static TUNED_PANEL: AtomicUsize = AtomicUsize::new(0);
+
+/// `KACZMARZ_GEMV_PANEL` env override, parsed once.
+static ENV_PANEL: OnceLock<Option<usize>> = OnceLock::new();
+
+/// Pin the blocked-GEMV panel width for this process (in f64 elements).
+///
+/// Called by the autotuner (`kaczmarz tune` / a loaded tune file) after
+/// probing candidate widths on this host. Zero or absurd values are
+/// ignored; the width is clamped to `[64, 1 << 20]`. Unlike the kernel
+/// flavor this is re-settable — later tune loads win.
+pub fn set_gemv_panel(panel: usize) {
+    if panel > 0 {
+        TUNED_PANEL.store(panel.clamp(64, 1 << 20), Ordering::Relaxed);
+    }
+}
+
+/// The panel width [`gemv_block_into`] uses on dense storage, resolved as:
+/// a [`set_gemv_panel`] pin (the tuner), else a positive
+/// `KACZMARZ_GEMV_PANEL` environment value, else the default
+/// [`GEMV_PANEL`] = 4096.
+pub fn gemv_panel() -> usize {
+    let tuned = TUNED_PANEL.load(Ordering::Relaxed);
+    if tuned > 0 {
+        return tuned;
+    }
+    ENV_PANEL
+        .get_or_init(|| {
+            std::env::var("KACZMARZ_GEMV_PANEL")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&p| p > 0)
+                .map(|p| p.clamp(64, 1 << 20))
+        })
+        .unwrap_or(GEMV_PANEL)
+}
 
 /// `y = A x` (allocates the output). Storage-generic: accepts any
 /// [`RowStorage`] backend — dense, CSR, or the [`Storage`](super::Storage)
@@ -58,10 +99,29 @@ pub fn gemv_block_into<S: RowStorage + ?Sized>(a: &S, x: &[f64], y: &mut [f64]) 
 }
 
 /// Panel-width-parameterized body of [`gemv_block_into`] (exposed to tests
-/// so small matrices exercise multi-panel paths).
+/// and the autotune probe so small matrices exercise multi-panel paths and
+/// the tuner can time candidate widths).
 pub(crate) fn gemv_block_into_with_panel(a: &Matrix, x: &[f64], y: &mut [f64], panel: usize) {
+    gemv_block_rows_with_panel(a, x, y, 0, panel);
+}
+
+/// Row-range slice of the blocked GEMV: computes rows
+/// `r0 .. r0 + y.len()` of `A x` into `y`, panels walked in the same
+/// panel-major order as the full kernel.
+///
+/// Each output element accumulates its per-panel partial dots in exactly
+/// the order [`gemv_block_into_with_panel`] would, so splitting the row
+/// range across workers (see `parallel::gemv`) and running this per range
+/// reproduces the serial result *bitwise*, element for element.
+pub(crate) fn gemv_block_rows_with_panel(
+    a: &Matrix,
+    x: &[f64],
+    y: &mut [f64],
+    r0: usize,
+    panel: usize,
+) {
     debug_assert_eq!(x.len(), a.cols());
-    debug_assert_eq!(y.len(), a.rows());
+    debug_assert!(r0 + y.len() <= a.rows());
     debug_assert!(panel > 0);
     let n = a.cols();
     y.fill(0.0);
@@ -69,8 +129,8 @@ pub(crate) fn gemv_block_into_with_panel(a: &Matrix, x: &[f64], y: &mut [f64], p
     while lo < n {
         let hi = (lo + panel).min(n);
         let xp = &x[lo..hi];
-        for (yi, row) in y.iter_mut().zip(a.rows_iter()) {
-            *yi += dot(&row[lo..hi], xp);
+        for (k, yi) in y.iter_mut().enumerate() {
+            *yi += dot(&a.row(r0 + k)[lo..hi], xp);
         }
         lo = hi;
     }
@@ -97,6 +157,12 @@ pub fn gemv_transpose<S: RowStorage + ?Sized>(a: &S, x: &[f64]) -> Result<Vec<f6
 pub fn gemv_transpose_into<S: RowStorage + ?Sized>(a: &S, x: &[f64], y: &mut [f64]) {
     a.gemv_transpose_into(x, y);
 }
+
+/// Serializes tests that mutate the process-wide panel pin (here and in
+/// `coordinator::autotune`): without it, concurrent test threads observe
+/// each other's transient pins.
+#[cfg(test)]
+pub(crate) static PANEL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 #[cfg(test)]
 mod tests {
@@ -149,6 +215,54 @@ mod tests {
                 assert!((u - v).abs() < 1e-12, "panel {panel}: {u} vs {v}");
             }
         }
+    }
+
+    #[test]
+    fn ranged_blocked_gemv_is_bitwise_slice_of_full() {
+        let rows = 5;
+        let cols = 23;
+        let m = Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|i| ((i * 29 % 31) as f64 - 15.0) * 0.37)
+                .collect(),
+        )
+        .unwrap();
+        let x: Vec<f64> = (0..cols).map(|i| (i as f64 * 0.21).sin()).collect();
+        for panel in [3usize, 8, 23, 64] {
+            let mut full = vec![0.0; rows];
+            gemv_block_into_with_panel(&m, &x, &mut full, panel);
+            // Split the rows 0..2 / 2..5 and recompute each range.
+            let mut lo_part = vec![f64::NAN; 2];
+            let mut hi_part = vec![f64::NAN; 3];
+            gemv_block_rows_with_panel(&m, &x, &mut lo_part, 0, panel);
+            gemv_block_rows_with_panel(&m, &x, &mut hi_part, 2, panel);
+            let stitched: Vec<f64> = lo_part.iter().chain(&hi_part).copied().collect();
+            for (i, (u, v)) in stitched.iter().zip(&full).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "panel {panel}, row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_panel_pins_and_clamps() {
+        let _guard = PANEL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // Default, or a previous panel test's restored default.
+        assert_eq!(gemv_panel(), GEMV_PANEL);
+        // Pins clamp into [64, 1 << 20]; zero is ignored. Only values
+        // >= the default are probed here so concurrently running tests
+        // never see a *smaller* panel (which could change blocked-path
+        // rounding for wide matrices mid-run).
+        set_gemv_panel(8192);
+        assert_eq!(gemv_panel(), 8192);
+        set_gemv_panel(usize::MAX);
+        assert_eq!(gemv_panel(), 1 << 20);
+        set_gemv_panel(0);
+        assert_eq!(gemv_panel(), 1 << 20, "zero must not unset the pin");
+        // Restore the default so the rest of the suite is unaffected.
+        set_gemv_panel(GEMV_PANEL);
+        assert_eq!(gemv_panel(), GEMV_PANEL);
     }
 
     #[test]

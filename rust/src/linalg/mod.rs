@@ -4,7 +4,9 @@
 //! available in this environment): a row-major dense matrix, a CSR sparse
 //! matrix behind the same row-access contract ([`RowStorage`], dispatched
 //! through the two-variant [`Storage`] enum every solver runs against),
-//! vector kernels tuned for the Kaczmarz hot path (`dot`, `axpy`),
+//! vector kernels tuned for the Kaczmarz hot path (`dot`, `axpy`, with
+//! runtime-dispatched AVX2+FMA implementations in [`simd`] and the scalar
+//! 8-lane bodies kept as the bitwise reference),
 //! matrix-vector products, a Cholesky factorization, and
 //! eigen/singular-value routines (power and inverse-power iteration, and a
 //! one-sided Jacobi SVD used as the test oracle) needed to compute the
@@ -15,6 +17,7 @@ pub mod csr;
 pub mod eig;
 pub mod gemv;
 pub mod matrix;
+pub mod simd;
 pub mod storage;
 pub mod svd;
 pub mod vector;
@@ -22,8 +25,15 @@ pub mod vector;
 pub use cholesky::Cholesky;
 pub use csr::CsrMatrix;
 pub use eig::{inverse_power_iteration, power_iteration};
-pub use gemv::{gemv, gemv_block_into, gemv_into, gemv_transpose, gemv_transpose_into};
+pub use gemv::{
+    gemv, gemv_block_into, gemv_into, gemv_panel, gemv_transpose, gemv_transpose_into,
+    set_gemv_panel,
+};
 pub use matrix::Matrix;
+pub use simd::{active_flavor, detected_flavor, force_flavor, KernelFlavor};
 pub use storage::{RowEntries, RowStorage, Storage};
 pub use svd::jacobi_singular_values;
-pub use vector::{axpy, axpy_dot, dot, norm2, norm2_sq, scale_in_place, sub};
+pub use vector::{
+    axpy, axpy_dot, axpy_dot_scalar, axpy_scalar, dot, dot_scalar, norm2, norm2_sq,
+    scale_in_place, sub,
+};

@@ -1,0 +1,343 @@
+//! Explicit SIMD kernels with one-time runtime dispatch.
+//!
+//! The scalar 8-lane kernels in [`super::vector`] are the *bitwise
+//! reference path*: their chunked accumulator layout is part of the
+//! crate's reproducibility contract (the RKAB fused sweep, dense storage
+//! dispatch, and batch serving are all gated bitwise against it in CI).
+//! This module adds AVX2+FMA implementations of the same three hot loops
+//! — `dot`, `axpy`, and the fused `axpy_dot` — via `std::arch`, selected
+//! once per process by [`active_flavor`].
+//!
+//! Dispatch rules:
+//!
+//! - The host is probed once (`is_x86_feature_detected!`, cached in a
+//!   [`OnceLock`]). AVX2+FMA hosts run the SIMD kernels; everything else
+//!   (including non-x86_64 builds) runs the scalar reference.
+//! - `KACZMARZ_KERNEL=scalar` in the environment forces the scalar path
+//!   regardless of host capability — this is how CI re-runs the bitwise
+//!   gates on the reference kernels.
+//! - [`force_flavor`] is the programmatic equivalent; requests are
+//!   clamped to host capability, so forcing `Avx2Fma` on a host without
+//!   the features can never dispatch an unsupported instruction.
+//!
+//! Numerics: FMA contracts `a*b + c` into one rounding, so the SIMD
+//! results legally differ from the scalar reference in the last ulps —
+//! equivalence is asserted to a *relative tolerance* (see
+//! `bench_micro_hotpath` and `tests/simd_kernels.rs`), never `to_bits`
+//! across flavors. Within the SIMD flavor the fused `axpy_dot` keeps the
+//! exact accumulator structure of the SIMD `dot` (two 4-lane registers,
+//! eight doubles per trip, identical tail and reduction order), so
+//! fused-vs-separate stays bitwise *within* a flavor, and every existing
+//! in-process bitwise gate passes under either dispatch.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation the process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFlavor {
+    /// Portable 8-lane scalar kernels — the bitwise reference path.
+    Scalar,
+    /// AVX2 + FMA `std::arch` kernels (x86_64 only).
+    Avx2Fma,
+}
+
+impl KernelFlavor {
+    /// Stable lowercase name, as reported in `BENCH_micro.json` and by
+    /// `kaczmarz info` (`"scalar"` / `"avx2+fma"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelFlavor::Scalar => "scalar",
+            KernelFlavor::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+static FLAVOR: OnceLock<KernelFlavor> = OnceLock::new();
+
+/// The best flavor this host can run, ignoring any override.
+pub fn detected_flavor() -> KernelFlavor {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return KernelFlavor::Avx2Fma;
+        }
+    }
+    KernelFlavor::Scalar
+}
+
+/// The flavor the hot-path kernels dispatch to, resolved once per
+/// process: `KACZMARZ_KERNEL=scalar` forces the reference path, any
+/// other value (or no value) selects [`detected_flavor`]. The first
+/// call — or a prior [`force_flavor`] — pins the answer for the
+/// lifetime of the process.
+pub fn active_flavor() -> KernelFlavor {
+    *FLAVOR.get_or_init(|| match std::env::var("KACZMARZ_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => KernelFlavor::Scalar,
+        _ => detected_flavor(),
+    })
+}
+
+/// Programmatically pin the kernel flavor before first use.
+///
+/// Requests are clamped to host capability ([`Avx2Fma`] on a host
+/// without AVX2+FMA degrades to [`Scalar`]; forcing an unsupported
+/// instruction set is never possible). Returns `true` when the active
+/// flavor now equals the clamped request — `false` means dispatch was
+/// already resolved to something else and cannot change.
+///
+/// [`Avx2Fma`]: KernelFlavor::Avx2Fma
+/// [`Scalar`]: KernelFlavor::Scalar
+pub fn force_flavor(requested: KernelFlavor) -> bool {
+    let clamped = match requested {
+        KernelFlavor::Scalar => KernelFlavor::Scalar,
+        KernelFlavor::Avx2Fma => detected_flavor(),
+    };
+    let _ = FLAVOR.set(clamped);
+    active_flavor() == clamped
+}
+
+/// `true` when the dispatched kernels are the AVX2+FMA flavor. The hot
+/// paths in [`super::vector`] branch on this once per call (an atomic
+/// load), keeping the inner loops themselves branch-free.
+#[inline]
+pub(crate) fn use_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        active_flavor() == KernelFlavor::Avx2Fma
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explicit per-flavor entry points (Option-returning, always safe).
+//
+// These run the AVX2 kernels whenever the *host* supports them,
+// independent of the process-wide dispatch — benches and the
+// property-test suite use them to time and compare both flavors inside
+// one process. `None` means the host cannot run AVX2+FMA.
+// ---------------------------------------------------------------------------
+
+/// AVX2+FMA `dot`, or `None` when the host lacks the features.
+pub fn dot_avx2(a: &[f64], b: &[f64]) -> Option<f64> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if detected_flavor() == KernelFlavor::Avx2Fma {
+            // Safety: the feature probe above confirmed AVX2 and FMA.
+            return Some(unsafe { avx::dot(a, b) });
+        }
+    }
+    let _ = (a, b);
+    None
+}
+
+/// AVX2+FMA `axpy` (`y += alpha * x`); returns `false` (leaving `y`
+/// untouched) when the host lacks the features.
+pub fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if detected_flavor() == KernelFlavor::Avx2Fma {
+            // Safety: the feature probe above confirmed AVX2 and FMA.
+            unsafe { avx::axpy(alpha, x, y) };
+            return true;
+        }
+    }
+    let _ = (alpha, x, y);
+    false
+}
+
+/// AVX2+FMA fused `axpy_dot`, or `None` (leaving `y` untouched) when
+/// the host lacks the features.
+pub fn axpy_dot_avx2(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> Option<f64> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if detected_flavor() == KernelFlavor::Avx2Fma {
+            // Safety: the feature probe above confirmed AVX2 and FMA.
+            return Some(unsafe { avx::axpy_dot(alpha, x, z, y) });
+        }
+    }
+    let _ = (alpha, x, z, y);
+    None
+}
+
+// ---------------------------------------------------------------------------
+// The AVX2+FMA kernels themselves.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx {
+    //! Raw `#[target_feature]` kernels. Callers must have verified
+    //! AVX2+FMA support (see the safe wrappers in the parent module).
+
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd, _mm256_fmadd_pd,
+        _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_pd,
+        _mm_add_sd, _mm_cvtsd_f64, _mm_unpackhi_pd,
+    };
+
+    /// Horizontal sum of a 4-lane register, in the fixed order
+    /// `(l0 + l2) + (l1 + l3)` — the same reduction every kernel here
+    /// shares so fused and separate dots stay bitwise-equal.
+    ///
+    /// # Safety
+    /// Requires AVX2 (the cast/extract/unpack intrinsics); callers are
+    /// inside `#[target_feature(enable = "avx2")]` contexts.
+    #[inline]
+    unsafe fn hsum4(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v); // lanes 0, 1
+        let hi = _mm256_extractf128_pd::<1>(v); // lanes 2, 3
+        let sum2 = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        let shuf = _mm_unpackhi_pd(sum2, sum2); // [l1+l3, l1+l3]
+        _mm_cvtsd_f64(_mm_add_sd(sum2, shuf)) // (l0+l2) + (l1+l3)
+    }
+
+    /// AVX2+FMA dot product: two 4-lane FMA accumulators (eight doubles
+    /// per trip), scalar tail, reduction `hsum4(acc0 + acc1) + tail`.
+    ///
+    /// # Safety
+    /// The host must support AVX2 and FMA (`is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(i + 4)),
+                _mm256_loadu_pd(pb.add(i + 4)),
+                acc1,
+            );
+            i += 8;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        hsum4(_mm256_add_pd(acc0, acc1)) + tail
+    }
+
+    /// AVX2+FMA `y += alpha * x`, eight doubles per trip plus a scalar
+    /// tail.
+    ///
+    /// # Safety
+    /// The host must support AVX2 and FMA (`is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
+        let va = _mm256_set1_pd(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let y0 = _mm256_fmadd_pd(va, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)));
+            let y1 = _mm256_fmadd_pd(
+                va,
+                _mm256_loadu_pd(px.add(i + 4)),
+                _mm256_loadu_pd(py.add(i + 4)),
+            );
+            _mm256_storeu_pd(py.add(i), y0);
+            _mm256_storeu_pd(py.add(i + 4), y1);
+            i += 8;
+        }
+        while i < n {
+            *py.add(i) += alpha * *px.add(i);
+            i += 1;
+        }
+    }
+
+    /// AVX2+FMA fused projection kernel: `y += alpha * x`, returning
+    /// `<z, y>` over the updated `y`.
+    ///
+    /// The dot accumulators mirror [`dot`] lane-for-lane (acc0 holds
+    /// lanes `i..i+4`, acc1 lanes `i+4..i+8`, same tail, same
+    /// `hsum4(acc0 + acc1) + tail` reduction), so the fused result is
+    /// bit-identical to `axpy(alpha, x, y); dot(z, y)` *within this
+    /// flavor* — the same contract the scalar pair keeps.
+    ///
+    /// # Safety
+    /// The host must support AVX2 and FMA (`is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_dot(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(z.len(), y.len());
+        let n = x.len().min(z.len()).min(y.len());
+        let va = _mm256_set1_pd(alpha);
+        let px = x.as_ptr();
+        let pz = z.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let y0 = _mm256_fmadd_pd(va, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)));
+            let y1 = _mm256_fmadd_pd(
+                va,
+                _mm256_loadu_pd(px.add(i + 4)),
+                _mm256_loadu_pd(py.add(i + 4)),
+            );
+            _mm256_storeu_pd(py.add(i), y0);
+            _mm256_storeu_pd(py.add(i + 4), y1);
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i)), y0, acc0);
+            acc1 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i + 4)), y1, acc1);
+            i += 8;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            let yv = *py.add(i) + alpha * *px.add(i);
+            *py.add(i) = yv;
+            tail += *pz.add(i) * yv;
+            i += 1;
+        }
+        hsum4(_mm256_add_pd(acc0, acc1)) + tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flavor_names_are_stable() {
+        assert_eq!(KernelFlavor::Scalar.name(), "scalar");
+        assert_eq!(KernelFlavor::Avx2Fma.name(), "avx2+fma");
+    }
+
+    #[test]
+    fn detected_flavor_is_consistent() {
+        // Whatever the host is, two probes agree and active_flavor is
+        // one of the two variants.
+        assert_eq!(detected_flavor(), detected_flavor());
+        let f = active_flavor();
+        assert!(f == KernelFlavor::Scalar || f == KernelFlavor::Avx2Fma);
+    }
+
+    #[test]
+    fn force_is_clamped_to_host_capability() {
+        // After any prior resolution this may return false, but it must
+        // never leave the process dispatching to an unsupported flavor.
+        let _ = force_flavor(KernelFlavor::Avx2Fma);
+        if detected_flavor() == KernelFlavor::Scalar {
+            assert_eq!(active_flavor(), KernelFlavor::Scalar);
+        }
+    }
+
+    #[test]
+    fn avx2_wrappers_agree_with_scalar_when_available() {
+        let n = 37; // crosses the 8-lane boundary with a 5-element tail
+        let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+        if let Some(d) = dot_avx2(&a, &b) {
+            let reference = super::super::vector::dot_scalar(&a, &b);
+            let rel = (d - reference).abs() / reference.abs().max(1e-30);
+            assert!(rel < 1e-12, "simd dot diverged: rel={rel:e}");
+        }
+    }
+}

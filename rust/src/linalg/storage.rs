@@ -33,10 +33,10 @@
 //! [`LinearSystem`]: crate::data::LinearSystem
 
 use super::csr::CsrMatrix;
-use super::gemv::{gemv_block_into_with_panel, GEMV_PANEL};
+use super::gemv::{gemv_block_into_with_panel, gemv_panel};
 use super::matrix::Matrix;
 use super::vector::{axpy, axpy_dot, dot, norm2_sq};
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// Iterator over one row's `(column, value)` entries, concrete so the trait
 /// stays object-safe-free of generics and builds on older toolchains.
@@ -202,8 +202,9 @@ impl RowStorage for Matrix {
     fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(x.len(), Matrix::cols(self));
         debug_assert_eq!(y.len(), Matrix::rows(self));
-        if Matrix::cols(self) > GEMV_PANEL {
-            gemv_block_into_with_panel(self, x, y, GEMV_PANEL);
+        let panel = gemv_panel();
+        if Matrix::cols(self) > panel {
+            gemv_block_into_with_panel(self, x, y, panel);
             return;
         }
         for (yi, row) in y.iter_mut().zip(self.rows_iter()) {
@@ -212,7 +213,7 @@ impl RowStorage for Matrix {
     }
 
     fn gemv_block_into(&self, x: &[f64], y: &mut [f64]) {
-        gemv_block_into_with_panel(self, x, y, GEMV_PANEL);
+        gemv_block_into_with_panel(self, x, y, gemv_panel());
     }
 
     fn gemv_transpose_into(&self, x: &[f64], y: &mut [f64]) {
@@ -563,6 +564,74 @@ impl Storage {
             Storage::Csr(m) => m.gram(),
         }
     }
+
+    // -- Checked kernel entry points ------------------------------------
+    //
+    // The raw kernels (`dot`/`axpy`/`axpy_dot` and the `row_*` trait
+    // methods above) guard length mismatches only with `debug_assert_eq!`
+    // to keep the hot loops branch-free: in release a mismatched caller
+    // silently computes over the common prefix. Internal callers uphold
+    // the contract (vectors are sized once per solve from the system's
+    // dimensions), but *external* callers reach the kernels through these
+    // `try_*` boundary methods, which validate shapes once per call and
+    // return a typed [`Error::InvalidArgument`] instead.
+
+    /// Shape-check helper for the `try_*` boundary: row index in range,
+    /// vector exactly `cols` long.
+    fn check_row_vec(&self, what: &str, i: usize, len: usize) -> Result<()> {
+        if i >= self.rows() {
+            return Err(Error::InvalidArgument(format!(
+                "{what}: row index {i} out of range for {} rows",
+                self.rows()
+            )));
+        }
+        if len != self.cols() {
+            return Err(Error::InvalidArgument(format!(
+                "{what}: vector has len {len}, matrix has {} cols",
+                self.cols()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Checked [`Storage::row_dot`]: validates the row index and the
+    /// length of `x` before touching the branch-free kernel.
+    pub fn try_row_dot(&self, i: usize, x: &[f64]) -> Result<f64> {
+        self.check_row_vec("try_row_dot", i, x.len())?;
+        Ok(self.row_dot(i, x))
+    }
+
+    /// Checked [`Storage::row_axpy`]: validates the row index and the
+    /// length of `y` before touching the branch-free kernel.
+    pub fn try_row_axpy(&self, i: usize, scale: f64, y: &mut [f64]) -> Result<()> {
+        self.check_row_vec("try_row_axpy", i, y.len())?;
+        self.row_axpy(i, scale, y);
+        Ok(())
+    }
+
+    /// Checked [`Storage::row_axpy_dot`]: validates both row indices and
+    /// the length of `y` before touching the fused kernel.
+    pub fn try_row_axpy_dot(&self, i: usize, scale: f64, next: usize, y: &mut [f64]) -> Result<f64> {
+        self.check_row_vec("try_row_axpy_dot", i, y.len())?;
+        self.check_row_vec("try_row_axpy_dot", next, y.len())?;
+        Ok(self.row_axpy_dot(i, scale, next, y))
+    }
+
+    /// Checked `y = A x`: validates `x` against `cols` and `y` against
+    /// `rows`, then runs the (blocked, possibly SIMD) GEMV kernel.
+    pub fn try_gemv_into(&self, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != self.cols() || y.len() != self.rows() {
+            return Err(Error::InvalidArgument(format!(
+                "try_gemv_into: A is {}x{}, x has len {}, y has len {}",
+                self.rows(),
+                self.cols(),
+                x.len(),
+                y.len()
+            )));
+        }
+        RowStorage::gemv_block_into(self, x, y);
+        Ok(())
+    }
 }
 
 impl RowStorage for Storage {
@@ -821,6 +890,37 @@ mod tests {
         assert!(sd.crop(2, 2).unwrap().as_dense().is_some());
         assert!(sc.crop(2, 2).unwrap().as_csr().is_some());
         assert!(sc.row_block(3, 5).is_err());
+    }
+
+    #[test]
+    fn checked_boundary_rejects_bad_shapes_and_accepts_good() {
+        for st in [
+            Storage::from(dense_sample(4, 6)),
+            Storage::from(CsrMatrix::from_dense(&dense_sample(4, 6))),
+        ] {
+            let x_good: Vec<f64> = (0..6).map(|i| i as f64).collect();
+            let x_short = vec![1.0; 5];
+            // NB: these run in release too (no debug_assert involved).
+            assert!(st.try_row_dot(0, &x_good).is_ok());
+            assert!(st.try_row_dot(0, &x_short).is_err());
+            assert!(st.try_row_dot(4, &x_good).is_err(), "row index OOB");
+            let mut y = x_good.clone();
+            assert!(st.try_row_axpy(1, 0.5, &mut y).is_ok());
+            assert!(st.try_row_axpy(1, 0.5, &mut y[..5]).is_err());
+            assert!(st.try_row_axpy_dot(1, 0.5, 2, &mut y).is_ok());
+            assert!(st.try_row_axpy_dot(1, 0.5, 9, &mut y).is_err(), "next OOB");
+            let mut out = vec![0.0; 4];
+            assert!(st.try_gemv_into(&x_good, &mut out).is_ok());
+            assert!(st.try_gemv_into(&x_short, &mut out).is_err());
+            assert!(st.try_gemv_into(&x_good, &mut out[..3]).is_err());
+            // The checked GEMV matches the unchecked kernel bitwise.
+            let mut reference = vec![0.0; 4];
+            RowStorage::gemv_block_into(&st, &x_good, &mut reference);
+            st.try_gemv_into(&x_good, &mut out).unwrap();
+            for (u, v) in out.iter().zip(&reference) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
     }
 
     #[test]

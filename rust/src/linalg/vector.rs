@@ -3,18 +3,38 @@
 //! Every Kaczmarz iteration is one `dot` (the residual of the sampled row)
 //! plus one `axpy` (the projection update), both over a contiguous row of
 //! length `n`. These two functions dominate the runtime of every solver in
-//! this crate, so they are written with 4-way unrolled accumulators that
-//! LLVM reliably turns into vectorized code (verified in the §Perf pass —
-//! see EXPERIMENTS.md).
+//! this crate. Each has two implementations: the portable 8-lane scalar
+//! kernels (`*_scalar` — the bitwise reference path, LLVM-autovectorized)
+//! and explicit AVX2+FMA kernels in [`super::simd`]. The undecorated names
+//! (`dot`, `axpy`, `axpy_dot`) dispatch between them once per call based
+//! on the process-wide [`super::simd::active_flavor`] probe.
+
+#[cfg(target_arch = "x86_64")]
+use super::simd;
 
 /// Dot product `<a, b>`.
 ///
-/// Eight-lane blocked accumulation over `chunks_exact(8)`: the fixed-size
-/// chunk pattern eliminates bounds checks and reliably auto-vectorizes
-/// (measured 6.4x over indexed 4-way unrolling in the §Perf pass — see
-/// EXPERIMENTS.md §Perf).
+/// Dispatches to the AVX2+FMA kernel when active (see
+/// [`simd::active_flavor`]), otherwise runs [`dot_scalar`].
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd::use_avx2() {
+        // Safety: `use_avx2` is true only when the host probe confirmed
+        // AVX2 and FMA support.
+        return unsafe { simd::avx::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Scalar reference dot product — eight-lane blocked accumulation over
+/// `chunks_exact(8)`: the fixed-size chunk pattern eliminates bounds
+/// checks and reliably auto-vectorizes (measured 6.4x over indexed 4-way
+/// unrolling in the §Perf pass — see EXPERIMENTS.md §Perf). This exact
+/// accumulator layout and reduction order is the crate's bitwise
+/// reproducibility contract.
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f64; 8];
     let ca = a.chunks_exact(8);
@@ -33,8 +53,24 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// `y += alpha * x` (the Kaczmarz projection update).
+///
+/// Dispatches to the AVX2+FMA kernel when active (see
+/// [`simd::active_flavor`]), otherwise runs [`axpy_scalar`].
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd::use_avx2() {
+        // Safety: `use_avx2` is true only when the host probe confirmed
+        // AVX2 and FMA support.
+        unsafe { simd::avx::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_scalar(alpha, x, y)
+}
+
+/// Scalar reference `y += alpha * x` — the bitwise reference path.
+#[inline]
+pub fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     // chunks_exact pairs: no bounds checks, clean vectorization.
     let cx = x.chunks_exact(8);
@@ -61,9 +97,24 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 /// each `v` cache line once per projection instead of twice). The lane
 /// structure mirrors [`dot`]/[`axpy`] exactly (same 8-wide accumulators,
 /// same tail, same final reduction order), so the result is bit-identical
-/// to `axpy(alpha, x, y); dot(z, y)`.
+/// to `axpy(alpha, x, y); dot(z, y)` — a contract both kernel flavors
+/// keep (each fused kernel mirrors its own flavor's `dot` accumulators),
+/// so the identity holds under either dispatch.
 #[inline]
 pub fn axpy_dot(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd::use_avx2() {
+        // Safety: `use_avx2` is true only when the host probe confirmed
+        // AVX2 and FMA support.
+        return unsafe { simd::avx::axpy_dot(alpha, x, z, y) };
+    }
+    axpy_dot_scalar(alpha, x, z, y)
+}
+
+/// Scalar reference fused kernel — the bitwise reference path; lane
+/// structure mirrors [`dot_scalar`]/[`axpy_scalar`] exactly.
+#[inline]
+pub fn axpy_dot_scalar(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(z.len(), y.len());
     let mut acc = [0.0f64; 8];

@@ -28,10 +28,28 @@
 //!                                residual channels); --watch streams the
 //!                                dual-channel curve line-by-line *while*
 //!                                the solve runs (live telemetry sink)
-//!   info                         version, core count, artifact status
+//!   tune [--rows m] [--cols n] [--q w] [--seed s] [--reps r] [--out file]
+//!                                probe this host: blocked-GEMV panel width
+//!                                (candidates {1024, 2048, 4096, 8192}) and
+//!                                the serving RKAB block size via the
+//!                                reference-free residual scorer
+//!                                (autotune_block_size_residual); persists
+//!                                the picks (default kaczmarz-tune.json)
+//!                                and applies them to this process
+//!   info                         version, kernel flavor (avx2+fma or
+//!                                scalar; KACZMARZ_KERNEL=scalar forces the
+//!                                bitwise reference path), gemv panel, core
+//!                                count, artifact status
+//!
+//! At startup every subcommand loads and applies a tune file when one is
+//! present: `$KACZMARZ_TUNE_FILE`, else `./kaczmarz-tune.json`. A tuned
+//! `rkab_block` also becomes the default `--bs` for `solve`.
 
 use kaczmarz::cli::Args;
-use kaczmarz::coordinator::{find, registry, Scale};
+use kaczmarz::coordinator::{
+    autotune_block_size_residual, autotune_gemv_panel, find, registry, AutotuneConfig, CostModel,
+    Scale, TunedParams,
+};
 use kaczmarz::data::DatasetBuilder;
 use kaczmarz::parallel::{AsyRkSolver, ParallelRka, ParallelRkab};
 use kaczmarz::runtime::{default_artifacts_dir, Manifest, PjrtRkabSolver};
@@ -45,15 +63,49 @@ use std::path::PathBuf;
 
 fn main() {
     let args = Args::from_env();
+    let tuned = load_tune_file();
     match args.command.as_str() {
         "list" => cmd_list(),
         "experiment" => cmd_experiment(&args),
         "all" => cmd_all(&args),
-        "solve" => cmd_solve(&args),
-        "info" | "" => cmd_info(),
+        "solve" => cmd_solve(&args, &tuned),
+        "tune" => cmd_tune(&args),
+        "info" | "" => cmd_info(&tuned),
         other => {
-            eprintln!("unknown command '{other}'; try: list, experiment, all, solve, info");
+            eprintln!("unknown command '{other}'; try: list, experiment, all, solve, tune, info");
             std::process::exit(2);
+        }
+    }
+}
+
+/// Load and apply the host tune file, if any: `$KACZMARZ_TUNE_FILE` wins,
+/// else `./kaczmarz-tune.json`. Applying pins the blocked-GEMV panel for
+/// this process; the returned params also feed `solve`'s `--bs` default.
+/// A missing file is normal (untuned host); an unreadable one is reported
+/// and ignored rather than aborting the command.
+fn load_tune_file() -> TunedParams {
+    let explicit = std::env::var("KACZMARZ_TUNE_FILE").ok();
+    let path = PathBuf::from(explicit.clone().unwrap_or_else(|| "kaczmarz-tune.json".into()));
+    if !path.exists() {
+        if explicit.is_some() {
+            eprintln!("tune file {} not found; running untuned", path.display());
+        }
+        return TunedParams::default();
+    }
+    match TunedParams::load(&path) {
+        Ok(t) => {
+            t.apply();
+            eprintln!(
+                "applied tune file {} (gemv_panel={:?}, rkab_block={:?})",
+                path.display(),
+                t.gemv_panel,
+                t.rkab_block
+            );
+            t
+        }
+        Err(e) => {
+            eprintln!("ignoring unreadable tune file {}: {e}", path.display());
+            TunedParams::default()
         }
     }
 }
@@ -130,7 +182,65 @@ fn print_result(name: &str, sys_err: f64, r: &SolveResult) {
     }
 }
 
-fn cmd_solve(args: &Args) {
+/// `kaczmarz tune`: probe this host's blocked-GEMV panel width and the
+/// serving RKAB block size, persist both, and apply them immediately.
+fn cmd_tune(args: &Args) {
+    let rows = args.get_parse("rows", 2000usize);
+    let cols = args.get_parse("cols", 200usize);
+    let q = args.get_parse("q", 4usize);
+    let seed = args.get_parse("seed", 1u32);
+    let reps = args.get_parse("reps", 5usize);
+    let out = PathBuf::from(args.get("out", "kaczmarz-tune.json"));
+
+    // Panel probe: a short, *wide* dense matrix (cols span many panels)
+    // so the candidate widths actually change the x-panel residency the
+    // blocking exists for. Fixed shape — the probe measures the host, not
+    // the workload.
+    let (panel_rows, panel_cols) = (256usize, 16384usize);
+    eprintln!("probing gemv panel widths on a {panel_rows} x {panel_cols} dense system...");
+    let probe_sys = DatasetBuilder::new(panel_rows, panel_cols).seed(seed).consistent();
+    let a = probe_sys.a.as_dense().expect("generated systems are dense");
+    let (best_panel, panel_probes) = autotune_gemv_panel(a, reps);
+    println!("{:>8} {:>12}", "panel", "seconds");
+    for p in &panel_probes {
+        let mark = if p.panel == best_panel { "  <-- best" } else { "" };
+        println!("{:>8} {:>12.6}{mark}", p.panel, p.seconds);
+    }
+
+    // Serving block-size probe: the reference-free residual scorer on a
+    // solve-shaped system (same default shape as `solve`).
+    eprintln!("probing rkab block sizes on a {rows} x {cols} system (q={q})...");
+    let sys = DatasetBuilder::new(rows, cols).seed(seed).consistent();
+    let model = CostModel::calibrate(&sys);
+    let (best_bs, bs_probes) = match autotune_block_size_residual(&sys, &model, &AutotuneConfig::new(q))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("block-size probe failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("{:>8} {:>12} {:>14}", "bs", "iterations", "score");
+    for p in &bs_probes {
+        let mark = if p.block_size == best_bs { "  <-- best" } else { "" };
+        println!("{:>8} {:>12} {:>14.6e}{mark}", p.block_size, p.iterations, p.score);
+    }
+
+    let tuned = TunedParams { gemv_panel: Some(best_panel), rkab_block: Some(best_bs) };
+    tuned.apply();
+    match tuned.save(&out) {
+        Ok(()) => println!(
+            "tuned: gemv_panel={best_panel} rkab_block={best_bs} -> {}",
+            out.display()
+        ),
+        Err(e) => {
+            eprintln!("failed to write {}: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_solve(args: &Args, tuned: &TunedParams) {
     let q = args.get_parse("q", 4usize);
     let alpha = args.get_parse("alpha", 1.0f64);
     let seed = args.get_parse("seed", 1u32);
@@ -215,9 +325,11 @@ fn cmd_solve(args: &Args) {
             }
         }
     };
-    // Defaults that depend on the system shape come after it exists.
+    // Defaults that depend on the system shape come after it exists. A
+    // host tune file's rkab_block takes over the --bs default (an explicit
+    // --bs always wins).
     let n = sys.cols();
-    let bs = args.get_parse("bs", n);
+    let bs = args.get_parse("bs", tuned.rkab_block.unwrap_or(n));
 
     // --residual stops on ‖Ax - b‖² (the reference-free serving criterion,
     // checked every --check-every iterations); default is the paper's
@@ -300,11 +412,23 @@ fn cmd_solve(args: &Args) {
     print_result(&method, sys.error_sq(&r.x), &r);
 }
 
-fn cmd_info() {
+fn cmd_info(tuned: &TunedParams) {
     println!("kaczmarz {} — parallel Randomized Kaczmarz reproduction", kaczmarz::version());
     println!(
         "cores: {}",
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(0)
+    );
+    // Kernel dispatch: what this host supports vs what this process runs
+    // (KACZMARZ_KERNEL=scalar forces the bitwise reference path).
+    println!(
+        "kernels: {} (host supports {})",
+        kaczmarz::linalg::active_flavor().name(),
+        kaczmarz::linalg::detected_flavor().name()
+    );
+    println!(
+        "gemv panel: {}{}",
+        kaczmarz::linalg::gemv_panel(),
+        if tuned.gemv_panel.is_some() { " (tuned)" } else { "" }
     );
     let dir = default_artifacts_dir();
     match Manifest::load(&dir) {

@@ -1,0 +1,186 @@
+//! Pool-parallel residual GEMV.
+//!
+//! Residual stopping and `ProgressSink` telemetry both reduce to one
+//! `y = A x` over the full system per checkpoint. At the paper's target
+//! scale (100k x 10k dense) that is ~8 GB of row traffic per check —
+//! serial, it dwarfs the amortized cost the checkpoint schedule was
+//! designed to hide. This module splits the *row range* across the
+//! persistent [`WorkerPool`] instead:
+//!
+//! - each participant computes a contiguous row chunk
+//!   `[⌊t·m/q⌋, ⌊(t+1)·m/q⌋)` (the same partition formula the
+//!   distributed samplers use) into its disjoint slice of `y`;
+//! - within a chunk the dense kernel walks column panels in the exact
+//!   panel-major order of the serial blocked GEMV, so every output
+//!   element accumulates its partial dots in the same order as the
+//!   serial kernel — the parallel result is *bitwise identical*,
+//!   element for element, regardless of `q`;
+//! - the auto entry point [`residual_gemv_into`] only goes parallel when
+//!   it is safe and worth it: never from inside an existing pool
+//!   dispatch (a `StopCheck` fired by a shared-memory engine's
+//!   participant 0 falls back to the serial kernel — see
+//!   [`pool::in_dispatch`]), and never below
+//!   [`PARALLEL_GEMV_MIN_ELEMS`], where dispatch overhead beats the
+//!   memory-bandwidth win.
+
+use super::pool::{self, WorkerPool};
+use crate::linalg::gemv::{gemv_block_rows_with_panel, gemv_panel};
+use crate::linalg::{RowStorage, Storage};
+
+/// Smallest `rows * cols` for which [`residual_gemv_into`] dispatches to
+/// the pool: 2²¹ f64 elements (16 MiB of matrix) — below that the serial
+/// blocked kernel finishes before a dispatch epoch settles.
+pub const PARALLEL_GEMV_MIN_ELEMS: usize = 1 << 21;
+
+/// `y = A x` for residual checks: pool-parallel across rows when safe and
+/// large enough, otherwise the serial blocked kernel. The result is
+/// bitwise identical to [`RowStorage::gemv_block_into`] either way.
+///
+/// Dispatches on the process-wide [`pool::global`] pool with one
+/// participant per hardware thread, clamped to the row count.
+pub fn residual_gemv_into(a: &Storage, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.cols());
+    debug_assert_eq!(y.len(), a.rows());
+    let elems = a.rows().saturating_mul(a.cols());
+    let q = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(a.rows());
+    if q < 2 || elems < PARALLEL_GEMV_MIN_ELEMS || pool::in_dispatch() {
+        a.gemv_block_into(x, y);
+        return;
+    }
+    residual_gemv_into_with(a, x, y, pool::global(), q);
+}
+
+/// Explicit-pool flavor of [`residual_gemv_into`] (tests and callers that
+/// own a dedicated pool). `q` participants, clamped to `[1, rows]`;
+/// `q <= 1` runs the serial kernel. Must not be called from inside a
+/// dispatch on `pool` (the nested-dispatch fail-fast in
+/// [`WorkerPool::run`] applies).
+pub fn residual_gemv_into_with(
+    a: &Storage,
+    x: &[f64],
+    y: &mut [f64],
+    pool: &WorkerPool,
+    q: usize,
+) {
+    debug_assert_eq!(x.len(), a.cols());
+    debug_assert_eq!(y.len(), a.rows());
+    let m = a.rows();
+    let q = q.clamp(1, m.max(1));
+    if q < 2 {
+        a.gemv_block_into(x, y);
+        return;
+    }
+    let panel = gemv_panel();
+    // Participants write disjoint row ranges of `y` through a raw base
+    // pointer: the usual scoped-region pattern this crate's shared-memory
+    // engines use, with the disjointness protocol spelled out below.
+    let base = SendPtr(y.as_mut_ptr());
+    pool.run(q, |t| {
+        // The same ⌊t·m/q⌋ contiguous partition as `row_partition`:
+        // chunks tile [0, m) exactly, so no two participants overlap.
+        let lo = t * m / q;
+        let hi = (t + 1) * m / q;
+        if lo == hi {
+            return;
+        }
+        // SAFETY: `y` outlives the dispatch (`run` blocks until every
+        // participant finishes), and `[lo, hi)` ranges are pairwise
+        // disjoint across participants, so each reconstructed slice is
+        // the only live mutable view of those elements.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        match a {
+            Storage::Dense(mat) => gemv_block_rows_with_panel(mat, x, chunk, lo, panel),
+            Storage::Csr(mat) => {
+                for (k, yi) in chunk.iter_mut().enumerate() {
+                    *yi = RowStorage::row_dot(mat, lo + k, x);
+                }
+            }
+        }
+    });
+}
+
+/// Raw `*mut f64` made shareable across the dispatch (see the SAFETY
+/// protocol at the use site).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+
+// SAFETY: the pointer is only dereferenced through disjoint per-participant
+// ranges while the owning slice is pinned by the blocking dispatch.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CsrMatrix, Matrix};
+
+    fn dense(m: usize, n: usize) -> Matrix {
+        Matrix::from_vec(m, n, (0..m * n).map(|i| ((i * 31 % 23) as f64 - 11.0) * 0.13).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn parallel_residual_gemv_is_bitwise_serial_dense() {
+        let pool = WorkerPool::new();
+        let a = Storage::from(dense(37, 19));
+        let x: Vec<f64> = (0..19).map(|i| (i as f64 * 0.41).sin()).collect();
+        let mut serial = vec![0.0; 37];
+        a.gemv_block_into(&x, &mut serial);
+        for q in [1usize, 2, 3, 5, 8, 37, 50] {
+            let mut par = vec![f64::NAN; 37];
+            residual_gemv_into_with(&a, &x, &mut par, &pool, q);
+            for (i, (u, v)) in par.iter().zip(&serial).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "q={q} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_residual_gemv_is_bitwise_serial_csr() {
+        let pool = WorkerPool::new();
+        let a = Storage::from(CsrMatrix::from_dense(&dense(24, 11)));
+        let x: Vec<f64> = (0..11).map(|i| (i as f64 * 0.29).cos()).collect();
+        let mut serial = vec![0.0; 24];
+        a.gemv_block_into(&x, &mut serial);
+        for q in [2usize, 4, 7, 24] {
+            let mut par = vec![f64::NAN; 24];
+            residual_gemv_into_with(&a, &x, &mut par, &pool, q);
+            for (i, (u, v)) in par.iter().zip(&serial).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "q={q} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_entry_is_safe_inside_a_dispatch() {
+        // A StopCheck fired from participant 0 of a shared-memory engine
+        // runs exactly this shape: residual_gemv_into from inside a pool
+        // region. It must detect the dispatch and fall back serial
+        // instead of tripping the nested-dispatch fail-fast.
+        let pool = WorkerPool::new();
+        let a = Storage::from(dense(16, 8));
+        let x = vec![0.5; 8];
+        let mut serial = vec![0.0; 16];
+        a.gemv_block_into(&x, &mut serial);
+        let out = std::sync::Mutex::new(vec![0.0; 16]);
+        pool.run(3, |t| {
+            if t == 0 {
+                let mut y = vec![0.0; 16];
+                residual_gemv_into(&a, &x, &mut y);
+                *out.lock().unwrap() = y;
+            }
+        });
+        assert_eq!(*out.lock().unwrap(), serial);
+    }
+
+    #[test]
+    fn auto_entry_matches_serial_below_threshold() {
+        let a = Storage::from(dense(10, 6));
+        let x = vec![1.0; 6];
+        let mut serial = vec![0.0; 10];
+        a.gemv_block_into(&x, &mut serial);
+        let mut auto = vec![f64::NAN; 10];
+        residual_gemv_into(&a, &x, &mut auto);
+        assert_eq!(auto, serial);
+    }
+}

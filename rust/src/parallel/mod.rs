@@ -18,11 +18,14 @@
 //! - [`block_seq`] — §3.2, the block-sequential attempt that parallelizes
 //!   the dot product and solution update *inside* each RK iteration;
 //! - [`asyrk`] — the HOGWILD!-style lock-free AsyRK baseline (§2.3.3);
+//! - [`gemv`] — the pool-parallel residual GEMV behind large-system
+//!   stopping/telemetry checks (bitwise-identical row-range split);
 //! - [`shared`] — the unsafe-but-disciplined shared buffers and the spin
 //!   barrier the engine is built on.
 
 pub mod asyrk;
 pub mod block_seq;
+pub mod gemv;
 pub mod pool;
 pub mod rka_shared;
 pub mod rkab_shared;
@@ -30,6 +33,7 @@ pub mod shared;
 
 pub use asyrk::AsyRkSolver;
 pub use block_seq::BlockSequentialRk;
+pub use gemv::{residual_gemv_into, residual_gemv_into_with};
 pub use pool::WorkerPool;
 pub use rka_shared::{AveragingStrategy, ParallelRka};
 pub use rkab_shared::ParallelRkab;

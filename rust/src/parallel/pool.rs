@@ -80,6 +80,19 @@ thread_local! {
     static DISPATCHING_POOL: Cell<usize> = Cell::new(0);
 }
 
+/// Is the current thread executing inside a [`WorkerPool`] dispatch (as
+/// any participant of any pool)?
+///
+/// Opportunistically-parallel helpers use this to fall back to their
+/// serial path instead of attempting a nested `run` on a pool that may be
+/// the one currently dispatching (which would fail fast) — e.g. the
+/// pool-parallel residual GEMV (`parallel::gemv`) called from a
+/// `StopCheck` inside a shared-memory engine's region.
+#[inline]
+pub fn in_dispatch() -> bool {
+    DISPATCHING_POOL.with(|c| c.get()) != 0
+}
+
 /// Run `body` with this thread marked as executing a job of pool `id`,
 /// restoring the previous mark afterwards. `body` must not unwind — both
 /// call sites pass a `catch_unwind` wrapper, so the restore always runs.

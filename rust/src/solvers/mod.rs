@@ -29,9 +29,9 @@ pub use sampling::{
 };
 
 use crate::data::LinearSystem;
-use crate::linalg::gemv_block_into;
 use crate::linalg::vector::dist_sq;
 use crate::metrics::{History, ProgressSink, Sample};
+use crate::parallel::residual_gemv_into;
 
 /// What quantity the convergence test measures, and against what bound.
 ///
@@ -53,7 +53,9 @@ pub enum StoppingCriterion {
     },
     /// Stop when `‖A x^(k) - b‖² < tolerance` — computable for any system,
     /// no reference needed. The test costs a full `O(m·n)` mat-vec (run
-    /// through [`gemv_block_into`]), so it is evaluated only every
+    /// through [`gemv_block_into`](crate::linalg::gemv_block_into), or its
+    /// pool-parallel twin [`residual_gemv_into`] on large systems), so it
+    /// is evaluated only every
     /// `check_every` iterations to stay off the hot path; on a consistent
     /// system any positive tolerance is achievable, on an inconsistent one
     /// only tolerances above the least-squares floor `‖A x_LS - b‖²` are.
@@ -95,7 +97,8 @@ pub struct SolveOptions {
     /// Record a convergence-history sample every `history_step` iterations
     /// (0 = off). Recording is **dual-channel and reference-optional**: the
     /// residual channel `‖Ax - b‖` is always recorded (one amortized
-    /// [`gemv_block_into`] per sample), the reference-error channel
+    /// [`gemv_block_into`](crate::linalg::gemv_block_into) per sample), the
+    /// reference-error channel
     /// `‖x - x_ref‖` only when the system actually carries a reference —
     /// so reference-free serving jobs can request convergence curves too
     /// (see [`crate::metrics::History`]).
@@ -246,14 +249,14 @@ pub trait Solver {
 ///   never touch the reference solution at all. This is what lets the batch
 ///   layer run reference-free jobs without patching in a dummy `x_ref`;
 /// - the **residual scratch** — residual stopping *and* history recording
-///   need `A x` (length `m`), computed through [`gemv_block_into`] into a
+///   need `A x` (length `m`), computed through [`residual_gemv_into`] into a
 ///   buffer allocated once per solve, never per check;
 /// - the **history recorder** — [`StopCheck::check`] records a
 ///   [`History`] sample whenever iteration `k` is due, so the eleven solve
 ///   loops share one recording implementation instead of open-coding it.
 ///   Recording is dual-channel: the residual channel always, the
 ///   reference-error channel only when the system carries a reference —
-///   a reference-free history costs one amortized `gemv_block_into` per
+///   a reference-free history costs one amortized residual GEMV per
 ///   sample instead of an `error_sq` panic;
 /// - the **telemetry stream** — when the options carry a
 ///   [`ProgressSink`], every checkpoint that computes the residual anyway
@@ -333,9 +336,15 @@ impl<'a> StopCheck<'a> {
     }
 
     /// `‖Ax - b‖²` through the blocked GEMV and the per-solve scratch.
+    ///
+    /// Large systems split the GEMV's row range across the worker pool
+    /// ([`residual_gemv_into`] — bitwise identical to the serial blocked
+    /// kernel, and automatically serial when this check fires from inside
+    /// an engine's own pool dispatch), so residual stopping and telemetry
+    /// stay cheap at 100k x 10k scale.
     fn residual_sq(&mut self, x: &[f64]) -> f64 {
         debug_assert_eq!(self.ax.len(), self.system.rows(), "residual scratch not allocated");
-        gemv_block_into(&self.system.a, x, &mut self.ax);
+        residual_gemv_into(&self.system.a, x, &mut self.ax);
         dist_sq(&self.ax, &self.system.b)
     }
 

@@ -71,37 +71,60 @@ pub fn require_randomized(engine: &str, strategy: SamplingStrategy) -> Result<()
 pub struct GreedySelector {
     ax: Vec<f64>,
     chosen: Vec<usize>,
+    seen: Vec<bool>,
 }
 
 impl GreedySelector {
     /// Selector for `system` (allocates the length-`m` scan scratch).
     pub fn new(system: &LinearSystem) -> Self {
-        GreedySelector { ax: vec![0.0; system.rows()], chosen: Vec::new() }
+        GreedySelector {
+            ax: vec![0.0; system.rows()],
+            chosen: Vec::new(),
+            seen: vec![false; system.rows()],
+        }
     }
 
     /// The `k` distinct rows with the largest squared hyperplane distances
     /// at `x`, in non-increasing distance order (`k` is clamped to the row
     /// count; ties break toward the lower index).
     ///
+    /// The argmax uses `total_cmp` (the crate's NaN-safe argmax
+    /// convention, as in the autotune scorers and `History` scans): a NaN
+    /// distance — a diverging iterate, or `0/0` on a zero row — is
+    /// ordered deterministically instead of poisoning every comparison,
+    /// so even an all-NaN scan selects a valid row (the lowest unchosen
+    /// index) rather than fabricating an out-of-range one. Distances are
+    /// `>= +0.0`, so the finite-case pick order is identical to the
+    /// plain `>` argmax this replaces. Already-chosen rows are skipped
+    /// via a reusable bitmap, so selecting `k` rows costs `O(k·m)`, not
+    /// the `O(k²·m)` of rescanning the chosen list per candidate.
+    ///
     /// The returned slice is valid until the next `select` call.
     pub fn select(&mut self, system: &LinearSystem, x: &[f64], k: usize) -> &[usize] {
         gemv_block_into(&system.a, x, &mut self.ax);
         let m = system.rows();
         self.chosen.clear();
+        self.seen.clear();
+        self.seen.resize(m, false);
         for _ in 0..k.min(m) {
             let mut best = usize::MAX;
             let mut best_d = f64::NEG_INFINITY;
             for i in 0..m {
-                if self.chosen.contains(&i) {
+                if self.seen[i] {
                     continue;
                 }
                 let r = system.b[i] - self.ax[i];
                 let d = r * r / system.row_norms_sq[i];
-                if d > best_d {
+                // The first unseen row always seeds the argmax, so `best`
+                // is a valid index by the end of the scan no matter what
+                // the distances are.
+                if best == usize::MAX || d.total_cmp(&best_d) == std::cmp::Ordering::Greater {
                     best_d = d;
                     best = i;
                 }
             }
+            debug_assert!(best < m);
+            self.seen[best] = true;
             self.chosen.push(best);
         }
         &self.chosen
@@ -250,6 +273,34 @@ mod tests {
         // Distances must be reportable and non-increasing along the pick.
         let d: Vec<f64> = chosen.iter().map(|&i| g.last_distance_sq(&sys, i)).collect();
         assert!(d[0] >= d[1] && d[1] >= d[2]);
+    }
+
+    #[test]
+    fn greedy_selector_survives_nan_iterate() {
+        // Regression: a diverging iterate (e.g. an asyrk overshoot feeding
+        // a later sequential greedy solve) makes every hyperplane distance
+        // NaN. The old `d > best_d` argmax never fired on NaN and pushed
+        // its usize::MAX sentinel as a row index — an out-of-bounds panic
+        // deep inside the solve loop. The total_cmp argmax must keep
+        // returning valid, distinct rows.
+        let sys = DatasetBuilder::new(12, 4).seed(3).consistent();
+        let x_nan = vec![f64::NAN; 4];
+        let mut g = GreedySelector::new(&sys);
+        let chosen: Vec<usize> = g.select(&sys, &x_nan, 5).to_vec();
+        assert_eq!(chosen.len(), 5);
+        let mut sorted = chosen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5, "rows must be distinct: {chosen:?}");
+        assert!(chosen.iter().all(|&i| i < 12), "all indices in range: {chosen:?}");
+        // All-NaN ties break toward the lowest unchosen index, so the
+        // pick order is fully deterministic.
+        assert_eq!(chosen, vec![0, 1, 2, 3, 4]);
+        // The selector must remain usable after the poisoned scan: a
+        // healthy iterate on the same selector picks finite rows again.
+        let healthy: Vec<usize> = g.select(&sys, &[0.0; 4], 2).to_vec();
+        assert_eq!(healthy.len(), 2);
+        assert!(g.last_distance_sq(&sys, healthy[0]).is_finite());
     }
 
     #[test]

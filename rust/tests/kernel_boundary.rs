@@ -1,0 +1,74 @@
+//! The checked kernel boundary must hold in **release** builds.
+//!
+//! The hot-path kernels (`dot`/`axpy`/`axpy_dot`, the `row_*` trait
+//! methods) guard shape mismatches only with `debug_assert_eq!` — in a
+//! release build a mismatched caller silently computes over the common
+//! prefix. The `Storage::try_*` entry points are the supported boundary
+//! for external callers: they validate shapes with real branches and
+//! return a typed [`Error::InvalidArgument`]. Integration tests compile
+//! the library crate *without* `cfg(test)` and CI runs this suite in the
+//! `test-release` lane, so these assertions exercise exactly the
+//! configuration the `debug_assert`s vanish from.
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::error::Error;
+use kaczmarz::linalg::{CsrMatrix, RowStorage, Storage};
+
+fn backends() -> Vec<Storage> {
+    let sys = DatasetBuilder::new(6, 4).seed(11).consistent();
+    let dense = sys.a.as_dense().expect("generated systems are dense").clone();
+    let sparse = CsrMatrix::from_dense(&dense);
+    vec![Storage::from(dense), Storage::from(sparse)]
+}
+
+#[test]
+fn boundary_rejects_short_x_in_release() {
+    for st in backends() {
+        let x_short = vec![1.0; 3]; // cols is 4
+        let err = st.try_row_dot(0, &x_short).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+
+        let mut y_short = vec![0.0; 3];
+        let err = st.try_row_axpy(0, 2.0, &mut y_short).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+
+        let err = st.try_row_axpy_dot(0, 2.0, 1, &mut y_short).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+
+        let mut y_rows = vec![0.0; 6];
+        let err = st.try_gemv_into(&x_short, &mut y_rows).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+    }
+}
+
+#[test]
+fn boundary_rejects_out_of_range_rows_in_release() {
+    for st in backends() {
+        let x = vec![1.0; 4];
+        assert!(matches!(st.try_row_dot(6, &x), Err(Error::InvalidArgument(_))));
+        let mut y = vec![0.0; 4];
+        assert!(matches!(st.try_row_axpy(17, 1.0, &mut y), Err(Error::InvalidArgument(_))));
+        // The fused kernel validates the prefetched *next* index too.
+        assert!(matches!(
+            st.try_row_axpy_dot(0, 1.0, 6, &mut y),
+            Err(Error::InvalidArgument(_))
+        ));
+    }
+}
+
+#[test]
+fn boundary_accepts_and_matches_unchecked_kernels() {
+    for st in backends() {
+        let x: Vec<f64> = (0..4).map(|i| (i as f64 * 0.6).sin()).collect();
+        let checked = st.try_row_dot(2, &x).unwrap();
+        assert_eq!(checked.to_bits(), st.row_dot(2, &x).to_bits());
+
+        let mut y = vec![0.0; 6];
+        st.try_gemv_into(&x, &mut y).unwrap();
+        let mut reference = vec![0.0; 6];
+        RowStorage::gemv_block_into(&st, &x, &mut reference);
+        for (u, v) in y.iter().zip(&reference) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! SIMD-vs-scalar kernel equivalence properties.
+//!
+//! The scalar 8-lane kernels are the crate's bitwise reference path; the
+//! AVX2+FMA kernels in `linalg::simd` may legally differ in the last ulps
+//! (FMA contracts `a*b + c` into one rounding), so cross-flavor agreement
+//! is asserted to a *relative tolerance*, never `to_bits`. Within a
+//! flavor, the fused `axpy_dot` must stay bitwise-equal to its separate
+//! `axpy` + `dot` pair — that contract is checked for both flavors here.
+//!
+//! The explicit `*_avx2` wrappers run whenever the *host* supports the
+//! features, independent of the process-wide dispatch, which is what lets
+//! one test process compare both flavors side by side. Hosts without
+//! AVX2+FMA run the scalar assertions only (the wrappers return
+//! `None`/`false`), so the suite passes everywhere.
+
+use kaczmarz::linalg::simd::{axpy_avx2, axpy_dot_avx2, dot_avx2};
+use kaczmarz::linalg::{
+    active_flavor, axpy, axpy_dot, axpy_dot_scalar, axpy_scalar, detected_flavor, dot, dot_scalar,
+    KernelFlavor,
+};
+
+/// Relative-error gate for cross-flavor comparisons. FMA reassociation
+/// over a few hundred elements stays far inside 1e-12 for the
+/// well-conditioned inputs used here.
+const REL_TOL: f64 = 1e-12;
+
+fn rel_err(got: f64, reference: f64) -> f64 {
+    (got - reference).abs() / reference.abs().max(1e-30)
+}
+
+/// Deterministic, sign-mixed test vectors of length `n`.
+fn vectors(n: usize, phase: f64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let a = (0..n).map(|i| (i as f64 * 0.7 + phase).sin() * 1.5).collect();
+    let b = (0..n).map(|i| (i as f64 * 0.3 - phase).cos() * 0.8).collect();
+    let c = (0..n).map(|i| ((i % 13) as f64 - 6.0) * 0.21 + phase).collect();
+    (a, b, c)
+}
+
+#[test]
+fn simd_matches_scalar_across_all_remainder_lengths() {
+    // Every tail length `n mod 8` in {0..7}, at several multiples of the
+    // 8-lane trip, plus the empty slice.
+    for base in [0usize, 8, 16, 64, 248] {
+        for rem in 0..8usize {
+            let n = base + rem;
+            let (a, b, z) = vectors(n, 0.37);
+            let reference = dot_scalar(&a, &b);
+            if let Some(d) = dot_avx2(&a, &b) {
+                assert!(
+                    rel_err(d, reference) < REL_TOL || (n == 0 && d == reference),
+                    "dot n={n}: simd {d:e} vs scalar {reference:e}"
+                );
+            }
+
+            let mut y_scalar: Vec<f64> = b.clone();
+            axpy_scalar(0.73, &a, &mut y_scalar);
+            let mut y_simd: Vec<f64> = b.clone();
+            if axpy_avx2(0.73, &a, &mut y_simd) {
+                for (i, (u, v)) in y_simd.iter().zip(&y_scalar).enumerate() {
+                    assert!(rel_err(*u, *v) < REL_TOL, "axpy n={n} elem {i}: {u:e} vs {v:e}");
+                }
+            }
+
+            let mut y_scalar: Vec<f64> = b.clone();
+            let d_scalar = axpy_dot_scalar(0.73, &a, &z, &mut y_scalar);
+            let mut y_simd: Vec<f64> = b.clone();
+            if let Some(d_simd) = axpy_dot_avx2(0.73, &a, &z, &mut y_simd) {
+                assert!(
+                    rel_err(d_simd, d_scalar) < REL_TOL || n == 0,
+                    "axpy_dot n={n}: simd {d_simd:e} vs scalar {d_scalar:e}"
+                );
+                for (i, (u, v)) in y_simd.iter().zip(&y_scalar).enumerate() {
+                    assert!(rel_err(*u, *v) < REL_TOL, "axpy_dot y n={n} elem {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_kernel_is_bitwise_separate_within_each_flavor() {
+    // The fused/separate identity is a *within-flavor* bitwise contract:
+    // each flavor's axpy_dot mirrors its own dot's accumulator layout.
+    let n = 67; // 8 full trips + a 3-element tail
+    let (a, b, z) = vectors(n, 1.13);
+
+    let mut y_sep = b.clone();
+    axpy_scalar(0.41, &a, &mut y_sep);
+    let d_sep = dot_scalar(&z, &y_sep);
+    let mut y_fused = b.clone();
+    let d_fused = axpy_dot_scalar(0.41, &a, &z, &mut y_fused);
+    assert_eq!(d_fused.to_bits(), d_sep.to_bits(), "scalar fused dot");
+    for (u, v) in y_fused.iter().zip(&y_sep) {
+        assert_eq!(u.to_bits(), v.to_bits(), "scalar fused y");
+    }
+
+    let mut y_sep = b.clone();
+    if axpy_avx2(0.41, &a, &mut y_sep) {
+        let d_sep = dot_avx2(&z, &y_sep).unwrap();
+        let mut y_fused = b.clone();
+        let d_fused = axpy_dot_avx2(0.41, &a, &z, &mut y_fused).unwrap();
+        assert_eq!(d_fused.to_bits(), d_sep.to_bits(), "simd fused dot");
+        for (u, v) in y_fused.iter().zip(&y_sep) {
+            assert_eq!(u.to_bits(), v.to_bits(), "simd fused y");
+        }
+    }
+}
+
+#[test]
+fn simd_handles_subnormal_inputs() {
+    // Subnormal elements mixed into otherwise-normal vectors: FMA keeps
+    // the full a*b product where the scalar path may flush the
+    // intermediate to a subnormal/zero, so agreement here is the
+    // tolerance gate working exactly as specified (the normal elements
+    // dominate the accumulators).
+    let n = 37;
+    let (mut a, mut b, z) = vectors(n, 2.71);
+    a[3] = 5e-324; // smallest positive subnormal
+    a[11] = -1e-310;
+    a[20] = f64::MIN_POSITIVE / 4.0;
+    b[3] = 1e-310;
+    b[11] = 4.9e-324;
+    let reference = dot_scalar(&a, &b);
+    assert!(reference.is_finite());
+    if let Some(d) = dot_avx2(&a, &b) {
+        assert!(rel_err(d, reference) < REL_TOL, "subnormal dot: {d:e} vs {reference:e}");
+    }
+    let mut y_scalar = b.clone();
+    let d_scalar = axpy_dot_scalar(1e-320, &a, &z, &mut y_scalar);
+    let mut y_simd = b.clone();
+    if let Some(d_simd) = axpy_dot_avx2(1e-320, &a, &z, &mut y_simd) {
+        assert!(rel_err(d_simd, d_scalar) < REL_TOL);
+        for (u, v) in y_simd.iter().zip(&y_scalar) {
+            assert!(rel_err(*u, *v) < REL_TOL);
+        }
+    }
+}
+
+#[test]
+fn dispatched_kernels_are_bitwise_one_of_the_flavors() {
+    // Smoke test for the dispatch layer itself: whatever active_flavor()
+    // resolved to, the undecorated entry points must produce bitwise the
+    // output of that flavor's explicit kernel — dispatch adds a branch,
+    // never a numeric change.
+    let n = 129;
+    let (a, b, z) = vectors(n, 0.05);
+    let disp_dot = dot(&a, &b);
+    let mut disp_y = b.clone();
+    axpy(0.29, &a, &mut disp_y);
+    let mut disp_yf = b.clone();
+    let disp_fused = axpy_dot(0.29, &a, &z, &mut disp_yf);
+    match active_flavor() {
+        KernelFlavor::Scalar => {
+            assert_eq!(disp_dot.to_bits(), dot_scalar(&a, &b).to_bits());
+            let mut y = b.clone();
+            axpy_scalar(0.29, &a, &mut y);
+            assert_eq!(disp_y, y);
+            let mut yf = b.clone();
+            let f = axpy_dot_scalar(0.29, &a, &z, &mut yf);
+            assert_eq!(disp_fused.to_bits(), f.to_bits());
+            assert_eq!(disp_yf, yf);
+        }
+        KernelFlavor::Avx2Fma => {
+            assert_eq!(detected_flavor(), KernelFlavor::Avx2Fma, "dispatch must be clamped");
+            assert_eq!(disp_dot.to_bits(), dot_avx2(&a, &b).unwrap().to_bits());
+            let mut y = b.clone();
+            assert!(axpy_avx2(0.29, &a, &mut y));
+            assert_eq!(disp_y, y);
+            let mut yf = b.clone();
+            let f = axpy_dot_avx2(0.29, &a, &z, &mut yf).unwrap();
+            assert_eq!(disp_fused.to_bits(), f.to_bits());
+            assert_eq!(disp_yf, yf);
+        }
+    }
+}
+
+/// The forced-`scalar` override, proven end to end in a child process
+/// (dispatch is pinned per process by a `OnceLock`, so the override can
+/// only be observed from a process that starts with it).
+///
+/// The parent re-execs this same test binary filtered to this one test,
+/// with `KACZMARZ_KERNEL=scalar` (env route) and then with
+/// `KACZMARZ_SIMD_CHILD=force` (programmatic `force_flavor` route); each
+/// child asserts the dispatched kernels are bitwise the scalar reference.
+#[test]
+fn forced_scalar_override_dispatches_scalar_kernels() {
+    match std::env::var("KACZMARZ_SIMD_CHILD").as_deref() {
+        Ok("env") => {
+            // Parent set KACZMARZ_KERNEL=scalar for this process.
+            assert_eq!(active_flavor(), KernelFlavor::Scalar, "env override ignored");
+            assert_dispatch_is_scalar_bitwise();
+            return;
+        }
+        Ok("force") => {
+            // No env override: pin programmatically before first use.
+            assert!(
+                kaczmarz::linalg::force_flavor(KernelFlavor::Scalar),
+                "force_flavor(Scalar) must win in a fresh process"
+            );
+            assert_eq!(active_flavor(), KernelFlavor::Scalar);
+            assert_dispatch_is_scalar_bitwise();
+            return;
+        }
+        _ => {}
+    }
+    let exe = std::env::current_exe().expect("test binary path");
+    for (child_mode, kernel_env) in [("env", Some("scalar")), ("force", None)] {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("forced_scalar_override_dispatches_scalar_kernels")
+            .arg("--exact")
+            .env("KACZMARZ_SIMD_CHILD", child_mode);
+        match kernel_env {
+            Some(v) => cmd.env("KACZMARZ_KERNEL", v),
+            None => cmd.env_remove("KACZMARZ_KERNEL"),
+        };
+        let out = cmd.output().expect("spawn forced-scalar child");
+        assert!(
+            out.status.success(),
+            "forced-scalar child ({child_mode}) failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+/// Shared body for the forced-scalar children: every dispatched kernel
+/// must be bitwise the scalar reference.
+fn assert_dispatch_is_scalar_bitwise() {
+    let (a, b, z) = vectors(53, 0.9);
+    assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
+    let mut y_disp = b.clone();
+    axpy(0.61, &a, &mut y_disp);
+    let mut y_ref = b.clone();
+    axpy_scalar(0.61, &a, &mut y_ref);
+    assert_eq!(y_disp, y_ref);
+    let mut yf_disp = b.clone();
+    let d_disp = axpy_dot(0.61, &a, &z, &mut yf_disp);
+    let mut yf_ref = b;
+    let d_ref = axpy_dot_scalar(0.61, &a, &z, &mut yf_ref);
+    assert_eq!(d_disp.to_bits(), d_ref.to_bits());
+    assert_eq!(yf_disp, yf_ref);
+}

@@ -11,9 +11,18 @@ teeth:
   — CI runners wobble hugely on micro timings) are printed as warnings
   so a human can spot a real regression in the job log, but they never
   fail the job.
-- **Equivalence flags** (the bitwise-exactness checks) gate hard: a
-  check that passes in the baseline and fails — or disappears — in the
-  fresh run exits nonzero. These are deterministic claims, not timings.
+- **Equivalence flags** (the bitwise-exactness checks, plus the
+  tolerance-gated simd-vs-scalar kernel flags) gate hard: a check that
+  passes in the baseline and fails — or disappears — in the fresh run
+  exits nonzero. These are deterministic claims, not timings.
+
+Every run is stamped with the kernel flavor that produced it: the
+top-level "kernel" field records what the dispatched (untagged) rows ran
+under ("scalar" or "avx2+fma"), and the flavor-explicit rows carry
+theirs in the operation name ("dot [simd]" / "dot [scalar]"). Timing
+rows are only compared when baseline and fresh ran the same flavor —
+a simd-vs-scalar delta is a hardware/dispatch difference, not drift —
+and every warning names the flavor it was measured under.
 
 Refresh the baseline by downloading the BENCH_micro artifact from a
 green main run and committing it as BENCH_baseline.json.
@@ -37,6 +46,24 @@ def row_key(row):
     return (row.get("operation", ""), row.get("n", ""))
 
 
+def run_flavor(doc):
+    """Normalized flavor of a run's dispatched rows: scalar / simd / unknown."""
+    name = doc.get("kernel")
+    if name is None:
+        return "unknown"  # pre-flavor-stamp baseline
+    return "scalar" if name == "scalar" else "simd"
+
+
+def row_flavor(row, default):
+    """Which kernel flavor produced a row's timing."""
+    op = row.get("operation", "")
+    if "[simd]" in op:
+        return "simd"
+    if "[scalar]" in op:
+        return "scalar"
+    return default
+
+
 def ns_per_op(row):
     try:
         v = float(row.get("ns/op", ""))
@@ -55,13 +82,24 @@ def main(argv):
         sys.exit(__doc__)
     base, fresh = load(args[0]), load(args[1])
 
+    base_kernel, fresh_kernel = run_flavor(base), run_flavor(fresh)
+    print(
+        f"kernel flavor of dispatched rows: baseline={base_kernel}, fresh={fresh_kernel}"
+    )
+
     base_rows = {row_key(r): r for r in base.get("rows", [])}
     warned = 0
+    cross_flavor = 0
     for r in fresh.get("rows", []):
         op, n = row_key(r)
         b = base_rows.get((op, n))
         if b is None:
             print(f"note: no baseline for {op!r} (n={n})")
+            continue
+        bf, ff = row_flavor(b, base_kernel), row_flavor(r, fresh_kernel)
+        if "unknown" not in (bf, ff) and bf != ff:
+            # A simd-vs-scalar delta is a dispatch difference, not drift.
+            cross_flavor += 1
             continue
         fresh_ns, base_ns = ns_per_op(r), ns_per_op(b)
         if fresh_ns is None or base_ns is None:
@@ -70,10 +108,15 @@ def main(argv):
         if ratio > band or ratio < 1.0 / band:
             direction = "slower" if ratio > 1 else "faster"
             print(
-                f"WARN: {op!r} (n={n}) {ratio:.2f}x {direction} than baseline "
+                f"WARN: {op!r} (n={n}, kernel={ff}) {ratio:.2f}x {direction} than baseline "
                 f"({fresh_ns:.1f} vs {base_ns:.1f} ns/op; band {band}x, advisory only)"
             )
             warned += 1
+    if cross_flavor:
+        print(
+            f"{cross_flavor} row(s) skipped: baseline ({base_kernel}) and fresh "
+            f"({fresh_kernel}) ran different kernel flavors"
+        )
     if warned:
         print(f"{warned} timing row(s) outside the noise band (advisory, not failing)")
 
