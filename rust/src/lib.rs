@@ -39,6 +39,11 @@
 // rustdoc with `-D warnings`, so an undocumented public item fails the
 // build there rather than rotting silently.
 #![warn(missing_docs)]
+// Every unsafe operation must sit in an explicit `unsafe {}` block with its
+// own `// SAFETY:` justification, even inside `unsafe fn` bodies — the
+// `cargo xtask audit-unsafe` lint enforces the comments, this lint keeps
+// new unsafe from hiding behind an `unsafe fn` signature.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod batch;
 pub mod cli;

@@ -125,7 +125,7 @@ pub fn dot_avx2(a: &[f64], b: &[f64]) -> Option<f64> {
     #[cfg(target_arch = "x86_64")]
     {
         if detected_flavor() == KernelFlavor::Avx2Fma {
-            // Safety: the feature probe above confirmed AVX2 and FMA.
+            // SAFETY: the feature probe above confirmed AVX2 and FMA.
             return Some(unsafe { avx::dot(a, b) });
         }
     }
@@ -139,7 +139,7 @@ pub fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
         if detected_flavor() == KernelFlavor::Avx2Fma {
-            // Safety: the feature probe above confirmed AVX2 and FMA.
+            // SAFETY: the feature probe above confirmed AVX2 and FMA.
             unsafe { avx::axpy(alpha, x, y) };
             return true;
         }
@@ -154,7 +154,7 @@ pub fn axpy_dot_avx2(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> Option<
     #[cfg(target_arch = "x86_64")]
     {
         if detected_flavor() == KernelFlavor::Avx2Fma {
-            // Safety: the feature probe above confirmed AVX2 and FMA.
+            // SAFETY: the feature probe above confirmed AVX2 and FMA.
             return Some(unsafe { avx::axpy_dot(alpha, x, z, y) });
         }
     }
@@ -186,11 +186,15 @@ pub(crate) mod avx {
     /// inside `#[target_feature(enable = "avx2")]` contexts.
     #[inline]
     unsafe fn hsum4(v: __m256d) -> f64 {
-        let lo = _mm256_castpd256_pd128(v); // lanes 0, 1
-        let hi = _mm256_extractf128_pd::<1>(v); // lanes 2, 3
-        let sum2 = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
-        let shuf = _mm_unpackhi_pd(sum2, sum2); // [l1+l3, l1+l3]
-        _mm_cvtsd_f64(_mm_add_sd(sum2, shuf)) // (l0+l2) + (l1+l3)
+        // SAFETY: pure register-to-register intrinsics; the caller contract
+        // (AVX2 enabled) is exactly what they require.
+        unsafe {
+            let lo = _mm256_castpd256_pd128(v); // lanes 0, 1
+            let hi = _mm256_extractf128_pd::<1>(v); // lanes 2, 3
+            let sum2 = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+            let shuf = _mm_unpackhi_pd(sum2, sum2); // [l1+l3, l1+l3]
+            _mm_cvtsd_f64(_mm_add_sd(sum2, shuf)) // (l0+l2) + (l1+l3)
+        }
     }
 
     /// AVX2+FMA dot product: two 4-lane FMA accumulators (eight doubles
@@ -203,24 +207,33 @@ pub(crate) mod avx {
         debug_assert_eq!(a.len(), b.len());
         let n = a.len().min(b.len());
         let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = _mm256_setzero_pd();
-        let mut acc1 = _mm256_setzero_pd();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
-            acc1 = _mm256_fmadd_pd(
-                _mm256_loadu_pd(pa.add(i + 4)),
-                _mm256_loadu_pd(pb.add(i + 4)),
-                acc1,
-            );
-            i += 8;
+        // SAFETY: every offset below is < n = min(a.len(), b.len()), so all
+        // loads stay inside the borrowed slices; the intrinsics themselves
+        // need AVX2+FMA, which is the caller contract of this fn.
+        unsafe {
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                acc0 = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(pa.add(i)),
+                    _mm256_loadu_pd(pb.add(i)),
+                    acc0,
+                );
+                acc1 = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(pa.add(i + 4)),
+                    _mm256_loadu_pd(pb.add(i + 4)),
+                    acc1,
+                );
+                i += 8;
+            }
+            let mut tail = 0.0;
+            while i < n {
+                tail += *pa.add(i) * *pb.add(i);
+                i += 1;
+            }
+            hsum4(_mm256_add_pd(acc0, acc1)) + tail
         }
-        let mut tail = 0.0;
-        while i < n {
-            tail += *pa.add(i) * *pb.add(i);
-            i += 1;
-        }
-        hsum4(_mm256_add_pd(acc0, acc1)) + tail
     }
 
     /// AVX2+FMA `y += alpha * x`, eight doubles per trip plus a scalar
@@ -232,24 +245,34 @@ pub(crate) mod avx {
     pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(x.len(), y.len());
         let n = x.len().min(y.len());
-        let va = _mm256_set1_pd(alpha);
         let px = x.as_ptr();
         let py = y.as_mut_ptr();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let y0 = _mm256_fmadd_pd(va, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)));
-            let y1 = _mm256_fmadd_pd(
-                va,
-                _mm256_loadu_pd(px.add(i + 4)),
-                _mm256_loadu_pd(py.add(i + 4)),
-            );
-            _mm256_storeu_pd(py.add(i), y0);
-            _mm256_storeu_pd(py.add(i + 4), y1);
-            i += 8;
-        }
-        while i < n {
-            *py.add(i) += alpha * *px.add(i);
-            i += 1;
+        // SAFETY: every offset below is < n = min(x.len(), y.len()); loads
+        // read inside `x`/`y` and stores write inside `y` only (the slices
+        // cannot overlap — `x` is shared, `y` exclusive). The intrinsics
+        // need AVX2+FMA, which is the caller contract of this fn.
+        unsafe {
+            let va = _mm256_set1_pd(alpha);
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let y0 = _mm256_fmadd_pd(
+                    va,
+                    _mm256_loadu_pd(px.add(i)),
+                    _mm256_loadu_pd(py.add(i)),
+                );
+                let y1 = _mm256_fmadd_pd(
+                    va,
+                    _mm256_loadu_pd(px.add(i + 4)),
+                    _mm256_loadu_pd(py.add(i + 4)),
+                );
+                _mm256_storeu_pd(py.add(i), y0);
+                _mm256_storeu_pd(py.add(i + 4), y1);
+                i += 8;
+            }
+            while i < n {
+                *py.add(i) += alpha * *px.add(i);
+                i += 1;
+            }
         }
     }
 
@@ -269,34 +292,44 @@ pub(crate) mod avx {
         debug_assert_eq!(x.len(), y.len());
         debug_assert_eq!(z.len(), y.len());
         let n = x.len().min(z.len()).min(y.len());
-        let va = _mm256_set1_pd(alpha);
         let px = x.as_ptr();
         let pz = z.as_ptr();
         let py = y.as_mut_ptr();
-        let mut acc0 = _mm256_setzero_pd();
-        let mut acc1 = _mm256_setzero_pd();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let y0 = _mm256_fmadd_pd(va, _mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)));
-            let y1 = _mm256_fmadd_pd(
-                va,
-                _mm256_loadu_pd(px.add(i + 4)),
-                _mm256_loadu_pd(py.add(i + 4)),
-            );
-            _mm256_storeu_pd(py.add(i), y0);
-            _mm256_storeu_pd(py.add(i + 4), y1);
-            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i)), y0, acc0);
-            acc1 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i + 4)), y1, acc1);
-            i += 8;
+        // SAFETY: every offset below is < n = min of the three lengths;
+        // loads read inside `x`/`z`/`y` and stores write inside `y` only
+        // (`y` is the one exclusive borrow, so it cannot alias `x` or `z`).
+        // The intrinsics need AVX2+FMA, the caller contract of this fn.
+        unsafe {
+            let va = _mm256_set1_pd(alpha);
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let y0 = _mm256_fmadd_pd(
+                    va,
+                    _mm256_loadu_pd(px.add(i)),
+                    _mm256_loadu_pd(py.add(i)),
+                );
+                let y1 = _mm256_fmadd_pd(
+                    va,
+                    _mm256_loadu_pd(px.add(i + 4)),
+                    _mm256_loadu_pd(py.add(i + 4)),
+                );
+                _mm256_storeu_pd(py.add(i), y0);
+                _mm256_storeu_pd(py.add(i + 4), y1);
+                acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i)), y0, acc0);
+                acc1 = _mm256_fmadd_pd(_mm256_loadu_pd(pz.add(i + 4)), y1, acc1);
+                i += 8;
+            }
+            let mut tail = 0.0;
+            while i < n {
+                let yv = *py.add(i) + alpha * *px.add(i);
+                *py.add(i) = yv;
+                tail += *pz.add(i) * yv;
+                i += 1;
+            }
+            hsum4(_mm256_add_pd(acc0, acc1)) + tail
         }
-        let mut tail = 0.0;
-        while i < n {
-            let yv = *py.add(i) + alpha * *px.add(i);
-            *py.add(i) = yv;
-            tail += *pz.add(i) * yv;
-            i += 1;
-        }
-        hsum4(_mm256_add_pd(acc0, acc1)) + tail
     }
 }
 

@@ -20,7 +20,7 @@ use super::simd;
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     #[cfg(target_arch = "x86_64")]
     if simd::use_avx2() {
-        // Safety: `use_avx2` is true only when the host probe confirmed
+        // SAFETY: `use_avx2` is true only when the host probe confirmed
         // AVX2 and FMA support.
         return unsafe { simd::avx::dot(a, b) };
     }
@@ -60,7 +60,7 @@ pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     #[cfg(target_arch = "x86_64")]
     if simd::use_avx2() {
-        // Safety: `use_avx2` is true only when the host probe confirmed
+        // SAFETY: `use_avx2` is true only when the host probe confirmed
         // AVX2 and FMA support.
         unsafe { simd::avx::axpy(alpha, x, y) };
         return;
@@ -104,7 +104,7 @@ pub fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
 pub fn axpy_dot(alpha: f64, x: &[f64], z: &[f64], y: &mut [f64]) -> f64 {
     #[cfg(target_arch = "x86_64")]
     if simd::use_avx2() {
-        // Safety: `use_avx2` is true only when the host probe confirmed
+        // SAFETY: `use_avx2` is true only when the host probe confirmed
         // AVX2 and FMA support.
         return unsafe { simd::avx::axpy_dot(alpha, x, z, y) };
     }

@@ -15,11 +15,93 @@
 //! RKA/RKAB line instead.
 
 use super::shared::AtomicF64Vec;
+use super::sync::{AtomicBool, AtomicUsize, Ordering};
 use crate::data::LinearSystem;
 use crate::metrics::Stopwatch;
 use crate::rng::{derive_seed, Mt19937};
 use crate::solvers::{SolveOptions, SolveResult, Solver, StopCheck};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Shutdown/progress protocol between the AsyRK monitor and its workers.
+///
+/// Three atomics with a pinned ordering protocol (model-checked in
+/// `tests/loom.rs`):
+///
+/// - `stop` — monitor-to-worker shutdown request. `Release` store paired
+///   with `Acquire` loads in the worker loop. The original implementation
+///   stored `SeqCst` but loaded `Relaxed`; that mix is not a data race
+///   (workers read no monitor-owned data after observing `stop`), but it
+///   also established no happens-before edge at all, so the `SeqCst` on
+///   the store side was pure cost with no pairing. The protocol is now an
+///   explicit `Release`/`Acquire` pair, locked by a loom test.
+/// - `live` — count of workers still able to update `x`. Workers decrement
+///   with `Release` *after* their last update; the monitor reads with
+///   `Acquire`. This is the pair the exactness argument rides on: once the
+///   monitor observes `live == 0`, every worker's prior (relaxed) update
+///   increments are visible, so [`ShutdownSignal::updates`] is the exact
+///   final total, not an approximation.
+/// - `updates` — global update counter. `Relaxed` increments/reads: the
+///   count is monotonic telemetry while workers run (the monitor tolerates
+///   staleness by design), and its exact final value is ordered by the
+///   `live` pair above or by the pool's own end-of-dispatch handshake.
+pub struct ShutdownSignal {
+    stop: AtomicBool,
+    live: AtomicUsize,
+    updates: AtomicUsize,
+}
+
+impl ShutdownSignal {
+    /// Fresh protocol state for `workers` live workers.
+    pub fn new(workers: usize) -> Self {
+        ShutdownSignal {
+            stop: AtomicBool::new(false),
+            live: AtomicUsize::new(workers),
+            updates: AtomicUsize::new(0),
+        }
+    }
+
+    /// Monitor side: request all workers to stop (Release).
+    #[inline]
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Worker side: has a stop been requested? (Acquire, pairing with
+    /// [`ShutdownSignal::request_stop`].)
+    #[inline]
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Worker side: count one completed row update (Relaxed; see type
+    /// docs for why relaxed is sufficient).
+    #[inline]
+    pub fn record_update(&self) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total updates recorded so far (Relaxed). While workers are live
+    /// this is a monotonic lower bound; after [`ShutdownSignal::live_workers`]
+    /// returned 0 (or the dispatch that ran the workers completed) it is
+    /// the exact final count.
+    #[inline]
+    pub fn updates(&self) -> usize {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Worker side: announce that this worker will never update again
+    /// (Release — publishes all of the worker's prior updates).
+    #[inline]
+    pub fn worker_exit(&self) {
+        self.live.fetch_sub(1, Ordering::Release);
+    }
+
+    /// Monitor side: workers still able to produce updates (Acquire,
+    /// pairing with [`ShutdownSignal::worker_exit`]).
+    #[inline]
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+}
 
 /// Lock-free asynchronous RK (HOGWILD! scheme).
 pub struct AsyRkSolver {
@@ -64,11 +146,10 @@ impl Solver for AsyRkSolver {
         let n = system.cols();
         let q = self.threads;
         let x = AtomicF64Vec::zeros(n);
-        let stop = AtomicBool::new(false);
-        let total_updates = AtomicUsize::new(0);
-        // Workers still in their HOGWILD loop; when this hits zero nothing
-        // can ever update x again, so the monitor must not keep waiting.
-        let live_workers = AtomicUsize::new(q);
+        // Stop request, live-worker count ("when this hits zero nothing can
+        // ever update x again"), and the global update counter — with the
+        // orderings documented and loom-checked on [`ShutdownSignal`].
+        let signal = ShutdownSignal::new(q);
 
         // Monitor cadence: poll for convergence every `poll_every` global
         // updates (the async loop has no natural iteration boundary, so the
@@ -107,7 +188,7 @@ impl Solver for AsyRkSolver {
                 }
                 let mut last_recorded = usize::MAX;
                 while !converged && !diverged {
-                    let done = total_updates.load(Ordering::Relaxed);
+                    let done = signal.updates();
                     let tick = if step > 0 { done / step } else { 0 };
                     let record = step > 0 && tick != last_recorded;
                     // Timed runs without history never materialize the
@@ -139,7 +220,7 @@ impl Solver for AsyRkSolver {
                         // either way, not converged.
                         break;
                     }
-                    if live_workers.load(Ordering::Relaxed) == 0 {
+                    if signal.live_workers() == 0 {
                         // Every worker exited (all partitions degenerate):
                         // no update can ever arrive, so stop un-converged
                         // instead of spinning forever.
@@ -150,7 +231,7 @@ impl Solver for AsyRkSolver {
                         std::hint::spin_loop();
                     }
                 }
-                stop.store(true, Ordering::SeqCst);
+                signal.request_stop();
                 *monitor_out.lock().unwrap() =
                     Some((stopper.into_history(), converged, diverged));
             } else {
@@ -167,7 +248,7 @@ impl Solver for AsyRkSolver {
                     rng.shuffle(&mut order);
                     let mut pos = 0usize;
                     let mut xbuf = vec![0.0; n];
-                    while !stop.load(Ordering::Relaxed) {
+                    while !signal.should_stop() {
                         if pos == order.len() {
                             rng.shuffle(&mut order);
                             pos = 0;
@@ -185,18 +266,20 @@ impl Solver for AsyRkSolver {
                         for (j, rj) in system.a.row_entries(i) {
                             x.add(j, scale * rj);
                         }
-                        total_updates.fetch_add(1, Ordering::Relaxed);
+                        signal.record_update();
                     }
                 }
                 // Signal the monitor this worker can no longer make progress
                 // (normal stop, or a partition with nothing but zero rows).
-                live_workers.fetch_sub(1, Ordering::Relaxed);
+                signal.worker_exit();
             }
         });
         let seconds = sw.seconds();
         let (history, converged, diverged) =
             monitor_out.into_inner().unwrap().expect("monitor reports outcome");
-        let iterations = total_updates.load(Ordering::SeqCst);
+        // Exact: every worker has exited (the pool's end-of-dispatch
+        // handshake orders their counter increments before this read).
+        let iterations = signal.updates();
 
         SolveResult {
             x: x.snapshot(),

@@ -149,14 +149,18 @@ impl BlockSequentialRk {
             // `dot(&row[lo..hi], &x[lo..hi])` kernel; on CSR it sums only the
             // stored entries that fall in the chunk.
             {
-                // SAFETY: x read-only here; partials slot t is thread-private.
+                // SAFETY: x is read-only between barriers (B) and (D).
                 let x = unsafe { region.x.as_ref_unchecked() };
-                let partials = unsafe { region.partials.as_mut_unchecked() };
-                partials[t * PAD] = system.a.row_dot_range(i, lo, hi, x);
+                // SAFETY: each thread views and writes only its own padded
+                // partials slot.
+                let slot = unsafe { region.partials.range_mut_unchecked(t * PAD, t * PAD + 1) };
+                slot[0] = system.a.row_dot_range(i, lo, hi, x);
             }
             region.barrier.wait(); // (C) partials ready
             if t == 0 {
                 // Combine partials and publish the scale factor.
+                // SAFETY: all partials writers passed barrier (C); the slots
+                // are read-only until the next iteration's dot phase.
                 let partials = unsafe { region.partials.as_ref_unchecked() };
                 let mut s = 0.0;
                 for r in 0..q {
@@ -168,10 +172,26 @@ impl BlockSequentialRk {
             region.barrier.wait(); // (D) scale published
             let scale = f64::from_bits(region.scale_bits.load(Ordering::SeqCst));
             {
-                // Parallel update: disjoint chunks (`omp for`).
-                // SAFETY: chunks disjoint.
-                let x = unsafe { region.x.as_mut_unchecked() };
-                system.a.row_axpy_range(i, scale, lo, hi, x);
+                // Parallel update: disjoint chunks (`omp for`), inlining the
+                // storage layer's `row_axpy_range` arms shifted onto the
+                // chunk view (same element-wise loops, bitwise identical).
+                // SAFETY: chunks are disjoint; each thread views and writes
+                // only its own `[lo, hi)` range of x.
+                let xc = unsafe { region.x.range_mut_unchecked(lo, hi) };
+                match system.a.as_dense() {
+                    Some(m) => {
+                        for (xj, rj) in xc.iter_mut().zip(&m.row(i)[lo..hi]) {
+                            *xj += scale * rj;
+                        }
+                    }
+                    None => {
+                        for (j, rj) in system.a.row_entries(i) {
+                            if (lo..hi).contains(&j) {
+                                xc[j - lo] += scale * rj;
+                            }
+                        }
+                    }
+                }
             }
             k += 1;
         }

@@ -107,6 +107,8 @@ struct SendPtr(*mut f64);
 // SAFETY: the pointer is only dereferenced through disjoint per-participant
 // ranges while the owning slice is pinned by the blocking dispatch.
 unsafe impl Send for SendPtr {}
+// SAFETY: same protocol as the Send impl above — shared copies only ever
+// dereference pairwise-disjoint ranges during the blocking dispatch.
 unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
@@ -126,7 +128,10 @@ mod tests {
         let x: Vec<f64> = (0..19).map(|i| (i as f64 * 0.41).sin()).collect();
         let mut serial = vec![0.0; 37];
         a.gemv_block_into(&x, &mut serial);
-        for q in [1usize, 2, 3, 5, 8, 37, 50] {
+        // Miri explores the same aliasing protocol with fewer (and smaller)
+        // dispatches; the full q sweep runs natively.
+        let qs: &[usize] = if cfg!(miri) { &[1, 2, 3] } else { &[1, 2, 3, 5, 8, 37, 50] };
+        for &q in qs {
             let mut par = vec![f64::NAN; 37];
             residual_gemv_into_with(&a, &x, &mut par, &pool, q);
             for (i, (u, v)) in par.iter().zip(&serial).enumerate() {
@@ -142,7 +147,8 @@ mod tests {
         let x: Vec<f64> = (0..11).map(|i| (i as f64 * 0.29).cos()).collect();
         let mut serial = vec![0.0; 24];
         a.gemv_block_into(&x, &mut serial);
-        for q in [2usize, 4, 7, 24] {
+        let qs: &[usize] = if cfg!(miri) { &[2, 3] } else { &[2, 4, 7, 24] };
+        for &q in qs {
             let mut par = vec![f64::NAN; 24];
             residual_gemv_into_with(&a, &x, &mut par, &pool, q);
             for (i, (u, v)) in par.iter().zip(&serial).enumerate() {

@@ -22,6 +22,13 @@
 //!   stopping/telemetry checks (bitwise-identical row-range split);
 //! - [`shared`] — the unsafe-but-disciplined shared buffers and the spin
 //!   barrier the engine is built on.
+//!
+//! All of the above synchronize exclusively through the `sync` shim module,
+//! which re-exports `std::sync` on normal builds and the
+//! [loom](https://docs.rs/loom) model-checker types under
+//! `RUSTFLAGS="--cfg loom"` — `tests/loom.rs` exhaustively explores the
+//! barrier, dispatch, and shutdown protocols on every push (see the README
+//! "Correctness tooling" section).
 
 pub mod asyrk;
 pub mod block_seq;
@@ -30,8 +37,9 @@ pub mod pool;
 pub mod rka_shared;
 pub mod rkab_shared;
 pub mod shared;
+pub(crate) mod sync;
 
-pub use asyrk::AsyRkSolver;
+pub use asyrk::{AsyRkSolver, ShutdownSignal};
 pub use block_seq::BlockSequentialRk;
 pub use gemv::{residual_gemv_into, residual_gemv_into_with};
 pub use pool::WorkerPool;

@@ -221,11 +221,12 @@ impl ParallelRka {
             // x_prev = x, chunked (`omp for` of Algorithm 1 lines 3-4).
             let (lo, hi) = region.x_prev.chunk(t, q);
             {
-                // SAFETY: chunks are disjoint; x is only read here (all
-                // writers passed barrier B).
-                let prev = unsafe { region.x_prev.as_mut_unchecked() };
-                for i in lo..hi {
-                    prev[i] = region.x.get(i);
+                // SAFETY: chunks are disjoint and each thread views only its
+                // own range; x is only read here (all writers passed
+                // barrier B).
+                let prev = unsafe { region.x_prev.range_mut_unchecked(lo, hi) };
+                for (off, p) in prev.iter_mut().enumerate() {
+                    *p = region.x.get(lo + off);
                 }
             }
             if matches!(self.strategy, AveragingStrategy::Reduce) {
@@ -314,9 +315,10 @@ impl ParallelRka {
                     // full estimate x_prev + (q*scale)*A^(row) (the q cancels
                     // in the average, reconstructing eq. 7).
                     {
-                        // SAFETY: each thread writes only its own row.
-                        let g = unsafe { region.gather.as_mut_unchecked() };
-                        let mine = &mut g[t * n..(t + 1) * n];
+                        // SAFETY: each thread views and writes only its own
+                        // gather row.
+                        let mine =
+                            unsafe { region.gather.range_mut_unchecked(t * n, (t + 1) * n) };
                         let full_scale = q as f64 * scale;
                         match dense_row {
                             Some(row) => {
@@ -335,6 +337,9 @@ impl ParallelRka {
                     // Extra synchronization point the paper calls out.
                     region.barrier.wait();
                     // Parallel column averaging over disjoint chunks.
+                    // SAFETY: all gather-row writers passed the barrier
+                    // above; the matrix is read-only until the next
+                    // iteration's write phase.
                     let g = unsafe { region.gather.as_ref_unchecked() };
                     let inv_q = 1.0 / q as f64;
                     for j in lo..hi {

@@ -167,9 +167,9 @@ impl ParallelRkab {
             block_sweep(system, &mut sampler, self.block_size, self.alpha, &mut v, &mut idx);
             {
                 // Publish v as gather row t.
-                // SAFETY: each thread writes only its own row.
-                let g = unsafe { region.gather.as_mut_unchecked() };
-                g[t * n..(t + 1) * n].copy_from_slice(&v);
+                // SAFETY: each thread views and writes only its own row.
+                let mine = unsafe { region.gather.range_mut_unchecked(t * n, (t + 1) * n) };
+                mine.copy_from_slice(&v);
             }
             // (C) every block estimate published; nobody reads x anymore.
             region.barrier.wait();
@@ -180,16 +180,18 @@ impl ParallelRkab {
                 // gather rows. Per element the sum still associates in
                 // ascending t with one final inv_q multiply — exactly the
                 // sequential reference's float association.
-                // SAFETY: column chunks are disjoint; gather rows are frozen
-                // until the next iteration's sweep, which every thread only
-                // reaches after barrier (A)+(B) — i.e. after all reads here.
+                // SAFETY: gather rows are frozen until the next iteration's
+                // sweep, which every thread only reaches after barrier
+                // (A)+(B) — i.e. after all reads here.
                 let g = unsafe { region.gather.as_ref_unchecked() };
-                let x = unsafe { region.x.as_mut_unchecked() };
-                x[lo..hi].fill(0.0);
+                // SAFETY: column chunks are disjoint; each thread views and
+                // writes only its own `[lo, hi)` range of x.
+                let xc = unsafe { region.x.range_mut_unchecked(lo, hi) };
+                xc.fill(0.0);
                 for r in 0..q {
-                    axpy(1.0, &g[r * n + lo..r * n + hi], &mut x[lo..hi]);
+                    axpy(1.0, &g[r * n + lo..r * n + hi], xc);
                 }
-                scale_in_place(&mut x[lo..hi], inv_q);
+                scale_in_place(xc, inv_q);
             }
             k += 1;
         }

@@ -10,66 +10,134 @@
 //!
 //! # SharedSlice protocol
 //!
-//! A `SharedSlice` hands out raw views of one `Vec<f64>`. Callers must
-//! guarantee, via barriers/mutexes, that between two synchronization points
-//! either (a) all accesses are reads, or (b) writers touch disjoint index
-//! ranges. Every use in this crate is one of:
+//! A `SharedSlice` hands out raw views of one `Vec<f64>`. All views are
+//! derived from a base pointer cached at construction (while the vector was
+//! still exclusively owned), never from fresh `&mut` reborrows of the cell:
+//! two threads re-borrowing the whole buffer as `&mut [f64]` — even to
+//! write disjoint halves — is undefined behavior under Stacked Borrows
+//! (each whole-slice `&mut` asserts exclusivity over *every* element), and
+//! Miri rejects it. Deriving every view from the one cached raw pointer
+//! keeps disjoint concurrent writes well-defined, which is why the mutable
+//! accessor is [`SharedSlice::range_mut_unchecked`] (a bounded sub-view)
+//! rather than a whole-slice `&mut`.
+//!
+//! Callers must still guarantee, via barriers/mutexes, that between two
+//! synchronization points either (a) all accesses are reads, or (b) writers
+//! touch disjoint index ranges. Every use in this crate is one of:
 //! - chunked writes where thread `t` owns `chunk(t, q)` (disjoint);
 //! - whole-slice writes inside a `Mutex` critical section;
 //! - read-only phases separated from write phases by a barrier.
+//!
+//! # Barrier phases
+//!
+//! Each solver names the [`SpinBarrier`] crossings its `// SAFETY:`
+//! comments appeal to. The protocol is always the same shape — a crossing
+//! both *publishes* the writes before it (Release on arrival) and *orders*
+//! the accesses after it (Acquire on departure), so a range written before
+//! a crossing may be read by any thread after it:
+//!
+//! - **RKA** ([`super::rka_shared`]): (A) all `q` gather rows written →
+//!   safe to reduce/average; (B) stop decision published by thread 0 →
+//!   safe for all to read; (C) `x_prev` chunks copied → safe to read next
+//!   iteration.
+//! - **RKAB** ([`super::rkab_shared`]): per block, (A) stop flag published;
+//!   (B) all `q` block results written to the gather matrix → safe to
+//!   average into `x`; (C) averaging of `x` chunks complete → safe for all
+//!   to read `x` in the next block.
+//! - **Block-sequential RK** ([`super::block_seq`]): per iteration, (A) row
+//!   choice + stop flag published; (B) all partial dot products written →
+//!   thread 0 may reduce; (C) scale published → all may update their `x`
+//!   chunk; (D) `x` update complete → safe to read next iteration.
+//!
+//! The barrier itself is model-checked: `tests/loom.rs` exhaustively
+//! verifies (under `RUSTFLAGS="--cfg loom"`) that a write before a crossing
+//! is visible after it, including across reused generations — the exact
+//! pattern the solvers' phase loops rely on.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::sync::{spin_loop_hint, yield_now, AtomicU64, AtomicUsize, Ordering};
 
 /// A `Vec<f64>` that multiple threads may access under the module protocol.
 pub struct SharedSlice {
     data: UnsafeCell<Vec<f64>>,
+    /// Base pointer of `data`'s buffer, cached while the vector was still
+    /// exclusively owned. Every view below derives from this pointer so
+    /// concurrent disjoint writes never create overlapping `&mut [f64]`
+    /// whole-slice borrows (see module docs).
+    base: *mut f64,
+    len: usize,
 }
 
-// SAFETY: all mutation goes through `as_mut_unchecked`, whose callers uphold
-// the disjointness/synchronization protocol documented on the module.
+// SAFETY: the raw `base` pointer only suppresses the auto impl; it points
+// into the owned `data` vector, which moves with the struct, and `f64`
+// buffers are sendable.
+unsafe impl Send for SharedSlice {}
+
+// SAFETY: all mutation goes through `range_mut_unchecked`, whose callers
+// uphold the disjointness/synchronization protocol documented on the
+// module.
 unsafe impl Sync for SharedSlice {}
 
 impl SharedSlice {
     /// Zero-initialized shared buffer.
     pub fn zeros(n: usize) -> Self {
-        SharedSlice { data: UnsafeCell::new(vec![0.0; n]) }
+        SharedSlice::from_vec(vec![0.0; n])
     }
 
     /// Wrap an existing vector.
-    pub fn from_vec(v: Vec<f64>) -> Self {
-        SharedSlice { data: UnsafeCell::new(v) }
+    pub fn from_vec(mut v: Vec<f64>) -> Self {
+        // Cache the buffer pointer while `v` is exclusively owned; moving
+        // the Vec into the cell moves its (ptr, len, cap) header, not the
+        // heap buffer, so the pointer stays valid for the struct's life.
+        let base = v.as_mut_ptr();
+        let len = v.len();
+        SharedSlice { data: UnsafeCell::new(v), base, len }
     }
 
     /// Length of the buffer.
     pub fn len(&self) -> usize {
-        // SAFETY: len never changes after construction.
-        unsafe { (*self.data.get()).len() }
+        self.len
     }
 
     /// True if empty.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.len == 0
     }
 
-    /// Read-only view.
+    /// Read-only view of the whole buffer.
     ///
     /// # Safety
-    /// Caller must ensure no thread writes the slice concurrently.
+    /// Caller must ensure no thread writes any element concurrently (reads
+    /// may only overlap writes across a barrier crossing, never within a
+    /// phase).
     #[inline]
     pub unsafe fn as_ref_unchecked(&self) -> &[f64] {
-        &*self.data.get()
+        // SAFETY: `base`/`len` describe a live, initialized f64 buffer for
+        // the life of `self`; the caller guarantees no concurrent writes
+        // overlap this read.
+        unsafe { std::slice::from_raw_parts(self.base, self.len) }
     }
 
-    /// Mutable view.
+    /// Mutable view of elements `[lo, hi)`.
+    ///
+    /// This is deliberately a *range* view: handing each writer only the
+    /// sub-slice it owns keeps concurrent `&mut` views non-overlapping,
+    /// which the aliasing model requires (a whole-slice `&mut` per thread
+    /// would be instant UB even with disjoint index discipline).
     ///
     /// # Safety
-    /// Caller must ensure writes follow the module protocol (disjoint ranges
-    /// or exclusive access between synchronization points).
+    /// Caller must ensure writes follow the module protocol: between two
+    /// synchronization points, no other view (read or write) overlaps
+    /// `[lo, hi)`.
     #[inline]
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn as_mut_unchecked(&self) -> &mut [f64] {
-        &mut *self.data.get()
+    pub unsafe fn range_mut_unchecked(&self, lo: usize, hi: usize) -> &mut [f64] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        // SAFETY: bounds are debug-checked against the fixed buffer length;
+        // the view derives from the cached base pointer, and the caller
+        // guarantees no overlapping view exists within this phase.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(lo), hi - lo) }
     }
 
     /// Consume and return the inner vector (end of the parallel region).
@@ -81,7 +149,7 @@ impl SharedSlice {
     /// `[⌊t·n/q⌋, ⌊(t+1)·n/q⌋)` — same partition the paper's `omp for`
     /// static schedule produces.
     pub fn chunk(&self, t: usize, q: usize) -> (usize, usize) {
-        let n = self.len();
+        let n = self.len;
         (t * n / q, (t + 1) * n / q)
     }
 }
@@ -94,13 +162,13 @@ impl SharedSlice {
 /// stored in `AtomicU64`; relaxed loads/stores compile to plain moves, so
 /// the read path costs the same as a plain slice.
 pub struct AtomicF64Vec {
-    data: Vec<std::sync::atomic::AtomicU64>,
+    data: Vec<AtomicU64>,
 }
 
 impl AtomicF64Vec {
     /// Zero-initialized vector of length `n`.
     pub fn zeros(n: usize) -> Self {
-        AtomicF64Vec { data: (0..n).map(|_| std::sync::atomic::AtomicU64::new(0)).collect() }
+        AtomicF64Vec { data: (0..n).map(|_| AtomicU64::new(0)).collect() }
     }
 
     /// Length.
@@ -114,18 +182,29 @@ impl AtomicF64Vec {
     }
 
     /// Relaxed load of entry `i`.
+    ///
+    /// Relaxed is sufficient: entries carry independent numeric payloads
+    /// (no other memory is published through them), and the algorithms
+    /// reading them (HOGWILD!-style AsyRK, the `atomic` RKA gather)
+    /// tolerate stale per-entry values by design. Cross-phase visibility
+    /// comes from the surrounding barrier/pool synchronization.
     #[inline]
     pub fn get(&self, i: usize) -> f64 {
         f64::from_bits(self.data[i].load(Ordering::Relaxed))
     }
 
-    /// Relaxed store of entry `i`.
+    /// Relaxed store of entry `i` (see [`AtomicF64Vec::get`] for why
+    /// relaxed suffices).
     #[inline]
     pub fn set(&self, i: usize, v: f64) {
         self.data[i].store(v.to_bits(), Ordering::Relaxed);
     }
 
     /// Atomic `x[i] += delta` via compare-exchange loop.
+    ///
+    /// Relaxed success/failure orderings are sufficient: the CAS loop only
+    /// needs per-entry atomicity (no lost updates), not cross-entry
+    /// ordering — totals are read at sync points ordered by the pool.
     #[inline]
     pub fn add(&self, i: usize, delta: f64) {
         let cell = &self.data[i];
@@ -165,6 +244,15 @@ impl AtomicF64Vec {
 /// ~50-100ns per crossing at the thread counts used here, versus several µs
 /// for `std::sync::Barrier` — the difference is material because RKA crosses
 /// barriers every iteration (§3.3.1) and the iteration itself is only O(n).
+///
+/// Ordering protocol (model-checked in `tests/loom.rs`): the `AcqRel`
+/// `fetch_add` on arrival makes every waiter's pre-barrier writes visible
+/// to the last arrival, and the `Release` generation flip (paired with the
+/// waiters' `Acquire` spin loads) re-publishes them to everyone leaving the
+/// barrier. Resetting `count` *before* flipping `generation` keeps reuse
+/// safe: no thread can re-enter `wait` for generation `g+1` until it
+/// observes the flip, by which point the reset is already ordered before
+/// it.
 pub struct SpinBarrier {
     count: AtomicUsize,
     generation: AtomicUsize,
@@ -195,7 +283,8 @@ impl SpinBarrier {
     pub fn wait(&self) {
         let gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
-            // Last arrival: reset and release the others.
+            // Last arrival: reset and release the others. The count reset
+            // must precede the generation flip (see type-level docs).
             self.count.store(0, Ordering::Release);
             self.generation.store(gen.wrapping_add(1), Ordering::Release);
         } else {
@@ -203,9 +292,9 @@ impl SpinBarrier {
             while self.generation.load(Ordering::Acquire) == gen {
                 if spins < SPIN_LIMIT {
                     spins += 1;
-                    std::hint::spin_loop();
+                    spin_loop_hint();
                 } else {
-                    std::thread::yield_now();
+                    yield_now();
                 }
             }
         }
@@ -232,21 +321,60 @@ mod tests {
 
     #[test]
     fn shared_slice_disjoint_parallel_writes() {
-        let s = SharedSlice::zeros(1000);
+        let n = if cfg!(miri) { 64 } else { 1000 };
+        let s = SharedSlice::zeros(n);
         let q = 4;
         WorkerPool::new().run(q, |t| {
             let (lo, hi) = s.chunk(t, q);
-            // SAFETY: chunks are disjoint.
-            let v = unsafe { s.as_mut_unchecked() };
-            for i in lo..hi {
-                v[i] = t as f64;
+            // SAFETY: chunks are disjoint, and each thread only takes a
+            // view of its own range.
+            let v = unsafe { s.range_mut_unchecked(lo, hi) };
+            for x in v.iter_mut() {
+                *x = t as f64;
             }
         });
         let v = s.into_vec();
         for t in 0..q {
-            let lo = t * 1000 / q;
+            let lo = t * n / q;
             assert_eq!(v[lo], t as f64);
         }
+    }
+
+    // Aliasing probe (run it under Miri): two *coexisting* range views are
+    // legal exactly because each is a bounded sub-view derived from the
+    // cached base pointer. The pre-refactor shape — two whole-slice
+    // `&mut [f64]` borrows indexed disjointly — fails Miri's Stacked
+    // Borrows check on this very pattern.
+    #[test]
+    fn disjoint_range_views_may_coexist() {
+        let s = SharedSlice::zeros(8);
+        // SAFETY: [0,4) and [4,8) do not overlap.
+        let (a, b) = unsafe { (s.range_mut_unchecked(0, 4), s.range_mut_unchecked(4, 8)) };
+        a.fill(1.0);
+        b.fill(2.0);
+        // Both views written through; neither invalidated the other.
+        assert_eq!(a[3], 1.0);
+        assert_eq!(b[0], 2.0);
+        let v = s.into_vec();
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+    }
+
+    // Phase-protocol probe: a write phase followed by a read phase on the
+    // same range is legal once the writer's view is dead — the shared view
+    // derives from the same base pointer, so it does not conflict with
+    // past (ended) mutable views.
+    #[test]
+    fn write_phase_then_read_phase_is_legal() {
+        let s = SharedSlice::zeros(4);
+        {
+            // SAFETY: exclusive access within this scope (single thread).
+            let w = unsafe { s.range_mut_unchecked(0, 4) };
+            w[2] = 7.0;
+        }
+        // SAFETY: the mutable view above is out of scope; this is a
+        // read-only phase.
+        let r = unsafe { s.as_ref_unchecked() };
+        assert_eq!(r[2], 7.0);
     }
 
     #[test]
@@ -254,10 +382,11 @@ mod tests {
         // Each thread increments a phase counter only after the barrier; if
         // the barrier leaked, some thread would observe a stale phase.
         let q = 4;
+        let phases: u64 = if cfg!(miri) { 3 } else { 50 };
         let barrier = SpinBarrier::new(q);
         let counter = AtomicU64::new(0);
         WorkerPool::new().run(q, |_| {
-            for phase in 0..50u64 {
+            for phase in 0..phases {
                 barrier.wait();
                 // All threads agree the counter equals q*phase here.
                 assert_eq!(counter.load(Ordering::SeqCst) / q as u64, phase);
@@ -265,10 +394,11 @@ mod tests {
                 counter.fetch_add(1, Ordering::SeqCst);
             }
         });
-        assert_eq!(counter.load(Ordering::SeqCst), 50 * q as u64);
+        assert_eq!(counter.load(Ordering::SeqCst), phases * q as u64);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // spawns 4x available_parallelism threads
     fn spin_barrier_survives_oversubscription() {
         // More waiters than cores: the yield fallback must keep every phase
         // progressing instead of live-locking the machine (regression for
@@ -307,8 +437,8 @@ mod tests {
     #[test]
     fn atomic_adds_do_not_lose_updates() {
         let v = AtomicF64Vec::zeros(4);
-        let q = 8;
-        let per_thread = 10_000;
+        let q = if cfg!(miri) { 4 } else { 8 };
+        let per_thread = if cfg!(miri) { 50 } else { 10_000 };
         WorkerPool::new().run(q, |_| {
             for _ in 0..per_thread {
                 for i in 0..4 {

@@ -1,0 +1,62 @@
+//! Loom-swappable synchronization primitives for the parallel engine.
+//!
+//! Every synchronization type the shared-memory engine is built on —
+//! mutexes, condvars, atomics, `Arc`, threads, and the spin hints inside
+//! [`super::shared::SpinBarrier`] — is imported through this module
+//! instead of `std::sync` directly. A normal build re-exports the `std`
+//! types unchanged (zero cost, zero behavior change); a build with
+//! `RUSTFLAGS="--cfg loom"` swaps in the [loom](https://docs.rs/loom)
+//! model-checker equivalents, under which the `tests/loom.rs` suite
+//! exhaustively explores every interleaving (bounded by preemptions) of
+//! the barrier, pool-dispatch, and AsyRK-shutdown protocols.
+//!
+//! What loom adjudicates here is the *synchronization protocol*: that the
+//! orderings on [`super::shared::SpinBarrier`] establish happens-before
+//! across phases, that [`super::pool::WorkerPool::run`] returns only
+//! after every participant's job call completed (no job-pointer
+//! use-after-return), and that the [`super::asyrk::ShutdownSignal`]
+//! Release/Acquire pairs make the workers' update counts visible to the
+//! monitor. The *data discipline* on [`super::shared::SharedSlice`]
+//! (disjoint chunked writes through raw views) is per-element and
+//! therefore outside loom's vocabulary — the Miri and ThreadSanitizer CI
+//! lanes cover that side (see README "Correctness tooling").
+//!
+//! Keep this module the single chokepoint: new synchronization in
+//! `parallel/` must import from here, or the loom lane silently stops
+//! covering it.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub(crate) use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
+pub(crate) use std::thread;
+
+/// Spin-wait hint: `std::hint::spin_loop` normally; under loom a yield,
+/// because loom's scheduler needs an explicit yield point to consider
+/// running another thread (a pure spin would never terminate a branch of
+/// the exploration).
+#[inline]
+pub(crate) fn spin_loop_hint() {
+    #[cfg(loom)]
+    loom::thread::yield_now();
+    #[cfg(not(loom))]
+    std::hint::spin_loop();
+}
+
+/// Yield the timeslice: `std::thread::yield_now` normally, loom's
+/// scheduler yield under `cfg(loom)`.
+#[inline]
+pub(crate) fn yield_now() {
+    #[cfg(loom)]
+    loom::thread::yield_now();
+    #[cfg(not(loom))]
+    std::thread::yield_now();
+}

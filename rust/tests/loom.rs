@@ -1,0 +1,200 @@
+//! Loom model-checking suite for the parallel engine's sync protocols.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the dedicated CI lane):
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom
+//! ```
+//!
+//! Under that cfg the crate's `parallel::sync` shim swaps `std::sync` for
+//! loom's instrumented types, and each `loom::model` block below explores
+//! *every* interleaving of its threads (bounded by preemptions where
+//! noted). Assertion style: the shared payloads are loom `UnsafeCell`s —
+//! plain non-atomic data — so any access not ordered by the protocol under
+//! test is reported as a concurrency bug by the model itself, not merely a
+//! flaky assertion. These tests therefore *prove* the happens-before
+//! claims that the `// SAFETY:` comments in `parallel/` appeal to.
+
+#![cfg(loom)]
+
+use kaczmarz::parallel::{ShutdownSignal, SpinBarrier, WorkerPool};
+use loom::cell::UnsafeCell;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// A plain, non-atomic payload. Loom's instrumented `UnsafeCell` turns any
+/// unsynchronized concurrent access into a model failure, which is exactly
+/// the probe we want: reading it after a protocol step *proves* the step
+/// established happens-before.
+struct Payload(UnsafeCell<usize>);
+
+// SAFETY: the access discipline is the subject under test — loom itself
+// rejects any execution in which two threads touch the cell without an
+// ordering edge, so a `Sync` assertion here cannot hide a real race.
+unsafe impl Sync for Payload {}
+
+impl Payload {
+    fn new(v: usize) -> Self {
+        Payload(UnsafeCell::new(v))
+    }
+
+    fn read(&self) -> usize {
+        // SAFETY: loom validates that this shared read is ordered against
+        // every write (any violation fails the model).
+        self.0.with(|p| unsafe { *p })
+    }
+
+    fn write(&self, v: usize) {
+        // SAFETY: loom validates that this write is ordered against every
+        // other access (any violation fails the model).
+        self.0.with_mut(|p| unsafe { *p = v });
+    }
+
+    fn bump(&self) {
+        // SAFETY: as in `write`.
+        self.0.with_mut(|p| unsafe { *p += 1 });
+    }
+}
+
+/// The core barrier claim every solver's SAFETY comments rely on: a plain
+/// write made *before* a crossing is visible (and race-free) to every
+/// thread *after* the crossing.
+#[test]
+fn spin_barrier_establishes_happens_before() {
+    loom::model(|| {
+        let barrier = Arc::new(SpinBarrier::new(2));
+        let cell = Arc::new(Payload::new(0));
+        let (b2, c2) = (Arc::clone(&barrier), Arc::clone(&cell));
+        let writer = thread::spawn(move || {
+            c2.write(42);
+            b2.wait();
+        });
+        barrier.wait();
+        assert_eq!(cell.read(), 42);
+        writer.join().unwrap();
+    });
+}
+
+/// Reuse across generations — the solvers cross one barrier hundreds of
+/// times per solve. The count-reset-before-generation-flip order in
+/// `SpinBarrier::wait` is what makes generation `g+1` safe to enter while
+/// stragglers from `g` are still leaving; a regression here shows up as a
+/// lost wakeup (model deadlock) or a payload race.
+#[test]
+fn spin_barrier_reuse_across_generations() {
+    loom::model(|| {
+        let barrier = Arc::new(SpinBarrier::new(2));
+        let cell = Arc::new(Payload::new(0));
+        let (b2, c2) = (Arc::clone(&barrier), Arc::clone(&cell));
+        let t = thread::spawn(move || {
+            c2.write(1);
+            b2.wait(); // generation 0 -> 1: publish the write above
+            b2.wait(); // generation 1 -> 2: wait out the peer's write phase
+            assert_eq!(c2.read(), 2);
+        });
+        barrier.wait();
+        assert_eq!(cell.read(), 1);
+        cell.write(2);
+        barrier.wait();
+        t.join().unwrap();
+    });
+}
+
+/// The lifetime-erasure contract of `WorkerPool::run` (module docs steps
+/// 1-3): `run` returns only after every participant's call through the
+/// erased job pointer has completed. The accesses after `run` would race
+/// with any worker still writing inside the job — loom would fail the
+/// model — so passing proves there is no use-after-return window.
+#[test]
+fn pool_run_returns_only_after_every_participant() {
+    loom::model(|| {
+        let pool = WorkerPool::new();
+        let slots = [Payload::new(0), Payload::new(0)];
+        pool.run(2, |t| {
+            slots[t].bump();
+        });
+        for s in &slots {
+            assert_eq!(s.read(), 1);
+        }
+        // Joins the parked worker; loom requires every thread to finish.
+        drop(pool);
+    });
+}
+
+/// The oversubscription path (protocol step 2): a resident worker with
+/// `t >= q` must record the new epoch and park again without touching the
+/// job pointer. The counter is deliberately Relaxed — the pool's own
+/// mutex handshake, not the counter's ordering, is what makes the final
+/// reads exact.
+#[test]
+fn pool_worker_skips_epochs_it_does_not_participate_in() {
+    let mut builder = loom::model::Builder::new();
+    // Three threads across two condvar-parked epochs: bound preemptions to
+    // keep the state space tractable; the protocol-relevant interleavings
+    // (skip vs join ordering) all occur within the bound.
+    builder.preemption_bound = Some(2);
+    builder.check(|| {
+        let pool = WorkerPool::new();
+        let hits = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+        // Worker t = 2 stays resident but is not a participant of this
+        // q = 2 epoch; if it joined anyway the count would reach 5 + 1.
+        pool.run(2, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        drop(pool);
+    });
+}
+
+/// AsyRK shutdown exactness: once the monitor observes `live == 0`
+/// (Acquire, pairing with the worker's Release `worker_exit`), every
+/// Relaxed `record_update` the worker made is visible — the final count
+/// is exact, not approximate. Downgrading `worker_exit` to Relaxed makes
+/// loom find an execution where the assertion reads a stale count.
+#[test]
+fn shutdown_signal_publishes_exact_update_count() {
+    loom::model(|| {
+        let sig = Arc::new(ShutdownSignal::new(1));
+        let s2 = Arc::clone(&sig);
+        let worker = thread::spawn(move || {
+            s2.record_update();
+            s2.record_update();
+            s2.worker_exit();
+        });
+        while sig.live_workers() != 0 {
+            thread::yield_now();
+        }
+        assert_eq!(sig.updates(), 2);
+        worker.join().unwrap();
+    });
+}
+
+/// The `stop` flag's Release/Acquire pair (the PR's ordering fix: the
+/// previous SeqCst-store/Relaxed-load mix established no happens-before
+/// edge at all). A worker that observes `should_stop()` must also see
+/// everything the monitor wrote before `request_stop()` — checked through
+/// a deliberately Relaxed side payload, so only the stop pair itself can
+/// provide the edge.
+#[test]
+fn stop_release_pairs_with_worker_acquire() {
+    loom::model(|| {
+        let sig = Arc::new(ShutdownSignal::new(1));
+        let flag = Arc::new(AtomicUsize::new(0));
+        let (s2, f2) = (Arc::clone(&sig), Arc::clone(&flag));
+        let worker = thread::spawn(move || {
+            while !s2.should_stop() {
+                thread::yield_now();
+            }
+            assert_eq!(f2.load(Ordering::Relaxed), 7);
+            s2.worker_exit();
+        });
+        flag.store(7, Ordering::Relaxed);
+        sig.request_stop();
+        worker.join().unwrap();
+    });
+}

@@ -1,0 +1,654 @@
+//! Repo-local automation, invoked as `cargo xtask <command>` (the alias
+//! lives in `.cargo/config.toml`).
+//!
+//! # `audit-unsafe`
+//!
+//! The unsafe-audit lint for `rust/src`. It fails the build when:
+//!
+//! - any `unsafe` block, fn, impl, or trait lacks an adjacent
+//!   justification — a `// SAFETY:` comment on the same line or directly
+//!   above (attributes and multi-line statement heads may intervene), or a
+//!   `# Safety` doc section for `unsafe fn` declarations;
+//! - the per-file `unsafe` occurrence counts drift from the committed
+//!   budget in `unsafe_budget.toml` (growth *and* shrinkage: the budget is
+//!   a ratchet, and a stale entry is as suspicious as a new site) — bump
+//!   deliberately with `cargo xtask audit-unsafe --write-budget` after
+//!   review;
+//! - a disallowed pattern appears: `static mut` (always), `transmute`
+//!   outside [`TRANSMUTE_ALLOWED`], or `Ordering::Relaxed` outside the
+//!   audited [`RELAXED_ALLOWED`] files (each of which documents why
+//!   relaxed suffices; their counts are also pinned by the budget);
+//! - the crate root stops declaring `#![deny(unsafe_op_in_unsafe_fn)]`.
+//!
+//! The scanner is a lint, not a parser: it splits each line into code and
+//! comment halves with a small string/char-literal-aware state machine
+//! (block comments nest; string literals may span lines). Raw string
+//! literals are not modeled — `rust/src` has none, and one containing
+//! `unsafe` would at worst make the lint stricter, never blinder.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files (relative to `rust/src`) allowed to mention `transmute`.
+/// `parallel/pool.rs` performs the audited lifetime erasure of the
+/// dispatch job pointer — the protocol loom model-checks.
+const TRANSMUTE_ALLOWED: &[&str] = &["parallel/pool.rs"];
+
+/// Files (relative to `rust/src`) allowed to use `Ordering::Relaxed`.
+/// Each use is justified in the source:
+///
+/// - `parallel/shared.rs` — `AtomicF64Vec` payload entries (independent
+///   numeric values; cross-phase visibility comes from pool/barrier sync);
+/// - `parallel/asyrk.rs` — the `ShutdownSignal::updates` telemetry counter
+///   (exactness is ordered by the `live` Release/Acquire pair);
+/// - `linalg/gemv.rs` — the tuned-panel cache (idempotent hint value);
+/// - `batch/mod.rs` — the work-stealing ticket counter (fetch_add is the
+///   only operation; no other memory rides on it);
+/// - `metrics/progress.rs` — test-only counters behind a channel.
+const RELAXED_ALLOWED: &[&str] = &[
+    "batch/mod.rs",
+    "linalg/gemv.rs",
+    "metrics/progress.rs",
+    "parallel/asyrk.rs",
+    "parallel/shared.rs",
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("audit-unsafe") => {
+            let write = args.iter().any(|a| a == "--write-budget");
+            audit_unsafe(write)
+        }
+        _ => {
+            eprintln!("usage: cargo xtask audit-unsafe [--write-budget]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// A source line split into its code and comment halves.
+struct Line {
+    code: String,
+    comment: String,
+}
+
+impl Line {
+    fn is_pure_comment(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+}
+
+/// Split `src` into per-line code/comment halves. Line (`//`) and nesting
+/// block (`/* */`) comments go to `comment`; string and char literals are
+/// blanked out of `code` (so their contents can never look like keywords);
+/// everything else stays in `code`.
+fn strip_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut block_depth = 0usize;
+    let mut in_string = false;
+    for raw in src.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            if block_depth > 0 {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    i += 2;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            if in_string {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else {
+                    if chars[i] == '"' {
+                        in_string = false;
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            match chars[i] {
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    comment.extend(&chars[i..]);
+                    i = chars.len();
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    block_depth += 1;
+                    i += 2;
+                }
+                '"' => {
+                    code.push(' ');
+                    in_string = true;
+                    i += 1;
+                }
+                '\'' => {
+                    // Char literal vs lifetime: a literal closes within a
+                    // short escape-aware window; a lifetime never closes.
+                    match char_literal_end(&chars, i) {
+                        Some(end) => {
+                            code.push(' ');
+                            i = end;
+                        }
+                        None => {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(Line { code, comment });
+    }
+    out
+}
+
+/// If `chars[start]` (a `'`) opens a char literal, return the index one
+/// past its closing quote; `None` for lifetimes.
+fn char_literal_end(chars: &[char], start: usize) -> Option<usize> {
+    let mut j = start + 1;
+    if chars.get(j) == Some(&'\\') {
+        j += 1;
+        if chars.get(j) == Some(&'u') && chars.get(j + 1) == Some(&'{') {
+            j += 2;
+            while chars.get(j).is_some_and(|&c| c != '}') {
+                j += 1;
+            }
+        }
+        j += 1; // the escaped character (or the closing `}`)
+    } else if chars.get(j).is_some_and(|&c| c != '\'') {
+        j += 1;
+    } else {
+        return None; // `''` — not a literal
+    }
+    (chars.get(j) == Some(&'\'')).then_some(j + 1)
+}
+
+/// Byte offsets of standalone-word occurrences of `word` in `hay`.
+fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut found = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(word) {
+        let at = from + pos;
+        let before_ok = !hay[..at].chars().next_back().is_some_and(is_ident);
+        let after_ok = !hay[at + word.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            found.push(at);
+        }
+        from = at + word.len();
+    }
+    found
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum UnsafeKind {
+    Block,
+    Fn,
+    Impl,
+    Trait,
+}
+
+struct UnsafeSite {
+    /// 0-based line index of the `unsafe` keyword.
+    line: usize,
+    kind: UnsafeKind,
+}
+
+/// Locate every `unsafe` keyword in the stripped code and classify what it
+/// introduces (the next code token, possibly on a following line).
+fn find_unsafe_sites(lines: &[Line]) -> Vec<UnsafeSite> {
+    let mut sites = Vec::new();
+    for (ln, line) in lines.iter().enumerate() {
+        for at in find_word(&line.code, "unsafe") {
+            let mut rest = line.code[at + "unsafe".len()..].trim_start().to_string();
+            let mut look = ln + 1;
+            while rest.is_empty() && look < lines.len() {
+                rest = lines[look].code.trim_start().to_string();
+                look += 1;
+            }
+            let kind = if rest.starts_with('{') {
+                UnsafeKind::Block
+            } else if rest.starts_with("fn") {
+                UnsafeKind::Fn
+            } else if rest.starts_with("impl") {
+                UnsafeKind::Impl
+            } else if rest.starts_with("trait") {
+                UnsafeKind::Trait
+            } else {
+                // `unsafe` in some position the classifier does not know
+                // (e.g. `unsafe extern`); treat as a block so it still
+                // demands a SAFETY comment.
+                UnsafeKind::Block
+            };
+            sites.push(UnsafeSite { line: ln, kind });
+        }
+    }
+    sites
+}
+
+/// Does `site` carry an adjacent justification? Accepted forms:
+///
+/// - `// SAFETY:` trailing on the same line;
+/// - a contiguous `// SAFETY:` comment block directly above (the statement
+///   head of a multi-line expression and attribute lines may sit between);
+/// - for `unsafe fn`/`impl`/`trait`: a doc block containing `# Safety`.
+fn has_safety_justification(lines: &[Line], site: &UnsafeSite) -> bool {
+    if lines[site.line].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = site.line;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        let code = l.code.trim();
+        if code.is_empty() {
+            if !l.comment.trim().is_empty() {
+                return comment_block_has_safety(lines, i, site.kind);
+            }
+            return false; // blank line breaks adjacency
+        }
+        if code.starts_with("#[") || code.starts_with("#!") {
+            continue; // attributes may sit between the doc block and item
+        }
+        // A line ending a previous statement/item stops the walk; anything
+        // else is the head of the same multi-line expression (`let x =`).
+        if code.ends_with(';') || code.ends_with('{') || code.ends_with('}') {
+            return false;
+        }
+    }
+    false
+}
+
+/// Scan the contiguous pure-comment run ending at line `i` for a
+/// justification marker.
+fn comment_block_has_safety(lines: &[Line], mut i: usize, kind: UnsafeKind) -> bool {
+    loop {
+        let c = &lines[i].comment;
+        if c.contains("SAFETY:") {
+            return true;
+        }
+        if kind != UnsafeKind::Block && c.contains("# Safety") {
+            return true;
+        }
+        if i == 0 || !lines[i - 1].is_pure_comment() {
+            return false;
+        }
+        i -= 1;
+    }
+}
+
+/// Per-file scan results.
+#[derive(Default)]
+struct FileAudit {
+    unsafe_count: usize,
+    relaxed_count: usize,
+    transmute_count: usize,
+    /// 1-based lines of unsafe sites lacking a justification.
+    undocumented: Vec<usize>,
+    /// 1-based lines containing `static mut`.
+    static_mut: Vec<usize>,
+}
+
+fn audit_file(src: &str) -> FileAudit {
+    let lines = strip_lines(src);
+    let sites = find_unsafe_sites(&lines);
+    let mut audit = FileAudit { unsafe_count: sites.len(), ..FileAudit::default() };
+    for site in &sites {
+        if !has_safety_justification(&lines, site) {
+            audit.undocumented.push(site.line + 1);
+        }
+    }
+    for (ln, line) in lines.iter().enumerate() {
+        audit.relaxed_count += line.code.matches("Ordering::Relaxed").count();
+        audit.transmute_count += find_word(&line.code, "transmute").len();
+        for at in find_word(&line.code, "static") {
+            if line.code[at + "static".len()..].trim_start().starts_with("mut ") {
+                audit.static_mut.push(ln + 1);
+            }
+        }
+    }
+    audit
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rust_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = fs::read_dir(&d).unwrap_or_else(|e| panic!("read {}: {e}", d.display()));
+        for entry in entries {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x.to_str() == Some("rs")) {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    files
+}
+
+/// Parse the budget file's TOML subset: `[section]` headers and
+/// `"key" = integer` entries (comments and blank lines ignored).
+fn parse_budget(src: &str) -> BTreeMap<String, BTreeMap<String, usize>> {
+    let mut sections = BTreeMap::new();
+    let mut current = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            current = name.to_string();
+            sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .unwrap_or_else(|| panic!("unsafe_budget.toml line {}: not key = value", ln + 1));
+        let key = key.trim().trim_matches('"').to_string();
+        let value: usize = value
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("unsafe_budget.toml line {}: {e}", ln + 1));
+        sections.entry(current.clone()).or_default().insert(key, value);
+    }
+    sections
+}
+
+fn render_budget(
+    unsafe_counts: &BTreeMap<String, usize>,
+    relaxed: &BTreeMap<String, usize>,
+    transmute: &BTreeMap<String, usize>,
+) -> String {
+    let mut out = String::from(
+        "# Per-file budget for `unsafe` and related audited patterns in rust/src.\n\
+         #\n\
+         # Checked exactly (growth AND shrinkage) by `cargo xtask audit-unsafe`\n\
+         # in CI: adding an unsafe site without bumping its budget here fails\n\
+         # the lint, which forces the diff that grows the unsafe surface to\n\
+         # also touch this file — where a reviewer sees it. Regenerate after\n\
+         # review with `cargo xtask audit-unsafe --write-budget`.\n\
+         #\n\
+         # Keys are paths relative to rust/src; counts are keyword\n\
+         # occurrences in code (comments, docs, and strings excluded).\n",
+    );
+    let sections = [("unsafe", unsafe_counts), ("relaxed", relaxed), ("transmute", transmute)];
+    for (section, counts) in sections {
+        let _ = write!(out, "\n[{section}]\n");
+        for (file, count) in counts {
+            let _ = writeln!(out, "\"{file}\" = {count}");
+        }
+    }
+    out
+}
+
+fn audit_unsafe(write_budget: bool) -> ExitCode {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("workspace root");
+    let src_root = repo_root.join("rust").join("src");
+    let budget_path = repo_root.join("unsafe_budget.toml");
+
+    let mut violations: Vec<String> = Vec::new();
+    let mut unsafe_counts = BTreeMap::new();
+    let mut relaxed_counts = BTreeMap::new();
+    let mut transmute_counts = BTreeMap::new();
+
+    for path in rust_files(&src_root) {
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let audit = audit_file(&src);
+
+        for line in &audit.undocumented {
+            violations.push(format!(
+                "{rel}:{line}: unsafe without an adjacent `// SAFETY:` comment \
+                 (or `# Safety` doc section for unsafe fns)"
+            ));
+        }
+        for line in &audit.static_mut {
+            violations.push(format!("{rel}:{line}: `static mut` is banned (use atomics)"));
+        }
+        if audit.transmute_count > 0 && !TRANSMUTE_ALLOWED.contains(&rel.as_str()) {
+            violations.push(format!(
+                "{rel}: `transmute` outside the audited allowlist ({TRANSMUTE_ALLOWED:?})"
+            ));
+        }
+        if audit.relaxed_count > 0 && !RELAXED_ALLOWED.contains(&rel.as_str()) {
+            violations.push(format!(
+                "{rel}: `Ordering::Relaxed` outside the audited allowlist \
+                 ({RELAXED_ALLOWED:?}); use Acquire/Release or get the file audited"
+            ));
+        }
+        if audit.unsafe_count > 0 {
+            unsafe_counts.insert(rel.clone(), audit.unsafe_count);
+        }
+        if audit.relaxed_count > 0 {
+            relaxed_counts.insert(rel.clone(), audit.relaxed_count);
+        }
+        if audit.transmute_count > 0 {
+            transmute_counts.insert(rel.clone(), audit.transmute_count);
+        }
+    }
+
+    // The lint that keeps every future unsafe operation inside an explicit,
+    // commentable block must stay in the crate root.
+    let lib_rs = fs::read_to_string(src_root.join("lib.rs")).expect("read rust/src/lib.rs");
+    if !lib_rs.contains("#![deny(unsafe_op_in_unsafe_fn)]") {
+        let msg = "lib.rs: missing `#![deny(unsafe_op_in_unsafe_fn)]` in the crate root";
+        violations.push(msg.to_string());
+    }
+
+    if write_budget {
+        let rendered = render_budget(&unsafe_counts, &relaxed_counts, &transmute_counts);
+        fs::write(&budget_path, rendered).expect("write unsafe_budget.toml");
+        println!("wrote {}", budget_path.display());
+    } else {
+        match fs::read_to_string(&budget_path) {
+            Err(_) => {
+                let msg = "unsafe_budget.toml missing at the repository root; generate it \
+                           with `cargo xtask audit-unsafe --write-budget`";
+                violations.push(msg.to_string());
+            }
+            Ok(src) => {
+                let budget = parse_budget(&src);
+                let empty = BTreeMap::new();
+                let sections = [
+                    ("unsafe", &unsafe_counts),
+                    ("relaxed", &relaxed_counts),
+                    ("transmute", &transmute_counts),
+                ];
+                for (section, actual) in sections {
+                    let budgeted = budget.get(section).unwrap_or(&empty);
+                    for (file, &count) in actual {
+                        match budgeted.get(file) {
+                            Some(&b) if b == count => {}
+                            Some(&b) => violations.push(format!(
+                                "{file}: [{section}] count {count} != budget {b}; review the \
+                                 change, then `cargo xtask audit-unsafe --write-budget`"
+                            )),
+                            None => violations.push(format!(
+                                "{file}: {count} [{section}] site(s) but no budget entry; \
+                                 review, then `cargo xtask audit-unsafe --write-budget`"
+                            )),
+                        }
+                    }
+                    for file in budgeted.keys() {
+                        if !actual.contains_key(file) {
+                            violations.push(format!(
+                                "{file}: stale [{section}] budget entry (file now clean); \
+                                 regenerate with `cargo xtask audit-unsafe --write-budget`"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if violations.is_empty() {
+        let sites: usize = unsafe_counts.values().sum();
+        println!(
+            "audit-unsafe: OK — {sites} documented unsafe site(s) across {} file(s), \
+             budget in sync",
+            unsafe_counts.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("audit-unsafe: {} violation(s):", violations.len());
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_and_char_literals() {
+        let lines = strip_lines(
+            "let a = \"unsafe in a string\"; // unsafe in a comment\n\
+             let c = 'u'; let l: &'static str = \"x\";\n\
+             /* unsafe in a block\n\
+             comment */ let b = 2;",
+        );
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe in a comment"));
+        assert!(lines[1].code.contains("&'static str"));
+        assert!(!lines[1].code.contains('u'));
+        assert!(lines[2].comment.contains("unsafe in a block"));
+        assert!(lines[3].code.contains("let b = 2"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_stripped() {
+        let lines = strip_lines("let m = \"first \\\n unsafe second\";\nlet x = 1;");
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[2].code.contains("let x = 1"));
+    }
+
+    #[test]
+    fn undocumented_block_is_flagged() {
+        let audit = audit_file("fn f() {\n    let x = unsafe { g() };\n}\n");
+        assert_eq!(audit.unsafe_count, 1);
+        assert_eq!(audit.undocumented, vec![2]);
+    }
+
+    #[test]
+    fn same_line_and_preceding_safety_comments_pass() {
+        let audit = audit_file(
+            "fn f() {\n\
+             \x20   let x = unsafe { g() }; // SAFETY: g is sound here\n\
+             \x20   // SAFETY: h is sound here\n\
+             \x20   // because reasons.\n\
+             \x20   let y = unsafe { h() };\n\
+             }\n",
+        );
+        assert_eq!(audit.unsafe_count, 2);
+        assert!(audit.undocumented.is_empty());
+    }
+
+    #[test]
+    fn multiline_statement_head_does_not_break_adjacency() {
+        let audit = audit_file(
+            "// SAFETY: disjoint ranges.\n\
+             let mine =\n\
+             \x20   unsafe { s.range_mut_unchecked(lo, hi) };\n",
+        );
+        assert_eq!(audit.unsafe_count, 1);
+        assert!(audit.undocumented.is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_covers_unsafe_fn_but_not_blocks() {
+        let covered = audit_file(
+            "/// Does a thing.\n\
+             ///\n\
+             /// # Safety\n\
+             /// Caller promises everything.\n\
+             #[inline]\n\
+             pub unsafe fn f() {}\n",
+        );
+        assert_eq!(covered.unsafe_count, 1);
+        assert!(covered.undocumented.is_empty());
+        // A `# Safety` doc on a *block* is a doc bug, not a justification.
+        let block = audit_file("/// # Safety\nlet x = unsafe { g() };\n");
+        assert_eq!(block.undocumented, vec![2]);
+    }
+
+    #[test]
+    fn blank_line_breaks_adjacency() {
+        let audit = audit_file("// SAFETY: stale comment.\n\nlet x = unsafe { g() };\n");
+        assert_eq!(audit.undocumented, vec![3]);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        let audit = audit_file("fn unsafety() {}\nlet transmuted = 1;\n");
+        assert_eq!(audit.unsafe_count, 0);
+        assert_eq!(audit.transmute_count, 0);
+    }
+
+    #[test]
+    fn relaxed_counted_in_code_not_docs() {
+        let audit = audit_file(
+            "/// Uses Ordering::Relaxed in the doc only.\n\
+             let a = x.load(Ordering::Relaxed);\n\
+             let b = c.compare_exchange(a, a, Ordering::Relaxed, Ordering::Relaxed);\n",
+        );
+        assert_eq!(audit.relaxed_count, 3);
+    }
+
+    #[test]
+    fn static_mut_and_transmute_detected() {
+        let audit = audit_file("static mut GLOBAL: u32 = 0;\nlet y = std::mem::transmute(x);\n");
+        assert_eq!(audit.static_mut, vec![1]);
+        assert_eq!(audit.transmute_count, 1);
+    }
+
+    #[test]
+    fn unsafe_impl_classified_and_requires_comment() {
+        let src = "unsafe impl Send for T {}\n";
+        let lines = strip_lines(src);
+        assert_eq!(find_unsafe_sites(&lines)[0].kind, UnsafeKind::Impl);
+        assert_eq!(audit_file(src).undocumented, vec![1]);
+        let ok = audit_file("// SAFETY: T owns its data.\nunsafe impl Send for T {}\n");
+        assert!(ok.undocumented.is_empty());
+    }
+
+    #[test]
+    fn budget_roundtrip() {
+        let mut unsafe_counts = BTreeMap::new();
+        unsafe_counts.insert("parallel/shared.rs".to_string(), 10);
+        let relaxed = BTreeMap::new();
+        let transmute = BTreeMap::new();
+        let rendered = render_budget(&unsafe_counts, &relaxed, &transmute);
+        let parsed = parse_budget(&rendered);
+        assert_eq!(parsed["unsafe"]["parallel/shared.rs"], 10);
+        assert!(parsed["relaxed"].is_empty());
+    }
+}
