@@ -1,0 +1,105 @@
+//! Remote serving: a wire client against an in-process `WireServer`.
+//!
+//! The network serving story end to end, self-contained in one process:
+//! boot the framed-TCP server on an OS-assigned port (exactly what
+//! `kaczmarz serve` does), then talk to it **only through TCP** with the
+//! [`serve::client`](kaczmarz::serve::client) helpers — the same calls
+//! `kaczmarz submit` makes from another machine. Three exchanges:
+//!
+//! 1. a normal job, streaming mid-solve `SAMPLE` frames to completion;
+//! 2. a job with a 1 ms deadline, refused *typed* (`deadline`) while a
+//!    sibling job right behind it still completes — lanes never poison;
+//! 3. an endless job cancelled from a second connection mid-solve.
+//!
+//! Run with: `cargo run --release --example remote_client`
+
+use kaczmarz::data::DatasetBuilder;
+use kaczmarz::serve::wire::SubmitFrame;
+use kaczmarz::serve::{
+    client, FrontEndConfig, RemoteOutcome, SolveFrontEnd, SystemRegistry, WireServer,
+};
+use std::sync::Arc;
+
+fn main() {
+    // Server side: two resident systems behind the LRU registry, two
+    // admission lanes, a bounded queue. Port 0 = let the OS pick.
+    let registry = Arc::new(SystemRegistry::new(256 << 20));
+    registry.insert("demo", DatasetBuilder::new(1200, 80).seed(1).consistent());
+    registry.insert("tiny", DatasetBuilder::new(200, 12).seed(2).consistent());
+    let front = Arc::new(SolveFrontEnd::new(
+        Arc::clone(&registry),
+        FrontEndConfig { lanes: 2, max_pending: 8 },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", front).expect("bind").spawn().expect("spawn");
+    let addr = server.addr();
+    println!("server up on {addr} ({} resident systems)\n", registry.len());
+
+    client::ping(addr).expect("server answers PING");
+
+    // 1. Normal job: stream it to completion. Every SAMPLE line rides an
+    // existing solve checkpoint — telemetry costs zero extra GEMVs.
+    println!("== streaming solve of 'demo'");
+    let mut frame = SubmitFrame::new("demo");
+    frame.tol = 1e-10;
+    frame.check = 64;
+    let (id, outcome) = client::submit_streaming(addr, &frame, |id, k, residual, ms| {
+        println!("  job {id}: k={k:<6} ||Ax-b||={residual:.3e} t={ms}ms");
+    })
+    .expect("transport");
+    match outcome {
+        RemoteOutcome::Done { iterations, converged, residual, queue_wait_ms, dropped } => {
+            println!(
+                "  job {id} done: {iterations} iterations, converged={converged}, \
+                 residual={residual:.3e}, queue_wait={queue_wait_ms}ms, dropped={dropped}\n"
+            );
+        }
+        other => panic!("expected Done, got {other:?}"),
+    }
+
+    // 2. Deadline: the budget starts at submit and is checked at the same
+    // solve checkpoints — the failure is a typed wire error, not a hang.
+    println!("== 1 ms deadline on an unsatisfiable tolerance");
+    let mut doomed = SubmitFrame::new("demo");
+    doomed.tol = 0.0;
+    doomed.check = 64;
+    doomed.max_iterations = Some(usize::MAX / 2);
+    doomed.deadline_ms = Some(1);
+    match client::submit_streaming(addr, &doomed, |_, _, _, _| {}).expect("transport") {
+        (id, RemoteOutcome::Failed { kind, msg }) => {
+            println!("  job {id} refused typed: kind={} msg={msg}", kind.token())
+        }
+        (_, other) => panic!("expected a typed deadline failure, got {other:?}"),
+    }
+    // The lane is healthy: a sibling submitted right after completes.
+    let (_, sibling) = client::submit_streaming(addr, &SubmitFrame::new("tiny"), |_, _, _, _| {})
+        .expect("transport");
+    println!("  sibling on 'tiny' right after: {sibling:?}\n");
+
+    // 3. Cancel mid-solve from a second connection: the callback gets the
+    // job id with its first sample, exactly so it can act on the job.
+    println!("== cancelling an endless job from a second connection");
+    let mut endless = SubmitFrame::new("demo");
+    endless.tol = 0.0;
+    endless.check = 64;
+    endless.max_iterations = Some(usize::MAX / 2);
+    let (id, outcome) = client::submit_streaming(addr, &endless, |id, _, _, _| {
+        // First sample proves the solve is running; repeat cancels are no-ops.
+        let _ = client::cancel(addr, id);
+    })
+    .expect("transport");
+    match outcome {
+        RemoteOutcome::Failed { kind, .. } => {
+            println!("  job {id} ended typed: kind={}", kind.token())
+        }
+        other => panic!("expected cancelled, got {other:?}"),
+    }
+
+    // Server-side accounting survives it all.
+    let stats = server.front().stats();
+    println!(
+        "\nfront-end stats: submitted={} completed={} cancelled={} deadline_missed={} \
+         rejected={}",
+        stats.submitted, stats.completed, stats.cancelled, stats.deadline_missed, stats.rejected
+    );
+    server.shutdown();
+}

@@ -27,6 +27,7 @@ use kaczmarz::parallel::shared::{AtomicF64Vec, SpinBarrier};
 use kaczmarz::parallel::WorkerPool;
 use kaczmarz::report::{json_string, Table};
 use kaczmarz::rng::{AliasTable, DiscreteDistribution, Mt19937};
+use kaczmarz::serve::{FrontEndConfig, SolveFrontEnd, SubmitRequest, SystemRegistry};
 use kaczmarz::solvers::rek::RekSolver;
 use kaczmarz::solvers::rk::RkSolver;
 use kaczmarz::solvers::rka::RkaSolver;
@@ -768,6 +769,95 @@ fn main() {
             t_batch / t_loop
         );
         checks.push(("batch serve bitwise vs looped solves".into(), bitwise));
+    }
+
+    // Serve load test: the admission front end under a burst of small jobs
+    // against resident systems — the wire server minus the sockets. N
+    // fixed-budget jobs land at once on a handful of lanes; the rows are
+    // end-to-end job throughput and the p50/p99 queue wait (submit →
+    // lane pickup), i.e. the latency the bounded queue itself adds under
+    // saturation. Timing never gates; the gate is conservation — every
+    // job comes back `Done` having spent its exact fixed budget, and the
+    // front-end counters balance. A lost, stuck, or double-counted job is
+    // a serving-layer bug regardless of how fast the lanes drained.
+    {
+        let n_jobs = if smoke { 400usize } else { 4000 };
+        let lanes = 4usize;
+        let names = ["serve-a", "serve-b", "serve-c", "serve-d"];
+        let registry = Arc::new(SystemRegistry::new(usize::MAX));
+        for (i, name) in names.iter().enumerate() {
+            registry
+                .insert(*name, DatasetBuilder::new(240, 32).seed(80 + i as u32).consistent());
+        }
+        let front = SolveFrontEnd::new(
+            Arc::clone(&registry),
+            FrontEndConfig { lanes, max_pending: n_jobs },
+        );
+        let opts = SolveOptions::default().with_fixed_iterations(60);
+        let sw = Stopwatch::start();
+        let mut ids = Vec::with_capacity(n_jobs);
+        for jx in 0..n_jobs {
+            let req = SubmitRequest::new(names[jx % names.len()], Arc::new(RkSolver::new(jx as u32)))
+                .with_opts(opts.clone());
+            ids.push(front.submit(req).expect("queue is sized for the whole burst"));
+        }
+        let mut waits: Vec<f64> = Vec::with_capacity(n_jobs);
+        let mut all_done = true;
+        for id in &ids {
+            match front.wait(*id, std::time::Duration::from_secs(600)) {
+                Some(kaczmarz::serve::JobStatus::Done(report)) => {
+                    all_done &= report.result.iterations == 60;
+                    waits.push(report.queue_wait.as_secs_f64());
+                }
+                _ => all_done = false,
+            }
+        }
+        let elapsed = sw.seconds();
+        waits.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if waits.is_empty() {
+                return f64::NAN;
+            }
+            waits[((waits.len() as f64 * p) as usize).min(waits.len() - 1)]
+        };
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        t.row(vec![
+            format!("serve burst end-to-end ({n_jobs} jobs, {lanes} lanes)"),
+            n_jobs.to_string(),
+            format!("{:.0}", elapsed / n_jobs as f64 * 1e9),
+            "-".into(),
+        ]);
+        t.row(vec![
+            format!("serve queue wait p50 ({n_jobs} jobs)"),
+            n_jobs.to_string(),
+            format!("{:.0}", p50 * 1e9),
+            "-".into(),
+        ]);
+        t.row(vec![
+            format!("serve queue wait p99 ({n_jobs} jobs)"),
+            n_jobs.to_string(),
+            format!("{:.0}", p99 * 1e9),
+            "-".into(),
+        ]);
+        println!(
+            "[serve-load jobs={n_jobs} lanes={lanes}] {:.0} jobs/s, queue wait p50 = {:.1} us, \
+             p99 = {:.1} us (timing informational; conservation gates)",
+            n_jobs as f64 / elapsed,
+            p50 * 1e6,
+            p99 * 1e6
+        );
+        let stats = front.stats();
+        let conserved = all_done
+            && waits.len() == n_jobs
+            && stats.submitted == n_jobs as u64
+            && stats.completed == n_jobs as u64
+            && stats.rejected == 0
+            && stats.cancelled == 0
+            && stats.deadline_missed == 0
+            && stats.failed_other == 0
+            && stats.dropped_samples == 0;
+        println!("[serve-load] conservation = {conserved} (must be true)");
+        checks.push(("serve load conservation (all jobs done, counters balance)".into(), conserved));
     }
 
     // Solver-zoo equivalence gates: `Weights::Uniform` must not be a new

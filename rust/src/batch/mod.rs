@@ -143,6 +143,20 @@ pub struct SolveReport {
     /// job's* system — the serving-meaningful quality number, available even
     /// when no reference solution is known.
     pub residual_norm: f64,
+    /// Time the job spent waiting for a lane before its solve started.
+    /// Zero for the in-process [`BatchSolver`]/[`SolveQueue`] paths, where
+    /// jobs start the moment a lane claims them inside one pool dispatch;
+    /// nonzero under the admission-queued serving front end
+    /// ([`crate::serve`]), where it is measured submit → dequeue and is the
+    /// p50/p99 latency number the load-test bench row reports.
+    pub queue_wait: std::time::Duration,
+    /// Telemetry samples this job's [`crate::metrics::ProgressSink`]
+    /// discarded under the drop-oldest policy (0 when no sink was attached,
+    /// or when the consumer kept up). A nonzero count means the *freshest*
+    /// samples were kept — the solve itself never blocked
+    /// ([`crate::metrics::ProgressReceiver::dropped`] sees the same
+    /// number).
+    pub dropped_samples: u64,
 }
 
 impl SolveReport {

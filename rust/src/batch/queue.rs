@@ -132,7 +132,17 @@ impl SolveQueue {
             let (system, opts) = &self.jobs[j];
             let result = solver.solve(system, opts);
             let residual_norm = system.residual_norm(&result.x);
-            SolveReport { job: j, solver: solver.name(), result, residual_norm }
+            // In-process queue: a lane claims the job inside the same pool
+            // dispatch that runs it, so there is no measurable queue wait.
+            let dropped_samples = opts.progress.as_ref().map_or(0, |s| s.dropped());
+            SolveReport {
+                job: j,
+                solver: solver.name(),
+                result,
+                residual_norm,
+                queue_wait: std::time::Duration::ZERO,
+                dropped_samples,
+            }
         }))
     }
 }

@@ -175,7 +175,18 @@ impl<'s, S: Solver + Sync> BatchSolver<'s, S> {
                 None => self.solver.solve(&sys, opts),
             };
             let residual_norm = sys.residual_norm(&result.x);
-            SolveReport { job: j, solver: self.solver.name(), result, residual_norm }
+            // Jobs start the moment a lane claims them (one pool dispatch),
+            // so queue wait is structurally zero here; the drop count comes
+            // from the job's own sink, when one was attached.
+            let dropped_samples = job.progress.as_ref().map_or(0, |s| s.dropped());
+            SolveReport {
+                job: j,
+                solver: self.solver.name(),
+                result,
+                residual_norm,
+                queue_wait: std::time::Duration::ZERO,
+                dropped_samples,
+            }
         }))
     }
 }

@@ -59,6 +59,32 @@ pub enum Error {
         engine: String,
     },
 
+    /// The serving front end's admission queue is full: the job was
+    /// rejected at submit time instead of being buffered unboundedly
+    /// (back-pressure by refusal — the pool never builds an invisible
+    /// backlog a slow client could hide behind).
+    Overloaded {
+        /// Jobs already waiting in the admission queue.
+        pending: usize,
+        /// The queue's configured depth bound.
+        capacity: usize,
+    },
+
+    /// A job's deadline elapsed — while it was still queued, or mid-solve
+    /// (the iterate loop noticed at a [`StopCheck`] checkpoint and halted
+    /// cooperatively). The clock starts at *submit*, so queue wait counts
+    /// against the budget.
+    ///
+    /// [`StopCheck`]: crate::solvers::SolveOptions
+    DeadlineExceeded {
+        /// The job's deadline budget, in milliseconds from submit.
+        budget_ms: u64,
+    },
+
+    /// The job was cancelled by the client (or by the server on behalf of a
+    /// disconnected client) before it finished.
+    Cancelled,
+
     /// Missing AOT artifact (run `make artifacts`).
     ArtifactMissing(String),
 
@@ -96,6 +122,15 @@ impl fmt::Display for Error {
                 "unsupported sampling: '{engine}' cannot run the greedy Motzkin scan \
                  (sequential rk/rka/rkab only)"
             ),
+            Error::Overloaded { pending, capacity } => write!(
+                f,
+                "overloaded: admission queue is full ({pending} pending, capacity {capacity}); \
+                 retry with backoff"
+            ),
+            Error::DeadlineExceeded { budget_ms } => {
+                write!(f, "deadline exceeded: job budget of {budget_ms} ms elapsed before completion")
+            }
+            Error::Cancelled => write!(f, "cancelled: job was cancelled before completion"),
             Error::ArtifactMissing(what) => {
                 write!(f, "artifact not found: {what} (run `make artifacts`)")
             }
@@ -168,6 +203,28 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("rka-par"));
         assert!(s.contains("greedy"));
+    }
+
+    #[test]
+    fn error_display_overloaded() {
+        let e = Error::Overloaded { pending: 64, capacity: 64 };
+        let s = e.to_string();
+        assert!(s.contains("overloaded"));
+        assert!(s.contains("64 pending"));
+        assert!(s.contains("capacity 64"));
+    }
+
+    #[test]
+    fn error_display_deadline_exceeded() {
+        let e = Error::DeadlineExceeded { budget_ms: 250 };
+        let s = e.to_string();
+        assert!(s.contains("deadline exceeded"));
+        assert!(s.contains("250 ms"));
+    }
+
+    #[test]
+    fn error_display_cancelled() {
+        assert!(Error::Cancelled.to_string().contains("cancelled"));
     }
 
     #[test]

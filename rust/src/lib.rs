@@ -57,6 +57,7 @@ pub mod parallel;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 
 pub use error::{Error, Result};

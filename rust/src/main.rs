@@ -36,6 +36,26 @@
 //!                                (autotune_block_size_residual); persists
 //!                                the picks (default kaczmarz-tune.json)
 //!                                and applies them to this process
+//!   serve [--addr a] [--capacity-mb n] [--lanes n] [--max-pending n]
+//!         [--preload name:MxN:seed,...]
+//!                                boot the framed-TCP serving front end:
+//!                                preloaded systems become resident in the
+//!                                LRU registry, solves run on persistent
+//!                                lanes behind a bounded admission queue
+//!                                (SUBMIT/POLL/CANCEL/STATS/PING wire
+//!                                frames, newline-delimited)
+//!   submit [--addr a] [--system s] [--solver rk|rek|ck] [--seed n]
+//!          [--tol t] [--check k] [--fixed n] [--max-iterations n]
+//!          [--deadline-ms n] [--cancel-after k] [--min-samples k]
+//!          [--expect-error kind]
+//!                                submit one job to a running server and
+//!                                stream its mid-solve samples; the assert
+//!                                flags make it a smoke-test client (exit 1
+//!                                when fewer than --min-samples samples
+//!                                arrived, or when the outcome does not
+//!                                match --expect-error / clean completion);
+//!                                --cancel-after k cancels the job from a
+//!                                second connection after the k-th sample
 //!   info                         version, kernel flavor (avx2+fma or
 //!                                scalar; KACZMARZ_KERNEL=scalar forces the
 //!                                bitwise reference path), gemv panel, core
@@ -53,6 +73,8 @@ use kaczmarz::coordinator::{
 use kaczmarz::data::DatasetBuilder;
 use kaczmarz::parallel::{AsyRkSolver, ParallelRka, ParallelRkab};
 use kaczmarz::runtime::{default_artifacts_dir, Manifest, PjrtRkabSolver};
+use kaczmarz::serve::wire::SubmitFrame;
+use kaczmarz::serve::{client, FrontEndConfig, RemoteOutcome, SolveFrontEnd, SystemRegistry, WireServer};
 use kaczmarz::solvers::ck::CkSolver;
 use kaczmarz::solvers::rek::RekSolver;
 use kaczmarz::solvers::rk::RkSolver;
@@ -70,9 +92,14 @@ fn main() {
         "all" => cmd_all(&args),
         "solve" => cmd_solve(&args, &tuned),
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "info" | "" => cmd_info(&tuned),
         other => {
-            eprintln!("unknown command '{other}'; try: list, experiment, all, solve, tune, info");
+            eprintln!(
+                "unknown command '{other}'; try: list, experiment, all, solve, tune, \
+                 serve, submit, info"
+            );
             std::process::exit(2);
         }
     }
@@ -410,6 +437,146 @@ fn cmd_solve(args: &Args, tuned: &TunedParams) {
         }
     };
     print_result(&method, sys.error_sq(&r.x), &r);
+}
+
+/// Parse a `--preload` entry `name:MxN:seed` (seed optional, default 1).
+fn parse_preload(spec: &str) -> Option<(String, usize, usize, u32)> {
+    let (name, rest) = spec.split_once(':')?;
+    let (shape, seed) = match rest.split_once(':') {
+        Some((shape, seed)) => (shape, seed.parse().ok()?),
+        None => (rest, 1u32),
+    };
+    let (m, n) = shape.split_once('x')?;
+    Some((name.to_string(), m.parse().ok()?, n.parse().ok()?, seed))
+}
+
+/// `kaczmarz serve`: boot the framed-TCP serving front end and run until
+/// killed. Preloaded systems are generated consistent (known x*), resident
+/// in the LRU registry, and served by persistent admission lanes.
+fn cmd_serve(args: &Args) {
+    let addr = args.get("addr", "127.0.0.1:7070");
+    let capacity_mb = args.get_parse("capacity-mb", 512usize);
+    let lanes = args.get_parse(
+        "lanes",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    );
+    let max_pending = args.get_parse("max-pending", 64usize);
+    let preload = args.get("preload", "demo:2000x200:1");
+
+    let registry = std::sync::Arc::new(SystemRegistry::new(capacity_mb.saturating_mul(1 << 20)));
+    for spec in preload.split(',').filter(|s| !s.trim().is_empty()) {
+        let Some((name, m, n, seed)) = parse_preload(spec.trim()) else {
+            eprintln!("bad --preload entry '{spec}'; want name:MxN:seed");
+            std::process::exit(2);
+        };
+        eprintln!("loading resident system '{name}': {m} x {n} (seed {seed})...");
+        let evicted = registry.insert(&name, DatasetBuilder::new(m, n).seed(seed).consistent());
+        for gone in evicted {
+            eprintln!("evicted '{gone}' (LRU, over {capacity_mb} MB budget)");
+        }
+    }
+    let front = std::sync::Arc::new(SolveFrontEnd::new(
+        registry,
+        FrontEndConfig { lanes, max_pending },
+    ));
+    let server = match WireServer::bind(&addr, front) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let handle = match server.spawn() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("cannot start accept loop: {e}");
+            std::process::exit(1);
+        }
+    };
+    // stdout so scripts can scrape the resolved address (port 0 supported).
+    println!("serving on {}", handle.addr());
+    println!("lanes={lanes} max_pending={max_pending} capacity_mb={capacity_mb}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `kaczmarz submit`: one streaming job against a running server, with
+/// smoke-test assertions baked in (see the module docs).
+fn cmd_submit(args: &Args) {
+    let addr = args.get("addr", "127.0.0.1:7070");
+    let mut frame = SubmitFrame::new(args.get("system", "demo"));
+    frame.solver = args.get("solver", "rk");
+    frame.seed = args.get_parse("seed", 0u32);
+    frame.tol = args.get_parse("tol", 1e-8);
+    frame.check = args.get_parse("check", 32usize);
+    if args.has("max-iterations") {
+        frame.max_iterations = Some(args.get_parse("max-iterations", 0usize));
+    }
+    if args.has("fixed") {
+        frame.fixed_iterations = Some(args.get_parse("fixed", 0usize));
+    }
+    if args.has("deadline-ms") {
+        frame.deadline_ms = Some(args.get_parse("deadline-ms", 0u64));
+    }
+    let cancel_after = args.get_parse("cancel-after", 0usize); // 0 = never
+    let min_samples = args.get_parse("min-samples", 0usize);
+    let expect_error = args.get("expect-error", "");
+
+    let cancel_addr = addr.clone();
+    let mut samples = 0usize;
+    let outcome = client::submit_streaming(&addr, &frame, |id, k, residual, ms| {
+        samples += 1;
+        println!("sample id={id} k={k} residual={residual:.6e} t={ms}ms");
+        if cancel_after > 0 && samples == cancel_after {
+            match client::cancel(&cancel_addr, id) {
+                Ok(applied) => eprintln!("cancel sent for job {id} (applied={applied})"),
+                Err(e) => eprintln!("cancel for job {id} failed: {e}"),
+            }
+        }
+    });
+    let (id, outcome) = match outcome {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("submit failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    match &outcome {
+        RemoteOutcome::Done { iterations, converged, residual, queue_wait_ms, dropped } => {
+            println!(
+                "done id={id} iterations={iterations} converged={converged} \
+                 residual={residual:.6e} queue_wait_ms={queue_wait_ms} dropped={dropped}"
+            );
+        }
+        RemoteOutcome::Failed { kind, msg } => {
+            println!("failed id={id} kind={} msg={msg}", kind.token());
+        }
+    }
+
+    // Smoke assertions: exit 1 on any violated expectation.
+    let mut ok = true;
+    if samples < min_samples {
+        eprintln!("ASSERT FAILED: streamed {samples} samples, need >= {min_samples}");
+        ok = false;
+    }
+    if expect_error.is_empty() {
+        if !matches!(outcome, RemoteOutcome::Done { .. }) {
+            eprintln!("ASSERT FAILED: expected clean completion, got {outcome:?}");
+            ok = false;
+        }
+    } else {
+        match &outcome {
+            RemoteOutcome::Failed { kind, .. } if kind.token() == expect_error => {}
+            other => {
+                eprintln!("ASSERT FAILED: expected error kind '{expect_error}', got {other:?}");
+                ok = false;
+            }
+        }
+    }
+    if !ok {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_info(tuned: &TunedParams) {

@@ -170,6 +170,18 @@ impl ProgressSink {
         )
     }
 
+    /// Samples this sink has discarded so far under the drop-oldest policy
+    /// (always 0 for the callback flavor, which has no queue to overflow).
+    /// The serving layer reads this after a job finishes to surface the
+    /// count in `SolveReport::dropped_samples` — same number the consumer
+    /// side sees via [`ProgressReceiver::dropped`].
+    pub fn dropped(&self) -> u64 {
+        match &self.kind {
+            SinkKind::Callback(_) => 0,
+            SinkKind::Channel(c) => c.state.lock().unwrap().dropped,
+        }
+    }
+
     /// Push one sample into the sink (called by the solve's `StopCheck` at
     /// its checkpoints). Never blocks on a consumer: the callback flavor
     /// runs inline, the channel flavor drops the oldest queued sample when
@@ -306,10 +318,21 @@ mod tests {
         for k in 0..10 {
             sink.emit(sample(k, 0.0)); // never blocks, no consumer running
         }
+        // Producer and consumer sides agree on the drop count.
+        assert_eq!(sink.dropped(), 7);
         let got = rx.drain();
         // Freshest three survive; seven oldest were dropped.
         assert_eq!(got.iter().map(|s| s.k).collect::<Vec<_>>(), vec![7, 8, 9]);
         assert_eq!(rx.dropped(), 7);
+    }
+
+    #[test]
+    fn callback_sink_reports_zero_dropped() {
+        let sink = ProgressSink::callback(|_| {});
+        for k in 0..5 {
+            sink.emit(sample(k, 0.0));
+        }
+        assert_eq!(sink.dropped(), 0);
     }
 
     #[test]

@@ -188,6 +188,13 @@ impl Solver for AsyRkSolver {
                 }
                 let mut last_recorded = usize::MAX;
                 while !converged && !diverged {
+                    // Cooperative halt (cancel / deadline token): the async
+                    // engine's checkpoint is the monitor poll, so the token
+                    // is consulted here — workers are then stopped through
+                    // the normal shutdown signal below.
+                    if stopper.halt_requested() {
+                        break;
+                    }
                     let done = signal.updates();
                     let tick = if step > 0 { done / step } else { 0 };
                     let record = step > 0 && tick != last_recorded;

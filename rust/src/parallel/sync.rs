@@ -26,14 +26,14 @@
 //! covering it.
 
 #[cfg(loom)]
-pub(crate) use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+pub(crate) use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 #[cfg(loom)]
 pub(crate) use loom::sync::{Arc, Condvar, Mutex};
 #[cfg(loom)]
 pub(crate) use loom::thread;
 
 #[cfg(not(loom))]
-pub(crate) use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+pub(crate) use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 #[cfg(not(loom))]
 pub(crate) use std::sync::{Arc, Condvar, Mutex};
 #[cfg(not(loom))]

@@ -1,0 +1,685 @@
+//! Admission-controlled asynchronous submission path: bounded queue depth,
+//! per-job deadlines, cooperative cancellation, and queue-wait accounting.
+//!
+//! [`SolveQueue`](crate::batch::SolveQueue) answers "run these N jobs and
+//! give me N reports" — a *synchronous* shape. A serving front end faces a
+//! different one: jobs arrive whenever clients feel like it, clients
+//! disappear, and the worst failure mode is an invisible backlog. The
+//! [`SolveFrontEnd`] applies the same discipline the drop-oldest
+//! [`ProgressSink`](crate::metrics::ProgressSink) applies to telemetry —
+//! *never block, never buffer unboundedly* — to admission itself:
+//!
+//! - **Bounded queue depth.** [`SolveFrontEnd::submit`] either enqueues the
+//!   job or refuses it with the typed
+//!   [`Error::Overloaded`](crate::error::Error::Overloaded) — back-pressure
+//!   by refusal, visible to the client, instead of a queue that grows until
+//!   every admitted job's latency is unbounded.
+//! - **Per-job deadlines.** A deadline budget is armed **at submit** (queue
+//!   wait counts against it; see [`SolveControl::with_deadline`]). A job
+//!   whose deadline lapses while queued fails at dequeue without touching a
+//!   lane; one that lapses mid-solve halts at its next
+//!   `StopCheck` checkpoint. Either way the client gets the typed
+//!   [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded) and
+//!   the lane moves on to the next job.
+//! - **Cooperative cancellation.** [`SolveFrontEnd::cancel`] flips the
+//!   job's [`SolveControl`]; a running solve stops consuming checkpoints at
+//!   its next poll, a queued job is discarded at dequeue. No thread is ever
+//!   killed — an abandoned client costs at most one checkpoint interval.
+//! - **Queue-wait and dropped-sample accounting.** Every completed job's
+//!   [`SolveReport`] carries `queue_wait` (submit → dequeue) and
+//!   `dropped_samples` (its sink's drop-oldest count); the front end's
+//!   [`FrontStats`] aggregate the conservation totals the property tests
+//!   and the load-test bench row check.
+//!
+//! ## Threading model
+//!
+//! Lanes are **persistent threads spawned once** at construction — the
+//! crate-wide zero-per-solve-spawn discipline, in the only shape an
+//! open-ended server can use it (the [`WorkerPool`]'s `run` is a barrier
+//! dispatch: it returns when its closure set finishes, which a server never
+//! does). Each lane runs jobs sequentially with the crate's sequential
+//! solvers; per-job parallel solvers would need a dedicated pool per lane
+//! (see the [`crate::batch`] docs on pool nesting) and are the wrong shape
+//! for throughput serving anyway — scale with in-flight jobs, not threads
+//! per job.
+//!
+//! [`WorkerPool`]: crate::parallel::pool::WorkerPool
+
+use super::control::{Halt, SolveControl};
+use super::registry::SystemRegistry;
+use crate::batch::SolveReport;
+use crate::data::LinearSystem;
+use crate::error::{Error, Result};
+use crate::solvers::{SolveOptions, Solver};
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Sizing knobs for a [`SolveFrontEnd`].
+#[derive(Clone, Copy, Debug)]
+pub struct FrontEndConfig {
+    /// Persistent worker lanes (concurrent solves). Defaults to the host's
+    /// hardware thread count.
+    pub lanes: usize,
+    /// Admission bound: jobs allowed to *wait* (running jobs do not count).
+    /// A submit that finds this many pending is refused with
+    /// [`Error::Overloaded`](crate::error::Error::Overloaded).
+    pub max_pending: usize,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> Self {
+        FrontEndConfig {
+            lanes: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            max_pending: 64,
+        }
+    }
+}
+
+/// One job submission: which resident system, which solver, what options.
+pub struct SubmitRequest {
+    /// Registry name of the system to solve (resolved at submit time; the
+    /// job keeps its `Arc`, so a later eviction cannot invalidate it).
+    pub system: String,
+    /// Optional right-hand-side override. When set, the lane solves a cheap
+    /// clone of the resident system (`Arc`-backed matrix storage — the big
+    /// allocation is still shared) with this `b` swapped in and the
+    /// reference cleared, exactly like [`crate::batch::BatchSolver`] lanes.
+    pub rhs: Option<Vec<f64>>,
+    /// Per-job solver (shared trait object — one solver instance can serve
+    /// many jobs concurrently; `solve` takes `&self`).
+    pub solver: Arc<dyn Solver + Send + Sync>,
+    /// Solve options. Serving jobs default to residual stopping (the
+    /// reference-free criterion); any `control` token set here is replaced
+    /// by the front end's own (which [`SolveFrontEnd::cancel`] drives).
+    pub opts: SolveOptions,
+    /// Deadline budget measured from submit (`None` = no deadline).
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitRequest {
+    /// A request against resident system `system` with serving defaults:
+    /// residual stopping at `1e-8`, checked every 32 iterations.
+    pub fn new(system: impl Into<String>, solver: Arc<dyn Solver + Send + Sync>) -> Self {
+        SubmitRequest {
+            system: system.into(),
+            rhs: None,
+            solver,
+            opts: SolveOptions::default().with_residual_stopping(1e-8, 32),
+            deadline: None,
+        }
+    }
+
+    /// Replace the solve options.
+    pub fn with_opts(mut self, opts: SolveOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Solve with this right-hand side instead of the resident one.
+    pub fn with_rhs(mut self, rhs: Vec<f64>) -> Self {
+        self.rhs = Some(rhs);
+        self
+    }
+
+    /// Give the job `budget` from submit to completion.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+}
+
+impl fmt::Debug for SubmitRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SubmitRequest")
+            .field("system", &self.system)
+            .field("solver", &self.solver.name())
+            .field("rhs_override", &self.rhs.is_some())
+            .field("deadline", &self.deadline)
+            .finish()
+    }
+}
+
+/// Where a submitted job currently stands.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Waiting for a lane.
+    Queued,
+    /// A lane is solving it right now.
+    Running,
+    /// Finished; the report carries the solve outcome plus the serving
+    /// stats (`queue_wait`, `dropped_samples`).
+    Done(SolveReport),
+    /// Refused or halted with a typed error (`Cancelled`,
+    /// `DeadlineExceeded`, or a validation failure observed at dequeue).
+    /// `Arc`-wrapped because [`Error`] is deliberately not `Clone` and
+    /// status snapshots are.
+    Failed(Arc<Error>),
+}
+
+impl JobStatus {
+    /// Done or Failed — nothing further will happen to this job.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done(_) | JobStatus::Failed(_))
+    }
+}
+
+/// Aggregate counters over a front end's lifetime. Conservation invariant
+/// (once every accepted job is terminal):
+/// `submitted == completed + cancelled + deadline_missed + failed_other`.
+/// Refused submissions count in `rejected` only — they were never admitted.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    /// Jobs accepted into the queue.
+    pub submitted: u64,
+    /// Submissions refused with `Overloaded`.
+    pub rejected: u64,
+    /// Jobs that finished with a report.
+    pub completed: u64,
+    /// Jobs that ended `Cancelled`.
+    pub cancelled: u64,
+    /// Jobs that ended `DeadlineExceeded` (queued or mid-solve).
+    pub deadline_missed: u64,
+    /// Jobs that failed for any other reason.
+    pub failed_other: u64,
+    /// Sum of `dropped_samples` over completed jobs (telemetry the
+    /// drop-oldest sinks shed; the solves themselves never blocked).
+    pub dropped_samples: u64,
+}
+
+struct QueuedJob {
+    id: u64,
+    request: SubmitRequest,
+    system: Arc<LinearSystem>,
+    control: SolveControl,
+    submitted: Instant,
+}
+
+struct State {
+    queue: VecDeque<QueuedJob>,
+    jobs: HashMap<u64, (JobStatus, SolveControl)>,
+    next_id: u64,
+    stats: FrontStats,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Lanes wait here for work (or shutdown).
+    work_ready: Condvar,
+    /// Waiters in [`SolveFrontEnd::wait`] park here for terminal statuses.
+    job_done: Condvar,
+    max_pending: usize,
+}
+
+/// The admission-controlled serving front end (see [module docs](self)).
+pub struct SolveFrontEnd {
+    registry: Arc<SystemRegistry>,
+    shared: Arc<Shared>,
+    lanes: Vec<JoinHandle<()>>,
+}
+
+impl SolveFrontEnd {
+    /// Boot a front end over `registry`: spawns `config.lanes` persistent
+    /// lane threads (once — never again per job).
+    pub fn new(registry: Arc<SystemRegistry>, config: FrontEndConfig) -> Self {
+        let lanes_n = config.lanes.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                next_id: 0,
+                stats: FrontStats::default(),
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            job_done: Condvar::new(),
+            max_pending: config.max_pending.max(1),
+        });
+        let lanes = (0..lanes_n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("kaczmarz-serve-{i}"))
+                    .spawn(move || lane_loop(&shared))
+                    .expect("spawn serve lane")
+            })
+            .collect();
+        SolveFrontEnd { registry, shared, lanes }
+    }
+
+    /// The registry this front end serves from.
+    pub fn registry(&self) -> &Arc<SystemRegistry> {
+        &self.registry
+    }
+
+    /// Submit a job. Validates admission-synchronously (unknown system,
+    /// rhs shape, reference-consulting options on a reference-free setup)
+    /// and refuses with [`Error::Overloaded`] when `max_pending` jobs are
+    /// already waiting; otherwise returns the job id to poll/cancel with.
+    /// The deadline clock starts now, not at dequeue.
+    pub fn submit(&self, request: SubmitRequest) -> Result<u64> {
+        // Resolve + validate before taking the queue lock: the registry has
+        // its own lock and the checks are read-only.
+        let system = self.registry.get(&request.system).ok_or_else(|| {
+            Error::InvalidArgument(format!(
+                "no resident system named '{}' (see the registry's names_by_recency)",
+                request.system
+            ))
+        })?;
+        if let Some(rhs) = &request.rhs {
+            if rhs.len() != system.rows() {
+                return Err(Error::Dimension(format!(
+                    "rhs override of len {} does not match system '{}' with {} rows",
+                    rhs.len(),
+                    request.system,
+                    system.rows()
+                )));
+            }
+            if request.opts.consults_reference() {
+                return Err(Error::InvalidArgument(
+                    "an rhs-override job has no reference solution, so reference-error \
+                     stopping is unavailable (stop on the residual or fix the iteration \
+                     budget)"
+                        .into(),
+                ));
+            }
+        } else if system.reference_solution().is_none() && request.opts.consults_reference() {
+            return Err(Error::InvalidArgument(format!(
+                "resident system '{}' has no reference solution, so reference-error \
+                 stopping is unavailable (stop on the residual or fix the iteration budget)",
+                request.system
+            )));
+        }
+
+        let control = match request.deadline {
+            Some(budget) => SolveControl::with_deadline(budget),
+            None => SolveControl::new(),
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return Err(Error::InvalidArgument("front end is shut down".into()));
+        }
+        if st.queue.len() >= self.shared.max_pending {
+            st.stats.rejected += 1;
+            return Err(Error::Overloaded {
+                pending: st.queue.len(),
+                capacity: self.shared.max_pending,
+            });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.stats.submitted += 1;
+        st.jobs.insert(id, (JobStatus::Queued, control.clone()));
+        st.queue.push_back(QueuedJob {
+            id,
+            request,
+            system,
+            control,
+            submitted: Instant::now(),
+        });
+        drop(st);
+        self.shared.work_ready.notify_one();
+        Ok(id)
+    }
+
+    /// Request cancellation of a job. Returns `true` when the job exists
+    /// and was not yet terminal (the cancel may still lose the race against
+    /// completion — poll the final status to know). Queued jobs are
+    /// discarded at dequeue; running jobs halt at their next checkpoint.
+    pub fn cancel(&self, id: u64) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        match st.jobs.get(&id) {
+            Some((status, control)) if !status.is_terminal() => {
+                control.cancel();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Snapshot of a job's current status (`None` for unknown ids).
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.shared.state.lock().unwrap().jobs.get(&id).map(|(s, _)| s.clone())
+    }
+
+    /// Block until the job reaches a terminal status, up to `timeout`.
+    /// Returns the status at return time — check
+    /// [`JobStatus::is_terminal`] to distinguish completion from timeout.
+    pub fn wait(&self, id: u64, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            match st.jobs.get(&id) {
+                None => return None,
+                Some((s, _)) if s.is_terminal() => return Some(s.clone()),
+                Some((s, _)) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Some(s.clone());
+                    }
+                    let (guard, _) =
+                        self.shared.job_done.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+
+    /// Drop a terminal job's record (frees the status map entry). `true`
+    /// when something was forgotten; running/queued jobs are refused.
+    pub fn forget(&self, id: u64) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        match st.jobs.get(&id) {
+            Some((s, _)) if s.is_terminal() => {
+                st.jobs.remove(&id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Jobs currently waiting for a lane.
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Aggregate lifetime counters.
+    pub fn stats(&self) -> FrontStats {
+        self.shared.state.lock().unwrap().stats.clone()
+    }
+}
+
+impl Drop for SolveFrontEnd {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            // Cancel whatever is still queued or running so lanes drain
+            // promptly instead of finishing long solves nobody can observe.
+            for (_, (status, control)) in st.jobs.iter() {
+                if !status.is_terminal() {
+                    control.cancel();
+                }
+            }
+        }
+        self.shared.work_ready.notify_all();
+        for lane in self.lanes.drain(..) {
+            let _ = lane.join();
+        }
+    }
+}
+
+impl fmt::Debug for SolveFrontEnd {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.shared.state.lock().unwrap();
+        f.debug_struct("SolveFrontEnd")
+            .field("lanes", &self.lanes.len())
+            .field("pending", &st.queue.len())
+            .field("max_pending", &self.shared.max_pending)
+            .field("stats", &st.stats)
+            .finish()
+    }
+}
+
+/// Map a halt reason onto the crate's typed error.
+fn halt_error(halt: Halt, control: &SolveControl) -> Error {
+    match halt {
+        Halt::Cancelled => Error::Cancelled,
+        Halt::DeadlineExceeded => Error::DeadlineExceeded {
+            budget_ms: control.deadline_budget().map_or(0, |d| d.as_millis() as u64),
+        },
+    }
+}
+
+/// One persistent lane: dequeue, pre-check the control token, solve with it
+/// attached, publish the outcome. Runs until shutdown.
+fn lane_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    if let Some((status, _)) = st.jobs.get_mut(&job.id) {
+                        *status = JobStatus::Running;
+                    }
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        let queue_wait = job.submitted.elapsed();
+
+        // Pre-flight: a deadline that lapsed while queued (or a cancel that
+        // arrived first) fails the job here, before any solve work.
+        let status = match job.control.poll() {
+            Some(halt) => JobStatus::Failed(Arc::new(halt_error(halt, &job.control))),
+            None => run_job(&job, queue_wait),
+        };
+
+        let mut st = shared.state.lock().unwrap();
+        match &status {
+            JobStatus::Done(report) => {
+                st.stats.completed += 1;
+                st.stats.dropped_samples += report.dropped_samples;
+            }
+            JobStatus::Failed(e) => match **e {
+                Error::Cancelled => st.stats.cancelled += 1,
+                Error::DeadlineExceeded { .. } => st.stats.deadline_missed += 1,
+                _ => st.stats.failed_other += 1,
+            },
+            _ => unreachable!("lane outcomes are terminal"),
+        }
+        if let Some((slot, _)) = st.jobs.get_mut(&job.id) {
+            *slot = status;
+        }
+        drop(st);
+        shared.job_done.notify_all();
+    }
+}
+
+/// Solve one admitted job on the calling lane.
+fn run_job(job: &QueuedJob, queue_wait: Duration) -> JobStatus {
+    // The front end's control token rides in the options so the solve's
+    // StopCheck checkpoints poll it; any client-supplied token is replaced
+    // (documented on `SubmitRequest::opts`).
+    let opts = job.request.opts.clone().with_control(job.control.clone());
+    let result = match &job.request.rhs {
+        Some(rhs) => {
+            // Cheap per-job clone: matrix storage is Arc-backed, only the
+            // O(m)/O(n) side vectors are copied (the BatchSolver pattern).
+            let mut sys = (*job.system).clone();
+            sys.b.copy_from_slice(rhs);
+            sys.x_true = None;
+            sys.x_ls = None;
+            sys.consistent = true;
+            let result = job.request.solver.solve(&sys, &opts);
+            match job.control.halted() {
+                Some(halt) => return JobStatus::Failed(Arc::new(halt_error(halt, &job.control))),
+                None => {
+                    let residual_norm = sys.residual_norm(&result.x);
+                    return done_report(job, result, residual_norm, queue_wait, &opts);
+                }
+            }
+        }
+        None => job.request.solver.solve(&job.system, &opts),
+    };
+    match job.control.halted() {
+        Some(halt) => JobStatus::Failed(Arc::new(halt_error(halt, &job.control))),
+        None => {
+            let residual_norm = job.system.residual_norm(&result.x);
+            done_report(job, result, residual_norm, queue_wait, &opts)
+        }
+    }
+}
+
+fn done_report(
+    job: &QueuedJob,
+    result: crate::solvers::SolveResult,
+    residual_norm: f64,
+    queue_wait: Duration,
+    opts: &SolveOptions,
+) -> JobStatus {
+    let dropped_samples = opts.progress.as_ref().map_or(0, |s| s.dropped());
+    JobStatus::Done(SolveReport {
+        job: job.id as usize,
+        solver: job.request.solver.name(),
+        result,
+        residual_norm,
+        queue_wait,
+        dropped_samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::solvers::rk::RkSolver;
+
+    fn registry_with(name: &str, m: usize, n: usize) -> Arc<SystemRegistry> {
+        let reg = Arc::new(SystemRegistry::new(usize::MAX));
+        reg.insert(name, DatasetBuilder::new(m, n).seed(1).consistent());
+        reg
+    }
+
+    fn rk() -> Arc<dyn Solver + Send + Sync> {
+        Arc::new(RkSolver::new(7))
+    }
+
+    /// A request that converges quickly on the resident system.
+    fn quick(system: &str) -> SubmitRequest {
+        SubmitRequest::new(system, rk())
+            .with_opts(SolveOptions::default().with_residual_stopping(1e-8, 16))
+    }
+
+    /// A request that can never satisfy its tolerance (runs until halted or
+    /// the max-iteration cap).
+    fn endless(system: &str) -> SubmitRequest {
+        SubmitRequest::new(system, rk()).with_opts(
+            SolveOptions::default()
+                .with_residual_stopping(0.0, 16)
+                .with_max_iterations(usize::MAX / 2),
+        )
+    }
+
+    #[test]
+    fn submit_wait_done_roundtrip() {
+        let front = SolveFrontEnd::new(
+            registry_with("demo", 120, 8),
+            FrontEndConfig { lanes: 2, max_pending: 8 },
+        );
+        let id = front.submit(quick("demo")).unwrap();
+        let status = front.wait(id, Duration::from_secs(60)).expect("known id");
+        match status {
+            JobStatus::Done(report) => {
+                assert!(report.result.converged);
+                assert!(report.residual_norm < 1e-3);
+                assert_eq!(report.job, id as usize);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        let stats = front.stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn unknown_system_and_bad_rhs_are_refused_at_submit() {
+        let front = SolveFrontEnd::new(registry_with("demo", 60, 6), FrontEndConfig::default());
+        let err = front.submit(quick("nope")).unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+        let err = front.submit(quick("demo").with_rhs(vec![0.0; 3])).unwrap_err();
+        assert!(matches!(err, Error::Dimension(_)), "{err:?}");
+        // rhs override + reference-error stopping: no reference to consult.
+        let err = front
+            .submit(
+                SubmitRequest::new("demo", rk())
+                    .with_opts(SolveOptions::default())
+                    .with_rhs(vec![0.0; 60]),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err:?}");
+    }
+
+    #[test]
+    fn rhs_override_solves_against_the_override() {
+        let front = SolveFrontEnd::new(registry_with("demo", 120, 8), FrontEndConfig::default());
+        let reg = Arc::clone(front.registry());
+        let sys = reg.get("demo").unwrap();
+        // b = A * (2,2,...,2): the solve must recover that x, not the
+        // resident one.
+        let x_want = vec![2.0; sys.cols()];
+        let rhs = crate::linalg::gemv(&sys.a, &x_want).unwrap();
+        let id = front.submit(quick("demo").with_rhs(rhs)).unwrap();
+        match front.wait(id, Duration::from_secs(60)).unwrap() {
+            JobStatus::Done(report) => {
+                assert!(report.result.converged);
+                let err: f64 = report
+                    .result
+                    .x
+                    .iter()
+                    .zip(&x_want)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(err < 1e-6, "recovered wrong solution, err^2 = {err:.3e}");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancelled_queued_job_fails_without_running() {
+        // One lane, blocked by an endless job: the second job sits queued,
+        // gets cancelled, and must fail typed at dequeue.
+        let front = SolveFrontEnd::new(
+            registry_with("demo", 120, 8),
+            FrontEndConfig { lanes: 1, max_pending: 8 },
+        );
+        let blocker = front.submit(endless("demo")).unwrap();
+        let queued = front.submit(quick("demo")).unwrap();
+        assert!(front.cancel(queued));
+        assert!(front.cancel(blocker));
+        for id in [blocker, queued] {
+            match front.wait(id, Duration::from_secs(60)).unwrap() {
+                JobStatus::Failed(e) => assert!(matches!(*e, Error::Cancelled), "{e}"),
+                other => panic!("expected Failed(Cancelled), got {other:?}"),
+            }
+        }
+        let stats = front.stats();
+        assert_eq!(stats.cancelled, 2);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn cancel_unknown_or_finished_returns_false() {
+        let front = SolveFrontEnd::new(registry_with("demo", 120, 8), FrontEndConfig::default());
+        assert!(!front.cancel(999));
+        let id = front.submit(quick("demo")).unwrap();
+        assert!(front.wait(id, Duration::from_secs(60)).unwrap().is_terminal());
+        assert!(!front.cancel(id));
+        // Terminal jobs can be forgotten exactly once.
+        assert!(front.forget(id));
+        assert!(!front.forget(id));
+        assert!(front.status(id).is_none());
+    }
+
+    #[test]
+    fn shutdown_drains_lanes_even_with_endless_jobs() {
+        let front = SolveFrontEnd::new(
+            registry_with("demo", 120, 8),
+            FrontEndConfig { lanes: 2, max_pending: 8 },
+        );
+        for _ in 0..4 {
+            front.submit(endless("demo")).unwrap();
+        }
+        // Drop must cancel-and-join promptly rather than waiting out
+        // usize::MAX/2 iterations. (A hang here fails the test by timeout.)
+        drop(front);
+    }
+}

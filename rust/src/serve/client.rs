@@ -1,0 +1,263 @@
+//! Minimal wire client: submit, stream, poll, cancel over framed TCP.
+//!
+//! This is the library behind `kaczmarz submit` — and a reference for what
+//! any client in any language needs: open a TCP connection, write one
+//! `SUBMIT` line, read newline-delimited frames back. No handshake, no
+//! binary framing, no state beyond the job id.
+
+use super::wire::{self, ErrKind, Reply, Request, SubmitFrame};
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Terminal outcome of a remote job, as reported over the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RemoteOutcome {
+    /// The job finished with a report.
+    Done {
+        /// Iterations the solve spent.
+        iterations: usize,
+        /// Whether the stopping criterion was met.
+        converged: bool,
+        /// Final residual norm against the job's system.
+        residual: f64,
+        /// Milliseconds the job waited for a lane.
+        queue_wait_ms: u64,
+        /// Telemetry samples the job's sink shed.
+        dropped: u64,
+    },
+    /// The job (or the submission itself) failed with a typed error.
+    Failed {
+        /// Wire error class (`overloaded`, `deadline`, `cancelled`, …).
+        kind: ErrKind,
+        /// Server-side error message.
+        msg: String,
+    },
+}
+
+fn proto_err(msg: impl Into<String>) -> Error {
+    Error::InvalidArgument(format!("wire protocol: {}", msg.into()))
+}
+
+fn send_line(writer: &mut BufWriter<TcpStream>, req: &Request) -> Result<()> {
+    writer.write_all(req.to_line().as_bytes()).map_err(Error::Io)?;
+    writer.write_all(b"\n").map_err(Error::Io)?;
+    writer.flush().map_err(Error::Io)
+}
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Result<Reply> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).map_err(Error::Io)?;
+    if n == 0 {
+        return Err(proto_err("server closed the connection mid-exchange"));
+    }
+    wire::parse_reply(&line).map_err(proto_err)
+}
+
+/// Submit `frame` and stream it to completion: `on_sample(id, k, residual,
+/// elapsed_ms)` fires per mid-solve `SAMPLE` line (the id lets the callback
+/// act on the job — e.g. [`cancel`] it from a second connection), and the
+/// terminal frame becomes the returned [`RemoteOutcome`]. The frame's
+/// `stream` flag is forced on (a non-streaming submit has no terminal frame
+/// to wait for — use [`poll`] for fire-and-poll clients). A refused
+/// submission (overloaded, unknown system…) returns `Ok` with
+/// [`RemoteOutcome::Failed`] and job id 0 — the refusal is data, not a
+/// transport failure.
+pub fn submit_streaming(
+    addr: impl ToSocketAddrs,
+    frame: &SubmitFrame,
+    mut on_sample: impl FnMut(u64, usize, f64, u64),
+) -> Result<(u64, RemoteOutcome)> {
+    let conn = TcpStream::connect(addr).map_err(Error::Io)?;
+    let mut reader = BufReader::new(conn.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(conn);
+    let mut frame = frame.clone();
+    frame.stream = true;
+    send_line(&mut writer, &Request::Submit(frame))?;
+    let id = match read_frame(&mut reader)? {
+        Reply::Queued { id } => id,
+        Reply::Err { kind, msg } => return Ok((0, RemoteOutcome::Failed { kind, msg })),
+        other => return Err(proto_err(format!("expected QUEUED, got {}", other.to_line()))),
+    };
+    loop {
+        match read_frame(&mut reader)? {
+            Reply::Sample { k, residual, elapsed_ms, .. } => {
+                on_sample(id, k, residual, elapsed_ms)
+            }
+            Reply::Done { iterations, converged, residual, queue_wait_ms, dropped, .. } => {
+                return Ok((
+                    id,
+                    RemoteOutcome::Done {
+                        iterations,
+                        converged,
+                        residual,
+                        queue_wait_ms,
+                        dropped,
+                    },
+                ));
+            }
+            Reply::Err { kind, msg } => return Ok((id, RemoteOutcome::Failed { kind, msg })),
+            other => {
+                return Err(proto_err(format!("unexpected stream frame {}", other.to_line())))
+            }
+        }
+    }
+}
+
+/// Snapshot a job's status: `None` while it is still queued/running,
+/// `Some(outcome)` once terminal.
+pub fn poll(addr: impl ToSocketAddrs, id: u64) -> Result<Option<RemoteOutcome>> {
+    let conn = TcpStream::connect(addr).map_err(Error::Io)?;
+    let mut reader = BufReader::new(conn.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(conn);
+    send_line(&mut writer, &Request::Poll { id })?;
+    match read_frame(&mut reader)? {
+        Reply::Queued { .. } | Reply::Running { .. } => Ok(None),
+        Reply::Done { iterations, converged, residual, queue_wait_ms, dropped, .. } => {
+            Ok(Some(RemoteOutcome::Done { iterations, converged, residual, queue_wait_ms, dropped }))
+        }
+        Reply::Err { kind, msg } => Ok(Some(RemoteOutcome::Failed { kind, msg })),
+        other => Err(proto_err(format!("unexpected poll reply {}", other.to_line()))),
+    }
+}
+
+/// Request cancellation of job `id` (usually from a second connection while
+/// the first streams it). Returns whether the server found a live job.
+pub fn cancel(addr: impl ToSocketAddrs, id: u64) -> Result<bool> {
+    let conn = TcpStream::connect(addr).map_err(Error::Io)?;
+    let mut reader = BufReader::new(conn.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(conn);
+    send_line(&mut writer, &Request::Cancel { id })?;
+    match read_frame(&mut reader)? {
+        Reply::Ack { applied, .. } => Ok(applied),
+        other => Err(proto_err(format!("expected ACK, got {}", other.to_line()))),
+    }
+}
+
+/// Liveness probe: `Ok` once the server answers `PING` with `PONG` (the
+/// smoke script's readiness gate).
+pub fn ping(addr: impl ToSocketAddrs) -> Result<()> {
+    let conn = TcpStream::connect(addr).map_err(Error::Io)?;
+    let mut reader = BufReader::new(conn.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(conn);
+    send_line(&mut writer, &Request::Ping)?;
+    match read_frame(&mut reader)? {
+        Reply::Pong => Ok(()),
+        other => Err(proto_err(format!("expected PONG, got {}", other.to_line()))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::serve::admission::{FrontEndConfig, SolveFrontEnd};
+    use crate::serve::registry::SystemRegistry;
+    use crate::serve::server::{ServerHandle, WireServer};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn boot() -> ServerHandle {
+        let registry = Arc::new(SystemRegistry::new(usize::MAX));
+        registry.insert("demo", DatasetBuilder::new(200, 12).seed(1).consistent());
+        let front = Arc::new(SolveFrontEnd::new(
+            registry,
+            FrontEndConfig { lanes: 2, max_pending: 16 },
+        ));
+        WireServer::bind("127.0.0.1:0", front).unwrap().spawn().unwrap()
+    }
+
+    #[test]
+    fn ping_then_stream_a_job_to_done() {
+        let server = boot();
+        ping(server.addr()).unwrap();
+        let mut frame = SubmitFrame::new("demo");
+        frame.check = 4;
+        frame.tol = 1e-10;
+        let mut samples = 0usize;
+        let (id, outcome) =
+            submit_streaming(server.addr(), &frame, |_id, _k, residual, _ms| {
+                assert!(residual.is_finite());
+                samples += 1;
+            })
+            .unwrap();
+        match outcome {
+            RemoteOutcome::Done { converged, residual, .. } => {
+                assert!(converged);
+                assert!(residual * residual <= 1e-9, "residual {residual}");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert!(samples >= 1, "no samples streamed");
+        // The job is terminal now; poll agrees from a fresh connection.
+        assert!(poll(server.addr(), id).unwrap().is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn refused_submission_is_failed_data_not_transport_error() {
+        let server = boot();
+        let (_, outcome) = submit_streaming(
+            server.addr(),
+            &SubmitFrame::new("no-such-system"),
+            |_, _, _, _| {},
+        )
+        .unwrap();
+        match outcome {
+            RemoteOutcome::Failed { kind, msg } => {
+                assert_eq!(kind, ErrKind::Invalid);
+                assert!(msg.contains("no-such-system"), "{msg}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn past_deadline_job_fails_typed_over_the_wire() {
+        let server = boot();
+        let mut frame = SubmitFrame::new("demo");
+        frame.tol = 0.0; // unsatisfiable
+        frame.check = 4;
+        frame.max_iterations = Some(usize::MAX / 2);
+        frame.deadline_ms = Some(1);
+        let (_, outcome) = submit_streaming(server.addr(), &frame, |_, _, _, _| {}).unwrap();
+        match outcome {
+            RemoteOutcome::Failed { kind, .. } => assert_eq!(kind, ErrKind::Deadline),
+            other => panic!("expected deadline failure, got {other:?}"),
+        }
+        // A sibling normal job still completes: one stuck deadline must not
+        // poison the lanes.
+        let mut ok = SubmitFrame::new("demo");
+        ok.check = 4;
+        let (_, outcome) = submit_streaming(server.addr(), &ok, |_, _, _, _| {}).unwrap();
+        assert!(matches!(outcome, RemoteOutcome::Done { converged: true, .. }));
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_from_second_connection_stops_streamed_job() {
+        let server = boot();
+        let addr = server.addr();
+        let mut frame = SubmitFrame::new("demo");
+        frame.tol = 0.0; // runs until cancelled
+        frame.check = 4;
+        frame.max_iterations = Some(usize::MAX / 2);
+        let (_, outcome) = submit_streaming(addr, &frame, move |id, _k, _r, _ms| {
+            // First sample: the job is provably mid-solve; cancel it from a
+            // second connection. Repeated cancels are harmless.
+            let _ = cancel(addr, id);
+        })
+        .unwrap();
+        match outcome {
+            RemoteOutcome::Failed { kind, .. } => assert_eq!(kind, ErrKind::Cancelled),
+            other => panic!("expected cancelled, got {other:?}"),
+        }
+        // Conservation: the front end counted exactly one cancel.
+        let stats = server.front().stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.cancelled, 1);
+        std::thread::sleep(Duration::from_millis(10));
+        server.shutdown();
+    }
+}

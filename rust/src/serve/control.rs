@@ -1,0 +1,266 @@
+//! Cooperative per-job cancellation and deadline tokens.
+//!
+//! A serving front end must never let a slow or abandoned client pin a
+//! worker lane: Liu, Wright & Sridhar (arXiv:1401.4780) make the same
+//! argument for their asynchronous solver's monitor — anything that can
+//! block the iterate destroys the throughput story. The telemetry side of
+//! that discipline is the drop-oldest [`ProgressSink`]; this module is the
+//! *control* side: a [`SolveControl`] token attached to a job via
+//! [`SolveOptions::with_control`] is polled at the solve's **existing
+//! [`StopCheck`] checkpoints** (every sequential/parallel/distributed loop
+//! consults it each iteration; the AsyRK monitor consults it each poll), so
+//! a cancel or an elapsed deadline halts the loop cooperatively — no thread
+//! is killed, no lock is held, and a job that nobody waits for anymore
+//! stops consuming checkpoints instead of running out its budget.
+//!
+//! The token is two atomics and an optional deadline instant:
+//!
+//! - the **cancel flag** (`Release` store by the canceller, `Acquire` load
+//!   in the solve loop — the pairing is loom-locked in `tests/loom.rs`);
+//! - the **halt cell**, a first-write-wins record of *why* the solve
+//!   stopped, written by whichever poll first observes a halt condition.
+//!   The admission layer reads it after `solve` returns to map the outcome
+//!   onto the typed [`Error::Cancelled`] / [`Error::DeadlineExceeded`];
+//! - the **deadline**, fixed at token construction (`now + budget`), so
+//!   queue wait counts against the budget — a job that waited out its
+//!   deadline in the admission queue fails without ever touching a lane.
+//!
+//! A solve with no token attached pays nothing: the options field is an
+//! `Option`, checked once per [`StopCheck`] call. With a token attached the
+//! per-iteration cost is one `Acquire` load (plus one clock read when a
+//! deadline is set) — noise next to the `O(n)` row projection, and zero
+//! effect on the iterate sequence of a run that is never halted (the
+//! bitwise-equivalence gates in `bench_micro_hotpath` run tokenless).
+//!
+//! [`ProgressSink`]: crate::metrics::ProgressSink
+//! [`SolveOptions::with_control`]: crate::solvers::SolveOptions::with_control
+//! [`StopCheck`]: crate::solvers::SolveOptions
+//! [`Error::Cancelled`]: crate::error::Error::Cancelled
+//! [`Error::DeadlineExceeded`]: crate::error::Error::DeadlineExceeded
+
+// Atomics come from the loom-swappable shim so the cancel/halt protocol is
+// model-checked alongside the pool/barrier protocols (tests/loom.rs).
+use crate::parallel::sync::{Arc, AtomicBool, AtomicU8, Ordering};
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Why a controlled solve halted before its stopping criterion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Halt {
+    /// [`SolveControl::cancel`] was called.
+    Cancelled,
+    /// The token's deadline instant passed.
+    DeadlineExceeded,
+}
+
+const HALT_NONE: u8 = 0;
+const HALT_CANCELLED: u8 = 1;
+const HALT_DEADLINE: u8 = 2;
+
+struct ControlInner {
+    /// Set by [`SolveControl::cancel`]; `Release` store / `Acquire` load so
+    /// the halt is visible to the solve loop with a happens-before edge.
+    cancel: AtomicBool,
+    /// First-write-wins halt reason (`HALT_*`), recorded by the first poll
+    /// that observes a halt condition.
+    halt: AtomicU8,
+    /// Absolute deadline (fixed at construction: `now + budget`).
+    deadline: Option<Instant>,
+    /// The budget the deadline was built from, kept for error reporting.
+    budget: Option<Duration>,
+}
+
+/// Shared cancellation/deadline token for one solve job.
+///
+/// Cloning is cheap (`Arc`-backed) and every clone controls the same job:
+/// the submitting client keeps one clone, the admission queue stores
+/// another, and the solve loop polls through the options. See the
+/// [module docs](self) for the protocol and its cost.
+pub struct SolveControl {
+    inner: Arc<ControlInner>,
+}
+
+impl Clone for SolveControl {
+    fn clone(&self) -> Self {
+        SolveControl { inner: Arc::clone(&self.inner) }
+    }
+}
+
+// Hand-rolled so the Debug view shows the *decoded* state — the raw
+// atomics would print nothing useful.
+impl fmt::Debug for SolveControl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolveControl")
+            .field("cancelled", &self.is_cancelled())
+            .field("halted", &self.halted())
+            .field("deadline_budget", &self.inner.budget)
+            .finish()
+    }
+}
+
+impl SolveControl {
+    /// A token with no deadline: only [`SolveControl::cancel`] can halt it.
+    pub fn new() -> Self {
+        SolveControl {
+            inner: Arc::new(ControlInner {
+                cancel: AtomicBool::new(false),
+                halt: AtomicU8::new(HALT_NONE),
+                deadline: None,
+                budget: None,
+            }),
+        }
+    }
+
+    /// A token whose solve must finish within `budget` **of this call**:
+    /// the admission layer constructs it at submit time, so queue wait
+    /// counts against the budget.
+    pub fn with_deadline(budget: Duration) -> Self {
+        SolveControl {
+            inner: Arc::new(ControlInner {
+                cancel: AtomicBool::new(false),
+                halt: AtomicU8::new(HALT_NONE),
+                deadline: Some(Instant::now() + budget),
+                budget: Some(budget),
+            }),
+        }
+    }
+
+    /// The deadline budget this token was built with (`None` = no deadline).
+    pub fn deadline_budget(&self) -> Option<Duration> {
+        self.inner.budget
+    }
+
+    /// Request cancellation. Returns immediately; the solve halts at its
+    /// next checkpoint poll (cooperative — nothing is interrupted mid-row).
+    /// Idempotent, and a no-op on a job that already halted or finished.
+    pub fn cancel(&self) {
+        self.inner.cancel.store(true, Ordering::Release);
+    }
+
+    /// Has [`SolveControl::cancel`] been called (whether or not the solve
+    /// has noticed yet)?
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancel.load(Ordering::Acquire)
+    }
+
+    /// Poll the halt conditions, recording (first-write-wins) and returning
+    /// the halt reason if any holds. This is the call the solve loops make
+    /// at their [`StopCheck`](crate::solvers::SolveOptions) checkpoints;
+    /// admission pre-checks a queued job with it too, so a job whose
+    /// deadline expired while queued fails without running.
+    pub fn poll(&self) -> Option<Halt> {
+        if let Some(h) = self.halted() {
+            return Some(h);
+        }
+        if self.inner.cancel.load(Ordering::Acquire) {
+            return Some(self.record(HALT_CANCELLED));
+        }
+        if let Some(d) = self.inner.deadline {
+            if Instant::now() >= d {
+                return Some(self.record(HALT_DEADLINE));
+            }
+        }
+        None
+    }
+
+    /// The recorded halt reason, if a poll has observed one — without
+    /// re-evaluating the conditions. The admission layer reads this after
+    /// `solve` returns to decide whether the result is a completion or a
+    /// typed failure.
+    pub fn halted(&self) -> Option<Halt> {
+        match self.inner.halt.load(Ordering::Acquire) {
+            HALT_CANCELLED => Some(Halt::Cancelled),
+            HALT_DEADLINE => Some(Halt::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// First-write-wins recording: whichever reason is observed first
+    /// sticks, even when polled concurrently from several threads.
+    fn record(&self, reason: u8) -> Halt {
+        let prev = self
+            .inner
+            .halt
+            .compare_exchange(HALT_NONE, reason, Ordering::AcqRel, Ordering::Acquire)
+            .unwrap_or_else(|prev| prev);
+        let decoded = if prev == HALT_NONE { reason } else { prev };
+        match decoded {
+            HALT_CANCELLED => Halt::Cancelled,
+            _ => Halt::DeadlineExceeded,
+        }
+    }
+}
+
+impl Default for SolveControl {
+    fn default() -> Self {
+        SolveControl::new()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_inert() {
+        let c = SolveControl::new();
+        assert!(!c.is_cancelled());
+        assert_eq!(c.poll(), None);
+        assert_eq!(c.halted(), None);
+        assert_eq!(c.deadline_budget(), None);
+    }
+
+    #[test]
+    fn cancel_is_observed_and_recorded() {
+        let c = SolveControl::new();
+        c.cancel();
+        assert!(c.is_cancelled());
+        // halted() reads the record only — nothing recorded until a poll.
+        assert_eq!(c.halted(), None);
+        assert_eq!(c.poll(), Some(Halt::Cancelled));
+        assert_eq!(c.halted(), Some(Halt::Cancelled));
+    }
+
+    #[test]
+    fn clones_share_one_token() {
+        let c = SolveControl::new();
+        let solver_side = c.clone();
+        c.cancel();
+        assert_eq!(solver_side.poll(), Some(Halt::Cancelled));
+        assert_eq!(c.halted(), Some(Halt::Cancelled));
+    }
+
+    #[test]
+    fn elapsed_deadline_halts() {
+        let c = SolveControl::with_deadline(Duration::ZERO);
+        assert_eq!(c.poll(), Some(Halt::DeadlineExceeded));
+        assert_eq!(c.halted(), Some(Halt::DeadlineExceeded));
+        assert_eq!(c.deadline_budget(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn generous_deadline_does_not_halt() {
+        let c = SolveControl::with_deadline(Duration::from_secs(3600));
+        assert_eq!(c.poll(), None);
+    }
+
+    #[test]
+    fn first_recorded_reason_wins() {
+        // Deadline already elapsed AND cancelled: poll order decides, and
+        // the first recorded reason is sticky.
+        let c = SolveControl::with_deadline(Duration::ZERO);
+        c.cancel();
+        // Cancel is checked before the clock, so cancellation is recorded.
+        assert_eq!(c.poll(), Some(Halt::Cancelled));
+        assert_eq!(c.poll(), Some(Halt::Cancelled));
+        assert_eq!(c.halted(), Some(Halt::Cancelled));
+    }
+
+    #[test]
+    fn debug_shows_decoded_state() {
+        let c = SolveControl::new();
+        c.cancel();
+        let s = format!("{c:?}");
+        assert!(s.contains("cancelled"), "{s}");
+    }
+}

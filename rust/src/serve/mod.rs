@@ -1,0 +1,53 @@
+//! Network serving front end: resident systems, admission control, and a
+//! framed-TCP wire protocol.
+//!
+//! The [`batch`](crate::batch) layer made the solver core a *throughput
+//! engine* for callers inside the process. This module is the remaining
+//! serving story from the roadmap — callers **outside** the process:
+//!
+//! - [`registry`] — named resident [`LinearSystem`](crate::data::LinearSystem)s
+//!   behind `Arc`s, with LRU eviction under a byte budget. Loading a
+//!   multi-GiB dense system per request would dwarf any solve; residency
+//!   amortizes it across every job that names the system, and the
+//!   precomputed squared row norms (the eq.-4 sampling distribution) stay
+//!   warm with it.
+//! - [`control`] — the cooperative [`SolveControl`] token: cancellation and
+//!   per-job deadlines observed at the existing
+//!   [`StopCheck`](crate::solvers::StopCheck) checkpoints, so remote
+//!   callers can abandon work without any thread ever being killed.
+//! - [`admission`] — the [`SolveFrontEnd`]: a bounded submission queue that
+//!   refuses work with the typed
+//!   [`Error::Overloaded`](crate::error::Error::Overloaded) instead of
+//!   buffering unboundedly, persistent lane threads (spawned once), and
+//!   queue-wait / dropped-sample accounting in every
+//!   [`SolveReport`](crate::batch::SolveReport).
+//! - [`wire`] — the newline-delimited frame codec (`SUBMIT`/`POLL`/
+//!   `CANCEL`/`SAMPLE`/`DONE`/`ERR`…), kept free of any socket so it is
+//!   testable byte-for-byte, plus the α-β cost model for what streaming
+//!   telemetry costs on the wire.
+//! - [`server`] / [`client`] — the framed-TCP binding of the two:
+//!   `kaczmarz serve` boots a [`WireServer`] over a registry + front end;
+//!   `kaczmarz submit` is the minimal client, streaming mid-solve
+//!   [`Sample`](crate::metrics::Sample)s line by line.
+//!
+//! ## Concurrency discipline
+//!
+//! This module deliberately contains **no `unsafe` and no
+//! `Ordering::Relaxed`**: the only lock-free state is the
+//! [`SolveControl`] token (loom-checked in `tests/loom.rs`), and
+//! everything else uses plain `Mutex`/`Condvar` — serving control planes
+//! are cold paths; the hot path is the solve itself, which this module
+//! never touches.
+
+pub mod admission;
+pub mod client;
+pub mod control;
+pub mod registry;
+pub mod server;
+pub mod wire;
+
+pub use admission::{FrontEndConfig, FrontStats, JobStatus, SolveFrontEnd, SubmitRequest};
+pub use client::RemoteOutcome;
+pub use control::{Halt, SolveControl};
+pub use registry::{approx_system_bytes, SystemRegistry};
+pub use server::{ServerHandle, WireServer};

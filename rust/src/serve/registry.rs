@@ -1,0 +1,304 @@
+//! Named resident-system registry: many `Arc`-shared [`LinearSystem`]s
+//! cached with LRU eviction and capacity accounting.
+//!
+//! The serving story starts from a simple observation: for a Kaczmarz shop
+//! the expensive object is the *system*, not the solve. Loading a
+//! multi-GiB `A`, computing its squared row norms (the eq.-4 sampling
+//! distribution) and Frobenius norm — that is per-*system* work, and the
+//! paper's throughput pitch only holds if it is paid once and amortized
+//! over every request that names the system afterwards. The registry keeps
+//! that state **warm**: [`SystemRegistry::get`] hands out an
+//! `Arc<LinearSystem>` whose row norms were computed at insert time
+//! ([`LinearSystem`] precomputes them on construction), so a job against a
+//! resident system does zero per-request preparation, and a thousand
+//! concurrent jobs share one matrix — `Arc::ptr_eq`-identical, not cloned
+//! (`tests/serving_properties.rs` probes exactly this).
+//!
+//! Capacity is accounted in **approximate resident bytes**
+//! ([`SystemRegistry::resident_bytes`]): dense systems cost `m·n·8` for
+//! the matrix plus the `O(m)`/`O(n)` side vectors, CSR systems cost their
+//! stored entries (values + column indices) plus row offsets. When an
+//! insert would exceed the configured budget, **least-recently-used**
+//! entries are evicted until it fits — the freshly inserted system itself
+//! is never evicted, so a system larger than the whole budget still
+//! becomes resident (alone). Eviction drops the registry's `Arc` only:
+//! jobs already holding the system keep it alive until they finish, so
+//! eviction can never invalidate an in-flight solve.
+//!
+//! Sizing guidance lives in the README ("Serving front end"): the short
+//! version is to budget against the same memory hierarchy the
+//! [`crate::distributed::network::NetworkModel`] encodes — systems that fit
+//! the last-level cache re-solve essentially free, dense systems beyond
+//! DRAM belong behind the (future) out-of-core backend, not in this
+//! registry.
+
+use crate::data::LinearSystem;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Approximate resident footprint of a system, in bytes: matrix storage
+/// (dense `m·n·8`, or CSR values + column indices + row offsets) plus the
+/// `b`, `row_norms_sq`, and optional reference vectors. An accounting
+/// estimate for eviction decisions, not an allocator-exact measurement.
+pub fn approx_system_bytes(system: &LinearSystem) -> usize {
+    let (m, n) = (system.rows(), system.cols());
+    let f = std::mem::size_of::<f64>();
+    let matrix = match system.a.as_csr() {
+        // values (f64) + column indices (usize) per stored entry, plus the
+        // m + 1 row offsets.
+        Some(csr) => csr.nnz() * (f + std::mem::size_of::<usize>())
+            + (m + 1) * std::mem::size_of::<usize>(),
+        None => m * n * f,
+    };
+    let vectors = (m + m) * f // b + row_norms_sq
+        + system.x_true.as_ref().map_or(0, |_| n * f)
+        + system.x_ls.as_ref().map_or(0, |_| n * f);
+    matrix + vectors
+}
+
+struct Entry {
+    system: Arc<LinearSystem>,
+    bytes: usize,
+    /// Logical recency clock value at the last touch (monotonic counter,
+    /// not wall time — cheap, and exact for LRU ordering).
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    resident_bytes: usize,
+    /// Monotonic recency clock, bumped on every insert/get.
+    tick: u64,
+}
+
+/// Thread-safe named cache of resident systems (see [module docs](self)).
+///
+/// All methods take `&self`; the registry is shared across the admission
+/// lanes and the wire server behind one `Arc`.
+pub struct SystemRegistry {
+    inner: Mutex<Inner>,
+    capacity_bytes: usize,
+}
+
+impl SystemRegistry {
+    /// An empty registry with the given byte budget. The budget bounds the
+    /// *sum* of [`approx_system_bytes`] over resident entries; a single
+    /// over-budget system is still admitted (alone) rather than rejected —
+    /// refusing to serve the workload's one big system would defeat the
+    /// point of a cache.
+    pub fn new(capacity_bytes: usize) -> Self {
+        SystemRegistry {
+            inner: Mutex::new(Inner { entries: HashMap::new(), resident_bytes: 0, tick: 0 }),
+            capacity_bytes,
+        }
+    }
+
+    /// Make `system` resident under `name`, evicting least-recently-used
+    /// entries until the budget holds (the new entry itself is exempt).
+    /// Replaces any previous entry of the same name. Returns the names
+    /// evicted to make room, in eviction order.
+    pub fn insert(&self, name: impl Into<String>, system: LinearSystem) -> Vec<String> {
+        let name = name.into();
+        let bytes = approx_system_bytes(&system);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.entries.remove(&name) {
+            inner.resident_bytes -= old.bytes;
+        }
+        inner.resident_bytes += bytes;
+        inner
+            .entries
+            .insert(name.clone(), Entry { system: Arc::new(system), bytes, last_used: tick });
+
+        // Evict oldest-touched entries (never the one just inserted) until
+        // the budget holds or nothing else is left to evict.
+        let mut evicted = Vec::new();
+        while inner.resident_bytes > self.capacity_bytes && inner.entries.len() > 1 {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(k, _)| **k != name)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("len > 1 entries minus the protected one is non-empty");
+            let e = inner.entries.remove(&victim).expect("victim key just observed");
+            inner.resident_bytes -= e.bytes;
+            evicted.push(victim);
+        }
+        evicted
+    }
+
+    /// Fetch a resident system by name, bumping its recency. The returned
+    /// `Arc` shares the registry's storage (no clone): drop it when the job
+    /// finishes and the system stays resident; keep it across an eviction
+    /// and the system stays *alive* (for you) even though it left the
+    /// cache.
+    pub fn get(&self, name: &str) -> Option<Arc<LinearSystem>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner.entries.get_mut(name)?;
+        e.last_used = tick;
+        Some(Arc::clone(&e.system))
+    }
+
+    /// Is `name` resident right now? (Does not bump recency.)
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(name)
+    }
+
+    /// Remove one entry by name; `true` if it was resident.
+    pub fn remove(&self, name: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.remove(name) {
+            Some(e) => {
+                inner.resident_bytes -= e.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of resident systems.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current accounted footprint (sum of [`approx_system_bytes`] over
+    /// resident entries).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// The configured byte budget.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Resident names with their shapes, least-recently-used first — the
+    /// order the next over-budget insert would evict them in.
+    pub fn names_by_recency(&self) -> Vec<(String, usize, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<(&String, &Entry)> = inner.entries.iter().collect();
+        v.sort_by_key(|(_, e)| e.last_used);
+        v.into_iter().map(|(k, e)| (k.clone(), e.system.rows(), e.system.cols())).collect()
+    }
+}
+
+impl std::fmt::Debug for SystemRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("SystemRegistry")
+            .field("entries", &inner.entries.len())
+            .field("resident_bytes", &inner.resident_bytes)
+            .field("capacity_bytes", &self.capacity_bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+
+    fn sys(m: usize, n: usize, seed: u32) -> LinearSystem {
+        DatasetBuilder::new(m, n).seed(seed).consistent()
+    }
+
+    #[test]
+    fn dense_byte_accounting_scales_with_shape() {
+        let small = approx_system_bytes(&sys(40, 8, 1));
+        let big = approx_system_bytes(&sys(80, 8, 1));
+        assert!(big > small);
+        // Dominated by the m*n*8 matrix term.
+        assert!(approx_system_bytes(&sys(40, 8, 1)) >= 40 * 8 * 8);
+    }
+
+    #[test]
+    fn csr_byte_accounting_counts_stored_entries_only() {
+        use crate::data::SparseDatasetBuilder;
+        let sparse = SparseDatasetBuilder::new(200, 40, 0.05).seed(3).consistent();
+        let dense = sys(200, 40, 3);
+        // 5% density: far below the dense footprint.
+        assert!(approx_system_bytes(&sparse) < approx_system_bytes(&dense) / 2);
+    }
+
+    #[test]
+    fn get_returns_arc_shared_resident_system() {
+        let reg = SystemRegistry::new(usize::MAX);
+        reg.insert("demo", sys(60, 6, 1));
+        let a = reg.get("demo").unwrap();
+        let b = reg.get("demo").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "both handles must share one resident system");
+        assert!(reg.get("absent").is_none());
+    }
+
+    #[test]
+    fn insert_evicts_least_recently_used_first() {
+        let one = approx_system_bytes(&sys(60, 6, 1));
+        // Room for two systems of this shape, not three.
+        let reg = SystemRegistry::new(2 * one + one / 2);
+        assert!(reg.insert("a", sys(60, 6, 1)).is_empty());
+        assert!(reg.insert("b", sys(60, 6, 2)).is_empty());
+        // Touch "a": "b" becomes the LRU entry.
+        reg.get("a").unwrap();
+        let evicted = reg.insert("c", sys(60, 6, 3));
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(reg.contains("a") && reg.contains("c") && !reg.contains("b"));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn over_budget_system_is_admitted_alone() {
+        let reg = SystemRegistry::new(1); // absurdly small budget
+        reg.insert("small", sys(40, 4, 1));
+        let evicted = reg.insert("huge", sys(80, 8, 2));
+        assert_eq!(evicted, vec!["small".to_string()]);
+        assert!(reg.contains("huge"));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.resident_bytes() > reg.capacity_bytes());
+    }
+
+    #[test]
+    fn replacing_a_name_keeps_accounting_exact() {
+        let reg = SystemRegistry::new(usize::MAX);
+        reg.insert("x", sys(60, 6, 1));
+        let after_first = reg.resident_bytes();
+        reg.insert("x", sys(60, 6, 2)); // same shape, same bytes
+        assert_eq!(reg.resident_bytes(), after_first);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.remove("x"));
+        assert!(!reg.remove("x"));
+        assert_eq!(reg.resident_bytes(), 0);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn eviction_does_not_invalidate_held_handles() {
+        let one = approx_system_bytes(&sys(60, 6, 1));
+        let reg = SystemRegistry::new(one + one / 2);
+        reg.insert("a", sys(60, 6, 1));
+        let held = reg.get("a").unwrap();
+        reg.insert("b", sys(60, 6, 2)); // evicts "a"
+        assert!(!reg.contains("a"));
+        // The held Arc still works: solve state intact.
+        assert_eq!(held.rows(), 60);
+        assert!(held.row_norms_sq.iter().all(|&r| r > 0.0));
+    }
+
+    #[test]
+    fn names_by_recency_reports_eviction_order() {
+        let reg = SystemRegistry::new(usize::MAX);
+        reg.insert("a", sys(40, 4, 1));
+        reg.insert("b", sys(40, 4, 2));
+        reg.get("a").unwrap();
+        let names: Vec<String> = reg.names_by_recency().into_iter().map(|(n, ..)| n).collect();
+        assert_eq!(names, vec!["b".to_string(), "a".to_string()]);
+    }
+}

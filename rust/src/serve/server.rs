@@ -1,0 +1,446 @@
+//! Framed-TCP binding of the serving front end ([`WireServer`]).
+//!
+//! One listener thread accepts connections; each connection gets a handler
+//! thread that reads [`wire`](super::wire) request lines and writes reply
+//! lines. Connection threads are control-plane only — solves always run on
+//! the front end's persistent lanes, so the zero-per-solve-spawn discipline
+//! holds: a connection thread costs one blocked `read_line`, never a solve.
+//!
+//! **Streaming.** A `SUBMIT ... stream=1` connection stays open: the
+//! handler attaches a bounded drop-oldest
+//! [`ProgressSink`](crate::metrics::ProgressSink) to the job and forwards
+//! its `(k, residual, elapsed)` samples as `SAMPLE` lines until the
+//! terminal `DONE`/`ERR` frame. If the client vanishes mid-stream (write
+//! failure), the handler cancels the job — an abandoned client must not
+//! keep consuming lane time (the same never-block discipline as the sink
+//! itself).
+
+use super::admission::{JobStatus, SolveFrontEnd, SubmitRequest};
+use super::wire::{self, ErrKind, Reply, Request, SubmitFrame};
+use crate::error::{Error, Result};
+use crate::metrics::ProgressSink;
+use crate::solvers::ck::CkSolver;
+use crate::solvers::rek::RekSolver;
+use crate::solvers::rk::RkSolver;
+use crate::solvers::{SolveOptions, Solver};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long a streaming handler waits for the next sample before checking
+/// the job's terminal status.
+const STREAM_POLL: Duration = Duration::from_millis(20);
+
+/// Capacity of the per-streamed-job sample channel (drop-oldest beyond it).
+const STREAM_CHANNEL: usize = 256;
+
+/// A bound-but-not-yet-serving wire server.
+pub struct WireServer {
+    listener: TcpListener,
+    front: Arc<SolveFrontEnd>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`, or port 0 for an ephemeral
+    /// port) over `front`.
+    pub fn bind(addr: &str, front: Arc<SolveFrontEnd>) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr).map_err(Error::Io)?;
+        Ok(WireServer { listener, front })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Error::Io)
+    }
+
+    /// Start accepting connections on a background thread.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let front = Arc::clone(&self.front);
+            let listener = self.listener;
+            std::thread::Builder::new()
+                .name("kaczmarz-serve-accept".into())
+                .spawn(move || accept_loop(&listener, &front, &stop))
+                .map_err(Error::Io)?
+        };
+        Ok(ServerHandle { addr, front: self.front, stop, accept: Some(accept) })
+    }
+}
+
+/// A running wire server; dropping it (or calling
+/// [`ServerHandle::shutdown`]) stops the accept loop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    front: Arc<SolveFrontEnd>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The front end behind the server (shared: in-process callers may
+    /// submit directly while remote clients go through the wire).
+    pub fn front(&self) -> &Arc<SolveFrontEnd> {
+        &self.front
+    }
+
+    /// Stop accepting and join the accept loop. Live connection handlers
+    /// finish their current exchange and exit when their client closes.
+    pub fn shutdown(mut self) {
+        self.stop_accepting();
+    }
+
+    fn stop_accepting(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_accepting();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, front: &Arc<SolveFrontEnd>, stop: &Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        let front = Arc::clone(front);
+        // Detached control-plane thread: it blocks on client reads and dies
+        // with the connection; solves never run here.
+        let _ = std::thread::Builder::new()
+            .name("kaczmarz-serve-conn".into())
+            .spawn(move || {
+                let _ = handle_connection(stream, &front);
+            });
+    }
+}
+
+/// Serve one connection until the client closes or a write fails.
+fn handle_connection(stream: TcpStream, front: &Arc<SolveFrontEnd>) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match wire::parse_request(&line) {
+            Err(msg) => write_reply(&mut writer, &Reply::Err { kind: ErrKind::Proto, msg })?,
+            Ok(Request::Ping) => write_reply(&mut writer, &Reply::Pong)?,
+            Ok(Request::Stats) => {
+                let stats = front.stats();
+                write_reply(
+                    &mut writer,
+                    &Reply::Stats {
+                        resident: front.registry().len(),
+                        pending: front.pending(),
+                        submitted: stats.submitted,
+                        completed: stats.completed,
+                        cancelled: stats.cancelled,
+                        deadline_missed: stats.deadline_missed,
+                        rejected: stats.rejected,
+                    },
+                )?;
+            }
+            Ok(Request::Cancel { id }) => {
+                let applied = front.cancel(id);
+                write_reply(&mut writer, &Reply::Ack { id, applied })?;
+            }
+            Ok(Request::Poll { id }) => {
+                let reply = match front.status(id) {
+                    None => Reply::Err {
+                        kind: ErrKind::Invalid,
+                        msg: format!("unknown job id {id}"),
+                    },
+                    Some(JobStatus::Queued) => Reply::Queued { id },
+                    Some(JobStatus::Running) => Reply::Running { id },
+                    Some(terminal) => terminal_reply(id, &terminal),
+                };
+                write_reply(&mut writer, &reply)?;
+            }
+            Ok(Request::Submit(frame)) => handle_submit(front, &mut writer, frame)?,
+        }
+    }
+    Ok(())
+}
+
+fn handle_submit(
+    front: &Arc<SolveFrontEnd>,
+    writer: &mut BufWriter<TcpStream>,
+    frame: SubmitFrame,
+) -> std::io::Result<()> {
+    let Some(solver) = solver_for(&frame) else {
+        return write_reply(
+            writer,
+            &Reply::Err {
+                kind: ErrKind::Invalid,
+                msg: format!("unknown solver '{}' (have: rk, rek, ck)", frame.solver),
+            },
+        );
+    };
+    let mut opts = SolveOptions::default().with_residual_stopping(frame.tol, frame.check.max(1));
+    if let Some(max) = frame.max_iterations {
+        opts = opts.with_max_iterations(max);
+    }
+    if let Some(fixed) = frame.fixed_iterations {
+        opts = opts.with_fixed_iterations(fixed);
+    }
+    let receiver = if frame.stream {
+        let (sink, rx) = ProgressSink::bounded(STREAM_CHANNEL);
+        opts = opts.with_progress(sink);
+        Some(rx)
+    } else {
+        None
+    };
+    let mut request = SubmitRequest::new(frame.system, solver).with_opts(opts);
+    if let Some(ms) = frame.deadline_ms {
+        request = request.with_deadline(Duration::from_millis(ms));
+    }
+    let id = match front.submit(request) {
+        Ok(id) => id,
+        Err(e) => {
+            return write_reply(
+                writer,
+                &Reply::Err { kind: ErrKind::of(&e), msg: e.to_string() },
+            );
+        }
+    };
+    write_reply(writer, &Reply::Queued { id })?;
+
+    let Some(rx) = receiver else { return Ok(()) };
+    // Streaming mode: forward samples until the job turns terminal. A write
+    // failure means the client is gone — cancel so the lane stops burning
+    // checkpoints on an unobserved job.
+    let stream_outcome: std::io::Result<()> = (|| {
+        loop {
+            if let Some(sample) = rx.recv_timeout(STREAM_POLL) {
+                write_reply(writer, &sample_reply(id, &sample))?;
+                continue;
+            }
+            match front.status(id) {
+                Some(status) if status.is_terminal() => {
+                    for sample in rx.drain() {
+                        write_reply(writer, &sample_reply(id, &sample))?;
+                    }
+                    write_reply(writer, &terminal_reply(id, &status))?;
+                    return Ok(());
+                }
+                Some(_) => continue,
+                None => return Ok(()), // forgotten externally; nothing to stream
+            }
+        }
+    })();
+    if stream_outcome.is_err() {
+        front.cancel(id);
+    }
+    stream_outcome
+}
+
+/// Map a wire solver selector onto a crate solver.
+fn solver_for(frame: &SubmitFrame) -> Option<Arc<dyn Solver + Send + Sync>> {
+    Some(match frame.solver.as_str() {
+        "rk" => Arc::new(RkSolver::new(frame.seed)),
+        "rek" => Arc::new(RekSolver::new(frame.seed)),
+        "ck" => Arc::new(CkSolver::new()),
+        _ => return None,
+    })
+}
+
+fn sample_reply(id: u64, sample: &crate::metrics::Sample) -> Reply {
+    Reply::Sample {
+        id,
+        k: sample.k,
+        residual: sample.residual,
+        reference_err: sample.reference_err,
+        elapsed_ms: sample.elapsed.as_millis() as u64,
+    }
+}
+
+fn terminal_reply(id: u64, status: &JobStatus) -> Reply {
+    match status {
+        JobStatus::Done(report) => Reply::Done {
+            id,
+            iterations: report.result.iterations,
+            converged: report.result.converged,
+            residual: report.residual_norm,
+            queue_wait_ms: report.queue_wait.as_millis() as u64,
+            dropped: report.dropped_samples,
+        },
+        JobStatus::Failed(e) => Reply::Err { kind: ErrKind::of(e), msg: e.to_string() },
+        _ => unreachable!("terminal_reply called on a non-terminal status"),
+    }
+}
+
+fn write_reply(writer: &mut BufWriter<TcpStream>, reply: &Reply) -> std::io::Result<()> {
+    writer.write_all(reply.to_line().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetBuilder;
+    use crate::serve::admission::FrontEndConfig;
+    use crate::serve::registry::SystemRegistry;
+
+    fn boot() -> ServerHandle {
+        let registry = Arc::new(SystemRegistry::new(usize::MAX));
+        registry.insert("demo", DatasetBuilder::new(200, 12).seed(1).consistent());
+        let front = Arc::new(SolveFrontEnd::new(
+            registry,
+            FrontEndConfig { lanes: 2, max_pending: 16 },
+        ));
+        WireServer::bind("127.0.0.1:0", front).unwrap().spawn().unwrap()
+    }
+
+    fn exchange(conn: &TcpStream, req: &Request) -> Reply {
+        let mut w = BufWriter::new(conn.try_clone().unwrap());
+        w.write_all(req.to_line().as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        w.flush().unwrap();
+        read_reply(conn)
+    }
+
+    fn read_reply(conn: &TcpStream) -> Reply {
+        let mut r = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        wire::parse_reply(&line).unwrap()
+    }
+
+    #[test]
+    fn ping_stats_and_unknown_solver_over_a_socket() {
+        let server = boot();
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        assert_eq!(exchange(&conn, &Request::Ping), Reply::Pong);
+        match exchange(&conn, &Request::Stats) {
+            Reply::Stats { resident, submitted, .. } => {
+                assert_eq!(resident, 1);
+                assert_eq!(submitted, 0);
+            }
+            other => panic!("expected STATS, got {other:?}"),
+        }
+        let mut bad = SubmitFrame::new("demo");
+        bad.solver = "sor".into();
+        match exchange(&conn, &Request::Submit(bad)) {
+            Reply::Err { kind: ErrKind::Invalid, msg } => assert!(msg.contains("sor")),
+            other => panic!("expected invalid-solver ERR, got {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_poll_roundtrip_reaches_done() {
+        let server = boot();
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let id = match exchange(&conn, &Request::Submit(SubmitFrame::new("demo"))) {
+            Reply::Queued { id } => id,
+            other => panic!("expected QUEUED, got {other:?}"),
+        };
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        loop {
+            match exchange(&conn, &Request::Poll { id }) {
+                Reply::Done { converged, residual, .. } => {
+                    assert!(converged);
+                    assert!(residual < 1e-3);
+                    break;
+                }
+                Reply::Queued { .. } | Reply::Running { .. } => {
+                    assert!(std::time::Instant::now() < deadline, "poll timed out");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                other => panic!("unexpected poll reply {other:?}"),
+            }
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn streaming_submit_emits_samples_then_done() {
+        let server = boot();
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut frame = SubmitFrame::new("demo");
+        frame.stream = true;
+        frame.check = 4; // frequent checkpoints → guaranteed samples
+        frame.tol = 1e-10;
+        let mut w = BufWriter::new(conn.try_clone().unwrap());
+        w.write_all(Request::Submit(frame).to_line().as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        w.flush().unwrap();
+
+        let mut samples = 0usize;
+        let mut done = false;
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        for line in reader.lines() {
+            match wire::parse_reply(&line.unwrap()).unwrap() {
+                Reply::Queued { .. } => {}
+                Reply::Sample { residual, .. } => {
+                    assert!(residual.is_finite());
+                    samples += 1;
+                }
+                Reply::Done { converged, .. } => {
+                    assert!(converged);
+                    done = true;
+                    break;
+                }
+                other => panic!("unexpected stream frame {other:?}"),
+            }
+        }
+        assert!(done, "stream ended without DONE");
+        assert!(samples >= 1, "streamed no samples");
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_over_the_wire_is_acked_and_typed() {
+        let server = boot();
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        // Unsatisfiable tolerance: runs until cancelled.
+        let mut frame = SubmitFrame::new("demo");
+        frame.tol = 0.0;
+        frame.check = 4;
+        frame.max_iterations = Some(usize::MAX / 2);
+        let id = match exchange(&conn, &Request::Submit(frame)) {
+            Reply::Queued { id } => id,
+            other => panic!("expected QUEUED, got {other:?}"),
+        };
+        match exchange(&conn, &Request::Cancel { id }) {
+            Reply::Ack { applied, .. } => assert!(applied),
+            other => panic!("expected ACK, got {other:?}"),
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        loop {
+            match exchange(&conn, &Request::Poll { id }) {
+                Reply::Err { kind, .. } => {
+                    assert_eq!(kind, ErrKind::Cancelled);
+                    break;
+                }
+                Reply::Queued { .. } | Reply::Running { .. } => {
+                    assert!(std::time::Instant::now() < deadline, "cancel never landed");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                other => panic!("unexpected poll reply {other:?}"),
+            }
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,591 @@
+//! Newline-delimited wire frames for the serving front end.
+//!
+//! One frame per line, `VERB key=value ...` — a deliberately boring,
+//! debuggable format (`nc localhost 7070` is a working client). The codec
+//! here is **pure**: no sockets, no I/O — [`parse_request`]/[`parse_reply`]
+//! and the `to_line` encoders round-trip plain strings, so every frame is
+//! testable byte-for-byte (and Miri-clean; the socket binding lives in
+//! [`super::server`]/[`super::client`]).
+//!
+//! ## Frames
+//!
+//! Client → server:
+//!
+//! | frame | meaning |
+//! |---|---|
+//! | `SUBMIT system=S [solver=rk] [seed=N] [tol=T] [check=K] [max=N] [fixed=N] [deadline_ms=N] [stream=1]` | submit a job against resident system `S` |
+//! | `POLL id=N` | snapshot job `N`'s status |
+//! | `CANCEL id=N` | request cooperative cancellation of job `N` |
+//! | `STATS` | registry + admission counters |
+//! | `PING` | liveness probe |
+//!
+//! Server → client:
+//!
+//! | frame | meaning |
+//! |---|---|
+//! | `QUEUED id=N` | job admitted (also the `POLL` reply while it waits) |
+//! | `RUNNING id=N` | `POLL` reply while a lane solves it |
+//! | `ACK id=N applied=0\|1` | `CANCEL` reply: whether a live job was found |
+//! | `SAMPLE id=N k=K residual=R err=E elapsed_ms=M` | one mid-solve telemetry sample (`err=-` on reference-free systems); streamed line-by-line when the submit asked for `stream=1` |
+//! | `DONE id=N iterations=K converged=B residual=R queue_wait_ms=M dropped=D` | terminal success |
+//! | `ERR kind=K msg=...` | terminal failure; `kind` is one of `overloaded`, `deadline`, `cancelled`, `invalid`, `proto` |
+//! | `STATS resident=... pending=... submitted=... completed=... cancelled=... deadline_missed=... rejected=...` | counters snapshot |
+//! | `PONG` | liveness reply |
+//!
+//! ## What streaming costs on the wire
+//!
+//! The distributed layer prices every message as `α + bytes/β`
+//! ([`NetworkModel::message_cost`]); the same vocabulary prices serving
+//! telemetry. A `SAMPLE` line is ~[`SAMPLE_LINE_BYTES`] bytes — deep in the
+//! latency-dominated regime where the α term is everything — so streaming
+//! `s` samples costs `s · (α + SAMPLE_LINE_BYTES/β)` ≈ `s·α`:
+//! per-checkpoint telemetry is cheap in *bandwidth* but pays full message
+//! *latency* per line, which is why samples ride the solve's existing
+//! amortized checkpoints (`check_every`) instead of every iteration — see
+//! [`stream_cost_estimate`].
+
+use crate::distributed::network::{NetworkModel, Placement};
+use crate::error::Error;
+
+/// Conservative size of one encoded `SAMPLE` line in bytes (verb, five
+/// `key=value` tokens with shortest-round-trip floats, newline).
+pub const SAMPLE_LINE_BYTES: usize = 72;
+
+/// Seconds to ship `samples` telemetry lines client-ward under `model`,
+/// pricing each line as one `α + bytes/β` message between `from` and `to`
+/// (inter- vs intra-node resolved by `placement`, exactly as the simulated
+/// cluster prices its gathers).
+pub fn stream_cost_estimate(
+    model: &NetworkModel,
+    samples: usize,
+    from: usize,
+    to: usize,
+    placement: Placement,
+) -> f64 {
+    samples as f64 * model.message_cost(from, to, SAMPLE_LINE_BYTES, placement)
+}
+
+/// Body of a `SUBMIT` frame (defaults match
+/// [`SubmitRequest::new`](super::SubmitRequest::new): residual stopping,
+/// reference-free).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitFrame {
+    /// Registry name of the resident system.
+    pub system: String,
+    /// Solver selector (the server maps it; `"rk"` by default, `"rek"` and
+    /// `"ck"` also resident).
+    pub solver: String,
+    /// Sampling seed.
+    pub seed: u32,
+    /// Residual-stopping tolerance on `‖Ax - b‖²`.
+    pub tol: f64,
+    /// Check the residual every this many iterations.
+    pub check: usize,
+    /// Hard iteration cap (`None` = solver default).
+    pub max_iterations: Option<usize>,
+    /// Fixed-budget mode: exactly this many iterations, nothing measured.
+    pub fixed_iterations: Option<usize>,
+    /// Deadline budget in milliseconds, measured from submit.
+    pub deadline_ms: Option<u64>,
+    /// Stream `SAMPLE` lines before the terminal frame.
+    pub stream: bool,
+}
+
+impl SubmitFrame {
+    /// A submit against `system` with wire defaults.
+    pub fn new(system: impl Into<String>) -> Self {
+        SubmitFrame {
+            system: system.into(),
+            solver: "rk".into(),
+            seed: 0,
+            tol: 1e-8,
+            check: 32,
+            max_iterations: None,
+            fixed_iterations: None,
+            deadline_ms: None,
+            stream: false,
+        }
+    }
+}
+
+/// A parsed client → server frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Submit a job.
+    Submit(SubmitFrame),
+    /// Snapshot a job's status.
+    Poll {
+        /// Job id from the `QUEUED` ack.
+        id: u64,
+    },
+    /// Request cooperative cancellation.
+    Cancel {
+        /// Job id from the `QUEUED` ack.
+        id: u64,
+    },
+    /// Ask for registry + admission counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+}
+
+/// Typed error classes carried by `ERR` frames — the wire image of the
+/// crate's serving [`Error`](crate::error::Error) variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrKind {
+    /// Admission queue full ([`Error::Overloaded`]); retry with backoff.
+    Overloaded,
+    /// Deadline budget elapsed ([`Error::DeadlineExceeded`]).
+    Deadline,
+    /// Job cancelled ([`Error::Cancelled`]).
+    Cancelled,
+    /// Anything else typed the job failed with (unknown system, bad shape…).
+    Invalid,
+    /// The frame itself could not be parsed.
+    Proto,
+}
+
+impl ErrKind {
+    /// Wire token for this kind.
+    pub fn token(self) -> &'static str {
+        match self {
+            ErrKind::Overloaded => "overloaded",
+            ErrKind::Deadline => "deadline",
+            ErrKind::Cancelled => "cancelled",
+            ErrKind::Invalid => "invalid",
+            ErrKind::Proto => "proto",
+        }
+    }
+
+    /// Classify a crate error into its wire kind.
+    pub fn of(err: &Error) -> ErrKind {
+        match err {
+            Error::Overloaded { .. } => ErrKind::Overloaded,
+            Error::DeadlineExceeded { .. } => ErrKind::Deadline,
+            Error::Cancelled => ErrKind::Cancelled,
+            _ => ErrKind::Invalid,
+        }
+    }
+
+    fn from_token(tok: &str) -> Option<ErrKind> {
+        Some(match tok {
+            "overloaded" => ErrKind::Overloaded,
+            "deadline" => ErrKind::Deadline,
+            "cancelled" => ErrKind::Cancelled,
+            "invalid" => ErrKind::Invalid,
+            "proto" => ErrKind::Proto,
+            _ => return None,
+        })
+    }
+}
+
+/// A parsed server → client frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Job admitted / still waiting for a lane.
+    Queued {
+        /// Job id to poll/cancel with.
+        id: u64,
+    },
+    /// A lane is solving the job right now.
+    Running {
+        /// Job id.
+        id: u64,
+    },
+    /// Reply to `CANCEL`: whether the cancel found a live job to act on
+    /// (it may still lose the race against completion — poll for the
+    /// terminal frame to know).
+    Ack {
+        /// Job id.
+        id: u64,
+        /// `true` when the job existed and was not yet terminal.
+        applied: bool,
+    },
+    /// One mid-solve telemetry sample.
+    Sample {
+        /// Job id.
+        id: u64,
+        /// Iteration number at the checkpoint.
+        k: usize,
+        /// Residual norm `‖Ax - b‖` at the checkpoint.
+        residual: f64,
+        /// Reference-error norm, when the system carries a reference.
+        reference_err: Option<f64>,
+        /// Milliseconds since the solve started.
+        elapsed_ms: u64,
+    },
+    /// Terminal success.
+    Done {
+        /// Job id.
+        id: u64,
+        /// Iterations the solve spent.
+        iterations: usize,
+        /// Whether the stopping criterion was met.
+        converged: bool,
+        /// Final residual norm against the job's system.
+        residual: f64,
+        /// Milliseconds the job waited for a lane (submit → dequeue).
+        queue_wait_ms: u64,
+        /// Telemetry samples the job's sink shed (drop-oldest).
+        dropped: u64,
+    },
+    /// Terminal failure.
+    Err {
+        /// Error class.
+        kind: ErrKind,
+        /// Human-readable detail (rest of the line; may contain spaces).
+        msg: String,
+    },
+    /// Counters snapshot.
+    Stats {
+        /// Systems resident in the registry.
+        resident: usize,
+        /// Jobs waiting for a lane.
+        pending: usize,
+        /// Jobs accepted over the front end's lifetime.
+        submitted: u64,
+        /// Jobs that finished with a report.
+        completed: u64,
+        /// Jobs that ended cancelled.
+        cancelled: u64,
+        /// Jobs that ended past deadline.
+        deadline_missed: u64,
+        /// Submissions refused with `overloaded`.
+        rejected: u64,
+    },
+    /// Liveness reply.
+    Pong,
+}
+
+impl Request {
+    /// Encode as one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Submit(s) => {
+                let mut line = format!(
+                    "SUBMIT system={} solver={} seed={} tol={:?} check={}",
+                    s.system, s.solver, s.seed, s.tol, s.check
+                );
+                if let Some(max) = s.max_iterations {
+                    line.push_str(&format!(" max={max}"));
+                }
+                if let Some(fixed) = s.fixed_iterations {
+                    line.push_str(&format!(" fixed={fixed}"));
+                }
+                if let Some(ms) = s.deadline_ms {
+                    line.push_str(&format!(" deadline_ms={ms}"));
+                }
+                if s.stream {
+                    line.push_str(" stream=1");
+                }
+                line
+            }
+            Request::Poll { id } => format!("POLL id={id}"),
+            Request::Cancel { id } => format!("CANCEL id={id}"),
+            Request::Stats => "STATS".into(),
+            Request::Ping => "PING".into(),
+        }
+    }
+}
+
+impl Reply {
+    /// Encode as one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Reply::Queued { id } => format!("QUEUED id={id}"),
+            Reply::Running { id } => format!("RUNNING id={id}"),
+            Reply::Ack { id, applied } => {
+                format!("ACK id={id} applied={}", if *applied { 1 } else { 0 })
+            }
+            Reply::Sample { id, k, residual, reference_err, elapsed_ms } => {
+                let err = match reference_err {
+                    Some(e) => format!("{e:?}"),
+                    None => "-".into(),
+                };
+                format!(
+                    "SAMPLE id={id} k={k} residual={residual:?} err={err} elapsed_ms={elapsed_ms}"
+                )
+            }
+            Reply::Done { id, iterations, converged, residual, queue_wait_ms, dropped } => {
+                format!(
+                    "DONE id={id} iterations={iterations} converged={} residual={residual:?} \
+                     queue_wait_ms={queue_wait_ms} dropped={dropped}",
+                    if *converged { 1 } else { 0 }
+                )
+            }
+            Reply::Err { kind, msg } => format!("ERR kind={} msg={msg}", kind.token()),
+            Reply::Stats {
+                resident,
+                pending,
+                submitted,
+                completed,
+                cancelled,
+                deadline_missed,
+                rejected,
+            } => format!(
+                "STATS resident={resident} pending={pending} submitted={submitted} \
+                 completed={completed} cancelled={cancelled} \
+                 deadline_missed={deadline_missed} rejected={rejected}"
+            ),
+            Reply::Pong => "PONG".into(),
+        }
+    }
+}
+
+/// `key=value` lookup over a frame's tokens.
+fn field<'a>(tokens: &[&'a str], key: &str) -> Option<&'a str> {
+    tokens.iter().find_map(|t| t.strip_prefix(key)?.strip_prefix('='))
+}
+
+fn parse_field<T: std::str::FromStr>(tokens: &[&str], key: &str) -> Result<T, String> {
+    let raw = field(tokens, key).ok_or_else(|| format!("missing {key}="))?;
+    raw.parse().map_err(|_| format!("bad {key}={raw}"))
+}
+
+fn opt_field<T: std::str::FromStr>(tokens: &[&str], key: &str) -> Result<Option<T>, String> {
+    match field(tokens, key) {
+        None => Ok(None),
+        Some(raw) => raw.parse().map(Some).map_err(|_| format!("bad {key}={raw}")),
+    }
+}
+
+/// Parse one client → server line. The error string is ready to ship back
+/// in an `ERR kind=proto` frame.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let line = line.trim();
+    let tokens: Vec<&str> = line.split_whitespace().collect();
+    let verb = *tokens.first().ok_or("empty frame")?;
+    let rest = &tokens[1..];
+    match verb {
+        "SUBMIT" => {
+            let mut frame =
+                SubmitFrame::new(field(rest, "system").ok_or("missing system=")?.to_string());
+            if let Some(solver) = field(rest, "solver") {
+                frame.solver = solver.to_string();
+            }
+            if let Some(seed) = opt_field(rest, "seed")? {
+                frame.seed = seed;
+            }
+            if let Some(tol) = opt_field(rest, "tol")? {
+                frame.tol = tol;
+            }
+            if let Some(check) = opt_field(rest, "check")? {
+                frame.check = check;
+            }
+            frame.max_iterations = opt_field(rest, "max")?;
+            frame.fixed_iterations = opt_field(rest, "fixed")?;
+            frame.deadline_ms = opt_field(rest, "deadline_ms")?;
+            frame.stream = matches!(field(rest, "stream"), Some("1") | Some("true"));
+            Ok(Request::Submit(frame))
+        }
+        "POLL" => Ok(Request::Poll { id: parse_field(rest, "id")? }),
+        "CANCEL" => Ok(Request::Cancel { id: parse_field(rest, "id")? }),
+        "STATS" => Ok(Request::Stats),
+        "PING" => Ok(Request::Ping),
+        other => Err(format!("unknown verb {other}")),
+    }
+}
+
+/// Parse one server → client line (the client half of the codec).
+pub fn parse_reply(line: &str) -> Result<Reply, String> {
+    let line = line.trim();
+    let tokens: Vec<&str> = line.split_whitespace().collect();
+    let verb = *tokens.first().ok_or("empty frame")?;
+    let rest = &tokens[1..];
+    match verb {
+        "QUEUED" => Ok(Reply::Queued { id: parse_field(rest, "id")? }),
+        "RUNNING" => Ok(Reply::Running { id: parse_field(rest, "id")? }),
+        "ACK" => Ok(Reply::Ack {
+            id: parse_field(rest, "id")?,
+            applied: field(rest, "applied") == Some("1"),
+        }),
+        "SAMPLE" => {
+            let err_raw = field(rest, "err").ok_or("missing err=")?;
+            let reference_err = if err_raw == "-" {
+                None
+            } else {
+                Some(err_raw.parse().map_err(|_| format!("bad err={err_raw}"))?)
+            };
+            Ok(Reply::Sample {
+                id: parse_field(rest, "id")?,
+                k: parse_field(rest, "k")?,
+                residual: parse_field(rest, "residual")?,
+                reference_err,
+                elapsed_ms: parse_field(rest, "elapsed_ms")?,
+            })
+        }
+        "DONE" => Ok(Reply::Done {
+            id: parse_field(rest, "id")?,
+            iterations: parse_field(rest, "iterations")?,
+            converged: field(rest, "converged") == Some("1"),
+            residual: parse_field(rest, "residual")?,
+            queue_wait_ms: parse_field(rest, "queue_wait_ms")?,
+            dropped: parse_field(rest, "dropped")?,
+        }),
+        "ERR" => {
+            let kind = ErrKind::from_token(field(rest, "kind").ok_or("missing kind=")?)
+                .ok_or("unknown error kind")?;
+            // msg= takes the rest of the line verbatim (it contains spaces).
+            let msg = line
+                .split_once(" msg=")
+                .map(|(_, m)| m.to_string())
+                .ok_or("missing msg=")?;
+            Ok(Reply::Err { kind, msg })
+        }
+        "STATS" => Ok(Reply::Stats {
+            resident: parse_field(rest, "resident")?,
+            pending: parse_field(rest, "pending")?,
+            submitted: parse_field(rest, "submitted")?,
+            completed: parse_field(rest, "completed")?,
+            cancelled: parse_field(rest, "cancelled")?,
+            deadline_missed: parse_field(rest, "deadline_missed")?,
+            rejected: parse_field(rest, "rejected")?,
+        }),
+        "PONG" => Ok(Reply::Pong),
+        other => Err(format!("unknown verb {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frames_round_trip() {
+        let frames = vec![
+            Request::Submit(SubmitFrame::new("demo")),
+            Request::Submit(SubmitFrame {
+                system: "ct-scan".into(),
+                solver: "rek".into(),
+                seed: 42,
+                tol: 1e-10,
+                check: 16,
+                max_iterations: Some(1_000_000),
+                fixed_iterations: Some(500),
+                deadline_ms: Some(250),
+                stream: true,
+            }),
+            Request::Poll { id: 7 },
+            Request::Cancel { id: 0 },
+            Request::Stats,
+            Request::Ping,
+        ];
+        for frame in frames {
+            let line = frame.to_line();
+            assert_eq!(parse_request(&line).unwrap(), frame, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn reply_frames_round_trip() {
+        let frames = vec![
+            Reply::Queued { id: 3 },
+            Reply::Running { id: 3 },
+            Reply::Ack { id: 3, applied: true },
+            Reply::Ack { id: 9, applied: false },
+            Reply::Sample {
+                id: 3,
+                k: 4096,
+                residual: 1.25e-4,
+                reference_err: Some(3.5e-5),
+                elapsed_ms: 18,
+            },
+            Reply::Sample { id: 3, k: 1, residual: 0.5, reference_err: None, elapsed_ms: 0 },
+            Reply::Done {
+                id: 3,
+                iterations: 8192,
+                converged: true,
+                residual: 9.99e-9,
+                queue_wait_ms: 12,
+                dropped: 2,
+            },
+            Reply::Err {
+                kind: ErrKind::Overloaded,
+                msg: "overloaded: admission queue is full (64 pending, capacity 64); retry \
+                      with backoff"
+                    .into(),
+            },
+            Reply::Stats {
+                resident: 2,
+                pending: 5,
+                submitted: 100,
+                completed: 90,
+                cancelled: 4,
+                deadline_missed: 3,
+                rejected: 11,
+            },
+            Reply::Pong,
+        ];
+        for frame in frames {
+            let line = frame.to_line();
+            assert_eq!(parse_reply(&line).unwrap(), frame, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn err_msg_keeps_spaces_and_equals_signs() {
+        let reply = Reply::Err {
+            kind: ErrKind::Invalid,
+            msg: "rhs override of len 3 does not match system 'demo' (want = 60)".into(),
+        };
+        assert_eq!(parse_reply(&reply.to_line()).unwrap(), reply);
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_proto_errors() {
+        let bad_requests = [
+            "",
+            "  ",
+            "NOPE id=1",
+            "SUBMIT solver=rk",      // missing system=
+            "POLL",                  // missing id=
+            "POLL id=banana",        // unparseable id
+            "SUBMIT system=d tol=x", // unparseable float
+        ];
+        for bad in bad_requests {
+            assert!(parse_request(bad).is_err(), "{bad:?} must not parse");
+        }
+        let bad_replies = [
+            "",
+            "NOPE id=1",
+            "QUEUED",                // missing id=
+            "ERR kind=weird msg=hm", // unknown error kind
+            "ERR kind=proto",        // missing msg=
+            "SAMPLE id=1 k=2 residual=0.5 elapsed_ms=1", // missing err=
+            "DONE id=1 iterations=2 converged=1 residual=x queue_wait_ms=0 dropped=0",
+        ];
+        for bad in bad_replies {
+            assert!(parse_reply(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn submit_defaults_match_the_documented_wire_defaults() {
+        let parsed = parse_request("SUBMIT system=demo").unwrap();
+        match parsed {
+            Request::Submit(f) => {
+                assert_eq!(f.solver, "rk");
+                assert_eq!(f.seed, 0);
+                assert_eq!(f.tol, 1e-8);
+                assert_eq!(f.check, 32);
+                assert!(f.max_iterations.is_none());
+                assert!(f.fixed_iterations.is_none());
+                assert!(f.deadline_ms.is_none());
+                assert!(!f.stream);
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_cost_is_latency_dominated_for_sample_lines() {
+        let model = NetworkModel::default();
+        let placement = Placement::two_per_node();
+        // Ranks 0 and 2 sit on different nodes under ppn=2: inter-node cost.
+        let cost = stream_cost_estimate(&model, 1000, 0, 2, placement);
+        let alpha_only = 1000.0 * model.alpha_inter;
+        // The byte term exists but α dominates for 72-byte lines.
+        assert!(cost > alpha_only);
+        assert!(cost < 2.0 * alpha_only, "cost {cost} vs alpha-only {alpha_only}");
+    }
+}

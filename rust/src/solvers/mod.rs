@@ -32,6 +32,7 @@ use crate::data::LinearSystem;
 use crate::linalg::vector::dist_sq;
 use crate::metrics::{History, ProgressSink, Sample};
 use crate::parallel::residual_gemv_into;
+use crate::serve::SolveControl;
 
 /// What quantity the convergence test measures, and against what bound.
 ///
@@ -119,6 +120,16 @@ pub struct SolveOptions {
     /// a fixed budget, `history_step = 0`) emits nothing — pair the sink
     /// with residual stopping or a history step.
     pub progress: Option<ProgressSink>,
+    /// Cooperative cancellation/deadline token: when set, every
+    /// [`StopCheck`]-driven loop polls it each iteration (the AsyRK monitor
+    /// each poll) and halts — `converged = false`, no error, the partial
+    /// iterate returned — as soon as the token reports a cancel or an
+    /// elapsed deadline. The *reason* is recorded on the token
+    /// ([`SolveControl::halted`]); the serving layer maps it onto the typed
+    /// [`Error::Cancelled`](crate::error::Error::Cancelled) /
+    /// [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded).
+    /// Absent (the default) the solve pays nothing for the mechanism.
+    pub control: Option<SolveControl>,
 }
 
 impl Default for SolveOptions {
@@ -130,6 +141,7 @@ impl Default for SolveOptions {
             history_step: 0,
             divergence_factor: 1e6,
             progress: None,
+            control: None,
         }
     }
 }
@@ -183,6 +195,14 @@ impl SolveOptions {
     /// checkpoints (see [`SolveOptions::progress`]).
     pub fn with_progress(mut self, sink: ProgressSink) -> Self {
         self.progress = Some(sink);
+        self
+    }
+
+    /// Attach a cooperative cancellation/deadline token (see
+    /// [`SolveOptions::control`]). Keep a clone of the token to cancel the
+    /// job or to read why it halted.
+    pub fn with_control(mut self, control: SolveControl) -> Self {
+        self.control = Some(control);
         self
     }
 
@@ -412,6 +432,14 @@ impl<'a> StopCheck<'a> {
     /// read when [`StopCheck::needs_iterate_at`]`(k)` is true, so callers
     /// may pass a stale buffer on other iterations.
     pub(crate) fn check(&mut self, k: usize, x: &[f64]) -> (bool, bool, bool) {
+        // Cooperative halt: a cancelled or past-deadline job stops at the
+        // very next checkpoint, before paying another metric evaluation or
+        // history GEMV. `converged` and `diverged` both stay false — the
+        // run was interrupted, not measured; the reason lands on the token
+        // (first-write-wins) for the serving layer to read.
+        if self.halt_requested() {
+            return (true, false, false);
+        }
         let recorded_residual_sq = if self.history.due(k) {
             Some(self.record_sample(k, x))
         } else {
@@ -427,6 +455,15 @@ impl<'a> StopCheck<'a> {
             }
         }
         (k >= self.opts.max_iterations, false, false)
+    }
+
+    /// Poll the options' cancellation/deadline token, if any. `true` means
+    /// the loop must halt now (the reason is recorded on the token).
+    /// [`StopCheck::check`] consults this every call; the AsyRK monitor —
+    /// which handles its own budget and never calls `check` — polls it
+    /// directly in its monitoring loop.
+    pub(crate) fn halt_requested(&self) -> bool {
+        self.opts.control.as_ref().is_some_and(|c| c.poll().is_some())
     }
 
     /// Baseline evaluation at the true `x^(0)` (the AsyRK monitor, before
@@ -738,6 +775,49 @@ mod tests {
             sc.check(k, &[1.0, 1.0]);
         }
         assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn cancelled_control_halts_check_without_converging() {
+        use crate::serve::{Halt, SolveControl};
+        let sys = identity_system();
+        let ctl = SolveControl::new();
+        let opts = SolveOptions::default().with_tolerance(1e-20).with_control(ctl.clone());
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert_eq!(sc.check(0, &[0.0, 0.0]), (false, false, false));
+        ctl.cancel();
+        // Halt at the very next checkpoint: stop, but neither converged nor
+        // diverged — and the reason is recorded on the token.
+        assert_eq!(sc.check(1, &[0.0, 0.0]), (true, false, false));
+        assert_eq!(ctl.halted(), Some(Halt::Cancelled));
+    }
+
+    #[test]
+    fn elapsed_deadline_halts_even_fixed_budget_runs() {
+        use crate::serve::{Halt, SolveControl};
+        let sys = identity_system();
+        // Fixed-iteration runs evaluate no metric, but the control token is
+        // still polled — a deadline can stop a timed run mid-budget.
+        let ctl = SolveControl::with_deadline(std::time::Duration::ZERO);
+        let opts = SolveOptions::default().with_fixed_iterations(1000).with_control(ctl.clone());
+        let mut sc = StopCheck::new(&sys, &opts);
+        assert_eq!(sc.check(3, &[0.0, 0.0]), (true, false, false));
+        assert_eq!(ctl.halted(), Some(Halt::DeadlineExceeded));
+        // Nothing was measured on the way out.
+        assert!(sc.initial.is_none());
+    }
+
+    #[test]
+    fn inert_control_changes_no_decision() {
+        use crate::serve::SolveControl;
+        let sys = identity_system();
+        let plain = SolveOptions::default().with_tolerance(1e-4);
+        let controlled = plain.clone().with_control(SolveControl::new());
+        for x in [[0.0, 0.0], [3.0, 4.01], [3.0, 4.0]] {
+            let mut a = StopCheck::new(&sys, &plain);
+            let mut b = StopCheck::new(&sys, &controlled);
+            assert_eq!(a.check(1, &x), b.check(1, &x), "at {x:?}");
+        }
     }
 
     #[test]

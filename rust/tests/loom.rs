@@ -18,6 +18,7 @@
 #![cfg(loom)]
 
 use kaczmarz::parallel::{ShutdownSignal, SpinBarrier, WorkerPool};
+use kaczmarz::serve::SolveControl;
 use loom::cell::UnsafeCell;
 use loom::sync::atomic::{AtomicUsize, Ordering};
 use loom::sync::Arc;
@@ -196,5 +197,55 @@ fn stop_release_pairs_with_worker_acquire() {
         flag.store(7, Ordering::Relaxed);
         sig.request_stop();
         worker.join().unwrap();
+    });
+}
+
+/// The serving cancel token's Release/Acquire pair: a checkpoint that
+/// observes the halt must also see everything the canceller wrote before
+/// `cancel()` — probed through a plain payload, so only the cancel flag's
+/// ordering can provide the edge. This is the happens-before the admission
+/// lanes rely on when they read job state after a cancelled solve returns.
+#[test]
+fn solve_control_cancel_publishes_prior_writes() {
+    loom::model(|| {
+        let control = SolveControl::new();
+        let cell = Arc::new(Payload::new(0));
+        let (c2, p2) = (control.clone(), Arc::clone(&cell));
+        let canceller = thread::spawn(move || {
+            p2.write(9);
+            c2.cancel();
+        });
+        // Poll like a StopCheck checkpoint. Observing the halt must imply
+        // visibility of the pre-cancel write.
+        if control.poll().is_some() {
+            assert_eq!(cell.read(), 9);
+        }
+        canceller.join().unwrap();
+        // After the join the cancel is certainly visible and recorded.
+        let halt = control.poll().expect("cancel must be observed");
+        assert_eq!(control.halted(), Some(halt));
+    });
+}
+
+/// First-recorded-reason-wins: when two pollers race to record a halt, the
+/// compare-exchange in `SolveControl::record` guarantees every observer —
+/// including the losing poller's own return value — agrees on one winner.
+#[test]
+fn solve_control_halt_reason_is_agreed_by_racing_pollers() {
+    loom::model(|| {
+        let control = SolveControl::new();
+        let c2 = control.clone();
+        let peer = thread::spawn(move || {
+            c2.cancel();
+            c2.poll()
+        });
+        let mine = control.poll();
+        let theirs = peer.join().unwrap();
+        let winner = control.halted();
+        assert!(winner.is_some(), "the peer's cancel must be recorded");
+        assert_eq!(theirs, winner, "poller and record must agree");
+        if mine.is_some() {
+            assert_eq!(mine, winner, "racing poller must see the same winner");
+        }
     });
 }

@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Compare a fresh BENCH_micro.json against the committed baseline.
 
-Usage: compare_bench.py BASELINE FRESH [--band RATIO]
+Usage: compare_bench.py BASELINE FRESH [--band=RATIO] [--trend-band=RATIO]
+                        [--previous=PREV]
 
 Two very different kinds of comparison happen here, with very different
 teeth:
@@ -16,16 +17,26 @@ teeth:
   passes in the baseline and fails — or disappears — in the fresh run
   exits nonzero. These are deterministic claims, not timings.
 
+With `--previous=PREV` the fresh run is additionally compared against
+the previous green run's artifact (downloaded from CI, not committed).
+That comparison prints `TREND:` lines for run-over-run drift beyond
+`--trend-band` (default 2x — consecutive runs on the same runner fleet
+are less noisy than runs against a months-old committed file) and is
+**always warn-only**: the hard gate stays anchored to the committed
+baseline so a slow regression cannot ratchet itself green one small
+step at a time.
+
 Every run is stamped with the kernel flavor that produced it: the
 top-level "kernel" field records what the dispatched (untagged) rows ran
 under ("scalar" or "avx2+fma"), and the flavor-explicit rows carry
 theirs in the operation name ("dot [simd]" / "dot [scalar]"). Timing
-rows are only compared when baseline and fresh ran the same flavor —
+rows are only compared when both runs used the same flavor —
 a simd-vs-scalar delta is a hardware/dispatch difference, not drift —
 and every warning names the flavor it was measured under.
 
-Refresh the baseline by downloading the BENCH_micro artifact from a
-green main run and committing it as BENCH_baseline.json.
+Refresh the committed baseline by downloading the BENCH_micro artifact
+from a green main run and committing it as BENCH_baseline.json; it is
+the cold-start anchor when no previous artifact exists.
 """
 
 import json
@@ -72,53 +83,94 @@ def ns_per_op(row):
     return v if v > 0 else None
 
 
+def drift_rows(old, new, band, label, prefix, note_missing):
+    """Print per-row timing drift of `new` vs `old` beyond `band`.
+
+    Advisory in both callers: returns the warning count, never exits.
+    `label` names the reference run in messages; `prefix` tags each line
+    (WARN for the committed baseline, TREND for the previous artifact).
+    """
+    old_kernel, new_kernel = run_flavor(old), run_flavor(new)
+    old_rows = {row_key(r): r for r in old.get("rows", [])}
+    warned = 0
+    cross_flavor = 0
+    for r in new.get("rows", []):
+        op, n = row_key(r)
+        b = old_rows.get((op, n))
+        if b is None:
+            if note_missing:
+                print(f"note: no {label} for {op!r} (n={n})")
+            continue
+        bf, ff = row_flavor(b, old_kernel), row_flavor(r, new_kernel)
+        if "unknown" not in (bf, ff) and bf != ff:
+            # A simd-vs-scalar delta is a dispatch difference, not drift.
+            cross_flavor += 1
+            continue
+        fresh_ns, old_ns = ns_per_op(r), ns_per_op(b)
+        if fresh_ns is None or old_ns is None:
+            continue
+        ratio = fresh_ns / old_ns
+        if ratio > band or ratio < 1.0 / band:
+            direction = "slower" if ratio > 1 else "faster"
+            print(
+                f"{prefix}: {op!r} (n={n}, kernel={ff}) {ratio:.2f}x {direction} than {label} "
+                f"({fresh_ns:.1f} vs {old_ns:.1f} ns/op; band {band}x, advisory only)"
+            )
+            warned += 1
+    if cross_flavor:
+        print(
+            f"{cross_flavor} row(s) skipped vs {label}: {label} ({old_kernel}) and fresh "
+            f"({new_kernel}) ran different kernel flavors"
+        )
+    return warned
+
+
 def main(argv):
-    args = [a for a in argv[1:] if not a.startswith("--band")]
     band = 3.0
+    trend_band = 2.0
+    previous_path = None
+    positional = []
     for a in argv[1:]:
         if a.startswith("--band="):
             band = float(a.split("=", 1)[1])
-    if len(args) != 2:
+        elif a.startswith("--trend-band="):
+            trend_band = float(a.split("=", 1)[1])
+        elif a.startswith("--previous="):
+            previous_path = a.split("=", 1)[1]
+        elif a.startswith("--"):
+            sys.exit(f"compare_bench: unknown option {a!r}\n\n{__doc__}")
+        else:
+            positional.append(a)
+    if len(positional) != 2:
         sys.exit(__doc__)
-    base, fresh = load(args[0]), load(args[1])
+    base, fresh = load(positional[0]), load(positional[1])
 
     base_kernel, fresh_kernel = run_flavor(base), run_flavor(fresh)
     print(
         f"kernel flavor of dispatched rows: baseline={base_kernel}, fresh={fresh_kernel}"
     )
 
-    base_rows = {row_key(r): r for r in base.get("rows", [])}
-    warned = 0
-    cross_flavor = 0
-    for r in fresh.get("rows", []):
-        op, n = row_key(r)
-        b = base_rows.get((op, n))
-        if b is None:
-            print(f"note: no baseline for {op!r} (n={n})")
-            continue
-        bf, ff = row_flavor(b, base_kernel), row_flavor(r, fresh_kernel)
-        if "unknown" not in (bf, ff) and bf != ff:
-            # A simd-vs-scalar delta is a dispatch difference, not drift.
-            cross_flavor += 1
-            continue
-        fresh_ns, base_ns = ns_per_op(r), ns_per_op(b)
-        if fresh_ns is None or base_ns is None:
-            continue
-        ratio = fresh_ns / base_ns
-        if ratio > band or ratio < 1.0 / band:
-            direction = "slower" if ratio > 1 else "faster"
-            print(
-                f"WARN: {op!r} (n={n}, kernel={ff}) {ratio:.2f}x {direction} than baseline "
-                f"({fresh_ns:.1f} vs {base_ns:.1f} ns/op; band {band}x, advisory only)"
-            )
-            warned += 1
-    if cross_flavor:
-        print(
-            f"{cross_flavor} row(s) skipped: baseline ({base_kernel}) and fresh "
-            f"({fresh_kernel}) ran different kernel flavors"
-        )
+    warned = drift_rows(base, fresh, band, "baseline", "WARN", note_missing=True)
     if warned:
         print(f"{warned} timing row(s) outside the noise band (advisory, not failing)")
+
+    # Run-over-run trend vs the previous green run's artifact: tighter
+    # band, warn-only — the hard gate below stays vs the committed
+    # baseline so drift cannot ratchet itself green.
+    if previous_path is not None:
+        prev = load(previous_path)
+        trends = drift_rows(
+            prev, fresh, trend_band, "previous run", "TREND", note_missing=False
+        )
+        if trends:
+            print(
+                f"{trends} timing row(s) drifted vs the previous green run "
+                f"(band {trend_band}x, advisory only)"
+            )
+        else:
+            print(
+                f"trend vs previous green run: all rows within {trend_band}x"
+            )
 
     fresh_checks = {c.get("name"): bool(c.get("pass")) for c in fresh.get("checks", [])}
     regressions = []

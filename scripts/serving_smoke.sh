@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# End-to-end smoke test of the serving front end (the `serving-smoke` CI
+# job): boot `kaczmarz serve` with small resident systems, then drive
+# `kaczmarz submit` clients through the three behaviors the wire protocol
+# promises — streamed mid-solve samples, typed deadline errors that do
+# not poison the lanes, and mid-solve cancellation. Every client runs
+# under `timeout`, so a hung server fails the job instead of wedging CI.
+#
+# Env: KACZMARZ_BIN (default target/release/kaczmarz),
+#      SMOKE_PORT (default 7171).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN="${KACZMARZ_BIN:-target/release/kaczmarz}"
+PORT="${SMOKE_PORT:-7171}"
+ADDR="127.0.0.1:${PORT}"
+LOG="$(mktemp /tmp/serving_smoke.XXXXXX.log)"
+SERVER_PID=""
+
+die() {
+    echo "serving-smoke: FAIL: $*" >&2
+    echo "---- server log ($LOG) ----" >&2
+    cat "$LOG" >&2 || true
+    exit 1
+}
+
+cleanup() {
+    if [ -n "$SERVER_PID" ]; then
+        kill "$SERVER_PID" 2>/dev/null || true
+        wait "$SERVER_PID" 2>/dev/null || true
+    fi
+}
+trap cleanup EXIT
+
+[ -x "$BIN" ] || die "server binary not found at $BIN (build: cargo build --release -p kaczmarz)"
+
+# Boot the server with two small resident systems (consistent, so the
+# normal job genuinely converges) on 2 lanes.
+"$BIN" serve --addr "$ADDR" --lanes 2 --max-pending 32 \
+    --preload "demo:400x24:1,tiny:120x8:2" >"$LOG" 2>&1 &
+SERVER_PID=$!
+
+# Readiness gate: the server prints "serving on ADDR" to stdout (always
+# line-flushed) once the accept loop is live. 30 s is an eternity for a
+# prebuilt release binary to boot.
+for _ in $(seq 1 150); do
+    grep -q "serving on" "$LOG" && break
+    kill -0 "$SERVER_PID" 2>/dev/null || die "server exited during boot"
+    sleep 0.2
+done
+grep -q "serving on" "$LOG" || die "server never printed its readiness banner"
+echo "serving-smoke: server up on $ADDR"
+
+echo "== scenario 1: normal job streams >= 2 mid-solve samples and converges"
+timeout 120 "$BIN" submit --addr "$ADDR" --system demo --tol 1e-10 --check 4 \
+    --min-samples 2 \
+    || die "scenario 1 (normal streaming job) exited $?"
+
+echo "== scenario 2: past-deadline job fails with the typed deadline error"
+timeout 120 "$BIN" submit --addr "$ADDR" --system demo --tol 0 --check 4 \
+    --max-iterations 4000000000 --deadline-ms 1 --expect-error deadline \
+    || die "scenario 2 (deadline) exited $?"
+
+echo "== scenario 2b: a sibling job right after the deadline miss still completes"
+timeout 120 "$BIN" submit --addr "$ADDR" --system tiny --tol 1e-10 --check 4 \
+    || die "scenario 2b (post-deadline sibling) exited $?"
+
+echo "== scenario 3: cancel mid-solve yields the typed cancelled error"
+timeout 120 "$BIN" submit --addr "$ADDR" --system demo --tol 0 --check 4 \
+    --max-iterations 4000000000 --cancel-after 2 --expect-error cancelled \
+    || die "scenario 3 (mid-solve cancel) exited $?"
+
+echo "serving-smoke: all scenarios passed"
